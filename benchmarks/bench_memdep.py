@@ -1,0 +1,84 @@
+"""§Memdep — limited-memory 3D algorithms (Algs 16-18) vs the
+memory-dependent bound (Cor 6-8).
+
+Sweeps the memory multiple x (each processor holds x·n1²/(2P) words of
+the symmetric matrix) by varying p₂ = x, and the column chunk b.  The
+measured wire words follow the paper's memory-communication tradeoff
+   W(x) ≈ m·n1·n2/√(P·x) + x·n1²/(2P)
+(§IX-B): more memory -> less communication, down to the 3D optimum.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from typing import List
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_CHILD = r"""
+import functools, json
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.analysis.hlo_cost import analyze_hlo
+from repro.core.lower_bounds import memory_dependent_parallel_lower_bound
+from repro.core.twodim import make_2d_plan
+from repro.core.threedim import syrk_3d_limited_local
+
+rows = []
+c = 2
+p1 = c * (c + 1)
+n1 = 4 * c * c
+for p2, nsteps in ((1, 4), (2, 2), (2, 4), (4, 1), (4, 2)):
+    Ptot = p1 * p2
+    n2 = 4 * (c + 1) * p2 * nsteps
+    n2s = n2 // p2
+    b = n2s // nsteps
+    mesh = jax.make_mesh((p1, p2), ("tb", "rep"))
+    plan = make_2d_plan(c, n1, b)
+    a = jax.ShapeDtypeStruct((p1, p2, nsteps, c, plan.nb, plan.w),
+                             jnp.float32)
+    f = functools.partial(syrk_3d_limited_local, plan=plan, tb_axis="tb",
+                          rep_axis="rep", p2=p2)
+    fn = jax.jit(jax.shard_map(
+        lambda x: f(x[0, 0])[None, None], mesh=mesh,
+        in_specs=P("tb", "rep"), out_specs=P("tb", "rep")))
+    hlo = fn.lower(a).compile().as_text()
+    words = analyze_hlo(hlo).collective_wire_bytes / 4.0
+    # per-processor resident symmetric words ~ x n1^2/(2P)
+    M_eff = (plan.T + 1) * plan.nb * plan.nb + c * plan.nb * b
+    lb = memory_dependent_parallel_lower_bound(n1, n2, Ptot, M_eff, 1)
+    model = n1 * n2 / (c * p2) + n1 * n1 / (2 * p1)
+    rows.append({"P": Ptot, "p2": p2, "b": b, "n2": n2,
+                 "measured_words": words, "model_W": model,
+                 "memdep_bound": max(lb, 0.0), "M_per_proc": M_eff})
+print(json.dumps(rows))
+"""
+
+
+def rows() -> List[dict]:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=24"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", _CHILD], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def main() -> List[dict]:
+    data = rows()
+    print(f"{'P':>4s}{'p2=x':>6s}{'b':>4s}{'n2':>6s}{'M/proc':>8s}"
+          f"{'measured':>10s}{'model W':>10s}{'memdep LB':>10s}")
+    for d in data:
+        print(f"{d['P']:4d}{d['p2']:6d}{d['b']:4d}{d['n2']:6d}"
+              f"{d['M_per_proc']:8d}{d['measured_words']:10.0f}"
+              f"{d['model_W']:10.0f}{d['memdep_bound']:10.0f}")
+    return data
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""§Roofline — renders the dry-run sweep (artifacts/dryrun_all.jsonl)
+into the per-(arch × shape × mesh) roofline table.
+
+Run the sweep first:
+    PYTHONPATH=src python -m repro.launch.dryrun --all \
+        --out artifacts/dryrun_all.jsonl
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import List, Optional
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FINAL = os.path.join(ROOT, "artifacts", "dryrun_final.jsonl")
+DEFAULT = FINAL if os.path.exists(FINAL) \
+    else os.path.join(ROOT, "artifacts", "dryrun_all.jsonl")
+
+
+def load(path: str = DEFAULT) -> List[dict]:
+    if not os.path.exists(path):
+        return []
+    recs = [json.loads(line) for line in open(path)]
+    # keep the LAST record per cell (later rows = re-runs after perf work)
+    by_key = {}
+    for r in recs:
+        by_key[(r["arch"], r["shape"], r["multi_pod"])] = r
+    return list(by_key.values())
+
+
+def render(recs: List[dict], multi_pod: Optional[bool] = False) -> str:
+    lines = []
+    hdr = (f"{'arch':18s}{'shape':13s}{'dom':11s}{'frac':>7s}"
+           f"{'useful':>8s}{'cmp_s':>9s}{'mem_s':>9s}{'col_s':>9s}"
+           f"{'coll GB':>9s}")
+    lines.append(hdr)
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if multi_pod is not None and r["multi_pod"] != multi_pod:
+            continue
+        if r["status"] != "ok":
+            lines.append(f"{r['arch']:18s}{r['shape']:13s}"
+                         f"-- {r['status']}")
+            continue
+        lines.append(
+            f"{r['arch']:18s}{r['shape']:13s}{r['dominant']:11s}"
+            f"{r['roofline_fraction']:7.3f}"
+            f"{r.get('model_vs_hlo_flops', 0):8.3f}"
+            f"{r['compute_s']:9.2f}{r['memory_s']:9.2f}"
+            f"{r['collective_s']:9.2f}"
+            f"{r['collective_operand_bytes']/1e9:9.2f}")
+    return "\n".join(lines)
+
+
+def main() -> List[dict]:
+    recs = load()
+    if not recs:
+        print("no dry-run records; run repro.launch.dryrun --all first")
+        return []
+    print("single-pod (16x16 = 256 chips):")
+    print(render(recs, multi_pod=False))
+    print("\nmulti-pod (2x16x16 = 512 chips): "
+          f"{sum(1 for r in recs if r['multi_pod'] and r['status']=='ok')}"
+          " cells compiled OK")
+    return recs
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Benchmark orchestrator — one suite per paper table.
+
+    PYTHONPATH=src python -m benchmarks.run [--only seq,parallel,...]
+
+Suites:
+  seq       Cor 3-5   sequential reads vs bounds (exact constants)
+  parallel  Cor 10-12 1D/2D/3D collective words vs bounds
+  memdep    Cor 6-8   limited-memory tradeoff (Algs 16-18)
+  kernels   Pallas kernels: correctness + triangular-tiling traffic
+  roofline  40-cell dry-run roofline table (reads artifacts/*.jsonl)
+
+Each suite prints its table and the JSON rows land in
+artifacts/bench_<suite>.json for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SUITES = ("seq", "parallel", "memdep", "kernels", "roofline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(SUITES))
+    args = ap.parse_args()
+    chosen = args.only.split(",") if args.only else list(SUITES)
+
+    os.makedirs(os.path.join(ROOT, "artifacts"), exist_ok=True)
+    failures = 0
+    for name in chosen:
+        mod = __import__(f"benchmarks.bench_{'seq_bounds' if name == 'seq' else 'parallel_comm' if name == 'parallel' else name}",  # noqa: E501
+                         fromlist=["main"])
+        print("\n" + "=" * 72)
+        print(f"suite: {name}")
+        print("=" * 72)
+        t0 = time.time()
+        try:
+            rows = mod.main()
+            out = os.path.join(ROOT, "artifacts", f"bench_{name}.json")
+            with open(out, "w") as f:
+                json.dump(rows, f, indent=1, default=str)
+            print(f"[{name}] {len(rows) if rows is not None else 0} rows "
+                  f"in {time.time()-t0:.1f}s -> {out}")
+        except Exception as e:  # noqa: BLE001
+            import traceback
+            traceback.print_exc()
+            print(f"[{name}] FAILED: {e}")
+            failures += 1
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

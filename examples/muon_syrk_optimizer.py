@@ -1,0 +1,87 @@
+"""The paper's technique as a first-class training feature.
+
+    PYTHONPATH=src python examples/muon_syrk_optimizer.py
+
+Muon orthogonalizes each 2D weight update with Newton–Schulz, whose
+inner loop is S = X·Xᵀ (SYRK) and (b·S + c·S²)·X (SYMM chain).  On a
+(data, model) mesh with X column-sharded, this example:
+
+  1. checks the comm-optimal 1D-SYRK NS path against the plain-jnp
+     reference NS to ~1e-4,
+  2. counts the collective operand bytes of both lowering paths from the
+     compiled HLO — the packed-triangle path moves ~half the words
+     (the paper's constant-factor saving, Cor 10 case 1),
+  3. trains two tiny LMs (reference vs syrk-1d) and prints both curves.
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=4")
+
+import numpy as np                                             # noqa: E402
+import jax                                                     # noqa: E402
+import jax.numpy as jnp                                        # noqa: E402
+
+from repro.analysis.hlo_cost import analyze_hlo                # noqa: E402
+from repro.optim.muon import (orthogonalize_1d,                # noqa: E402
+                              orthogonalize_reference)
+from repro.launch.train import build_argparser, train          # noqa: E402
+
+mesh = jax.make_mesh((jax.device_count(),), ("model",))
+m, n = 128, 512
+g = jax.random.normal(jax.random.key(0), (m, n), jnp.float32)
+
+# 1. numerics ---------------------------------------------------------------
+ref = orthogonalize_reference(g, steps=5)
+opt = orthogonalize_1d(g, mesh, axis="model", steps=5)
+err = float(jnp.max(jnp.abs(ref - opt)))
+print(f"1. |reference NS - 1D-SYRK NS|_max = {err:.2e}")
+sv = np.linalg.svd(np.asarray(opt), compute_uv=False)
+print(f"   singular values of the orthogonalized update: "
+      f"[{sv.min():.3f}, {sv.max():.3f}]  (NS pushes all -> 1)")
+
+# 2. collective wire bytes --------------------------------------------------
+NS = (3.4445, -4.7750, 2.0315)
+
+
+def ns_naive_1d(x, steps=5):
+    """Naive distributed NS: full m×m Gram all-reduce per iteration."""
+    from jax.sharding import PartitionSpec as P
+
+    def body(x_loc):
+        x_loc = x_loc.astype(jnp.float32)
+        nrm = jnp.sqrt(jax.lax.psum(jnp.sum(x_loc * x_loc), "model"))
+        x_loc = x_loc / (nrm + 1e-7)
+
+        def it(_, v):
+            a, b, c = NS
+            s = jax.lax.psum(v @ v.T, "model")      # FULL matrix on wire
+            return a * v + (b * s + c * (s @ s)) @ v
+        return jax.lax.fori_loop(0, steps, it, x_loc).astype(x.dtype)
+
+    return jax.shard_map(body, mesh=mesh, in_specs=P(None, "model"),
+                         out_specs=P(None, "model"))(x)
+
+
+def wire_bytes(fn, *args):
+    hlo = jax.jit(fn).lower(*args).compile().as_text()
+    return analyze_hlo(hlo).collective_wire_bytes
+
+
+err2 = float(jnp.max(jnp.abs(ns_naive_1d(g) - ref)))
+naive = wire_bytes(ns_naive_1d, g)
+packed = wire_bytes(lambda x: orthogonalize_1d(x, mesh, "model", 5), g)
+print(f"2. collective WIRE bytes per orthogonalization "
+      f"(naive check err {err2:.1e}):")
+print(f"   naive full-Gram all-reduce : {naive:.3e}")
+print(f"   packed-triangle 1D SYRK    : {packed:.3e}   "
+      f"(saving {naive/packed:.2f}x — the paper's factor ~2)")
+
+# 3. end-to-end -------------------------------------------------------------
+print("3. training 40 steps with each optimizer:")
+for name in ("muon", "muon-syrk"):
+    out = train(build_argparser().parse_args(
+        ["--steps", "40", "--global-batch", "4", "--seq-len", "128",
+         "--layers", "2", "--optimizer", name, "--lr", "0.02",
+         "--log-every", "100", "--max-model", "4"]))
+    print(f"   {name:10s}: loss {out['first_loss']:.4f} -> "
+          f"{out['final_loss']:.4f}   mesh={out['mesh']}")

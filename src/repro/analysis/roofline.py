@@ -1,0 +1,186 @@
+"""Roofline extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), per the task spec:
+
+  compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+  memory     = HLO_bytes / (chips × HBM_bw)
+  collective = collective_bytes / (chips × link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``;
+collective_bytes is parsed from the optimized HLO text (sum of operand
+sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute).  A wire-byte column (standard ring-cost model,
+(P−1)/P factors, 2× for all-reduce) is reported alongside for analysis.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _type_bytes(type_str: str) -> int:
+    """Total bytes of all array literals inside an HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    op_bytes: Dict[str, int] = field(default_factory=dict)   # operand sums
+    wire_bytes: Dict[str, float] = field(default_factory=dict)
+    counts: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_operand_bytes(self) -> int:
+        return sum(self.op_bytes.values())
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.wire_bytes.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum operand sizes (and ring-model wire bytes) of every collective.
+
+    HLO lines look like:
+      %ar = bf16[128,1024]{1,0} all-reduce(bf16[128,1024]{1,0} %x),
+            replica_groups={{0,1,...}}, ...
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.search(r"=\s+((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\])[^\s]*)\s+"
+                      r"([a-z0-9-]+)", stripped)
+        if not m:
+            continue
+        op = m.group(2)
+        kind = next((c for c in _COLLECTIVES if op.startswith(c)), None)
+        if kind is None or op.endswith("-start") and False:
+            continue
+        # skip the -done halves of async pairs (counted at -start)
+        if op.endswith("-done"):
+            continue
+        # operand types: inside the outermost call parens
+        call = re.search(re.escape(op) + r"\((.*)\)", stripped)
+        operand_bytes = _type_bytes(call.group(1)) if call else 0
+        if operand_bytes == 0:
+            # fall back to result type
+            operand_bytes = _type_bytes(m.group(1))
+        # group size for the wire model
+        gm = re.search(r"replica_groups=\{\{([0-9,]+)\}", stripped)
+        gsize = len(gm.group(1).split(",")) if gm else 1
+        gm2 = re.search(r"replica_groups=\[\d+,(\d+)\]", stripped)
+        if gm2:
+            gsize = int(gm2.group(1))
+        p_factor = (gsize - 1) / gsize if gsize > 1 else 0.0
+        if kind == "all-reduce":
+            wire = 2.0 * operand_bytes * p_factor
+        elif kind == "all-gather":
+            # operand is the local shard; each device sends its shard P-1
+            # times in a ring -> wire ≈ result × (P-1)/P; result = op×P
+            wire = operand_bytes * max(gsize - 1, 0)
+        elif kind == "collective-permute":
+            wire = float(operand_bytes)
+        else:  # reduce-scatter, all-to-all: operand is the full local buffer
+            wire = operand_bytes * p_factor
+        stats.op_bytes[kind] = stats.op_bytes.get(kind, 0) + operand_bytes
+        stats.wire_bytes[kind] = stats.wire_bytes.get(kind, 0.0) + wire
+        stats.counts[kind] = stats.counts.get(kind, 0) + 1
+    return stats
+
+
+@dataclass
+class Roofline:
+    flops: float                 # per-device HLO flops (trip-corrected)
+    hbm_bytes: float             # per-device HLO bytes (trip-corrected)
+    collective_bytes: float      # per-device collective operand bytes
+    wire_bytes: float
+    chips: int
+    raw_flops: float = 0.0       # uncorrected cost_analysis()["flops"]
+    raw_bytes: float = 0.0       # uncorrected "bytes accessed"
+    unknown_trip_whiles: int = 0
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def roofline_fraction(self) -> float:
+        """Fraction of the step the compute term occupies at the binding
+        bottleneck (1.0 = perfectly compute-bound at peak)."""
+        return self.compute_s / max(self.bound_s, 1e-30)
+
+
+def build_roofline(cost: Dict[str, float], hlo_text: str, chips: int
+                   ) -> Tuple[Roofline, CollectiveStats]:
+    """Trip-count-corrected roofline.
+
+    ``cost_analysis()`` counts while-loop bodies ONCE, so scan-over-layers
+    models under-report by ~n_layers.  We therefore derive flops / bytes /
+    collective traffic from the optimized HLO text with while-body costs
+    multiplied by their ``known_trip_count`` (see ``hlo_cost.py``), and
+    keep the raw cost_analysis numbers alongside for reference.
+    """
+    from repro.analysis.hlo_cost import analyze_hlo
+    corrected = analyze_hlo(hlo_text)
+    stats = CollectiveStats(
+        op_bytes={k: int(v) for k, v in
+                  corrected.collective_by_kind.items()},
+        wire_bytes={"all": corrected.collective_wire_bytes},
+        counts={k: int(v) for k, v in
+                corrected.collective_counts.items()})
+    raw_flops = float(cost.get("flops", 0.0))
+    raw_bytes = float(cost.get("bytes accessed", 0.0))
+    roof = Roofline(flops=corrected.total_flops,
+                    hbm_bytes=corrected.bytes_accessed,
+                    collective_bytes=corrected.collective_bytes,
+                    wire_bytes=corrected.collective_wire_bytes,
+                    chips=chips)
+    roof.raw_flops = raw_flops
+    roof.raw_bytes = raw_bytes
+    roof.unknown_trip_whiles = corrected.unknown_trip_whiles
+    return roof, stats

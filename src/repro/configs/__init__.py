@@ -1,0 +1,50 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``get_smoke_config``.
+
+One module per assigned architecture; each exposes ``CONFIG`` (the exact
+published configuration) and ``SMOKE`` (a reduced same-family config for
+CPU smoke tests).  Input shapes per cell come from ``shapes.py``.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import List
+
+ARCHS: List[str] = [
+    "musicgen_large",
+    "granite_20b",
+    "gemma3_12b",
+    "gemma2_9b",
+    "stablelm_1_6b",
+    "xlstm_350m",
+    "deepseek_v2_236b",
+    "deepseek_v3_671b",
+    "pixtral_12b",
+    "jamba_v0_1_52b",
+]
+
+_ALIASES = {
+    "musicgen-large": "musicgen_large",
+    "granite-20b": "granite_20b",
+    "gemma3-12b": "gemma3_12b",
+    "gemma2-9b": "gemma2_9b",
+    "stablelm-1.6b": "stablelm_1_6b",
+    "xlstm-350m": "xlstm_350m",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "pixtral-12b": "pixtral_12b",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+}
+
+
+def canonical(arch: str) -> str:
+    return _ALIASES.get(arch, arch.replace("-", "_").replace(".", "_"))
+
+
+def get_config(arch: str):
+    mod = importlib.import_module(f"repro.configs.{canonical(arch)}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str):
+    mod = importlib.import_module(f"repro.configs.{canonical(arch)}")
+    return mod.SMOKE

@@ -1,0 +1,76 @@
+"""Input-shape cells and ShapeDtypeStruct ``input_specs`` per architecture.
+
+The four assigned LM shapes (seq_len × global_batch):
+  train_4k    : 4,096 × 256   -> train_step
+  prefill_32k : 32,768 × 32   -> serve prefill
+  decode_32k  : 32,768 × 128  -> serve decode (1 new token, 32k cache)
+  long_500k   : 524,288 × 1   -> long-context decode (sub-quadratic archs
+                                 only: xlstm, jamba — see DESIGN §5)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig
+from repro.models.model import init_cache
+
+
+@dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                 # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_applicable(cfg: ArchConfig, shape_name: str) -> bool:
+    """long_500k only for sub-quadratic archs (skip documented in DESIGN)."""
+    if shape_name == "long_500k":
+        return cfg.subquadratic
+    return True
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape_name: str,
+                scale: int = 1) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of the cell.
+    ``scale`` divides batch (for reduced smoke runs of the same cell)."""
+    cell = SHAPES[shape_name]
+    b = max(cell.global_batch // scale, 1)
+    s = cell.seq_len
+    out: Dict[str, Any] = {}
+    if cell.kind in ("train", "prefill"):
+        if cfg.frontend == "embeddings":
+            out["embeds"] = _sds((b, s, cfg.d_model), jnp.bfloat16)
+        elif cfg.frontend == "vlm":
+            out["tokens"] = _sds((b, s - cfg.n_frontend_tokens), jnp.int32)
+            out["patch_embeds"] = _sds((b, cfg.n_frontend_tokens, cfg.d_model),
+                                       jnp.bfloat16)
+        else:
+            out["tokens"] = _sds((b, s), jnp.int32)
+        if cell.kind == "train":
+            out["labels"] = _sds((b, s), jnp.int32)
+    else:  # decode: one new token against an s-long cache
+        if cfg.frontend == "embeddings":
+            out["token"] = _sds((b, 1, cfg.d_model), jnp.bfloat16)
+        else:
+            out["token"] = _sds((b, 1), jnp.int32)
+        out["pos"] = _sds((b, 1), jnp.int32)
+        out["cache"] = jax.eval_shape(
+            lambda: init_cache(cfg, b, s))
+    return out

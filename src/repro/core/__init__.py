@@ -1,0 +1,35 @@
+"""Communication-optimal symmetric matrix computations (the paper's core).
+
+Public surface:
+  triangle partitions    — affine/projective/cyclic/Steiner constructions
+  sequential algorithms  — seq_syrk / seq_syr2k / seq_symm (+ exact counters)
+  parallel algorithms    — 1D / 2D / 3D / limited-memory shard_map kernels
+  dispatch               — regime selection per Theorem 9 (§VIII-D)
+  lower bounds           — closed forms with leading constants
+"""
+from .dispatch import AlgoChoice, choose_algorithm, largest_c_grid
+from .lower_bounds import (memory_dependent_parallel_lower_bound,
+                           memory_independent_lower_bound,
+                           sequential_reads_lower_bound)
+from .onedim import (symm_1d, symm_1d_local, syr2k_1d, syr2k_1d_local,
+                     syrk_1d, syrk_1d_local)
+from .packing import pack_tril, pack_tril_tiles, tril_size, unpack_tril
+from .seq import seq_symm, seq_syr2k, seq_syrk
+from .threedim import symm_3d, syr2k_3d, syrk_3d
+from .triangle import (TrianglePartition, affine_partition, cyclic_partition,
+                       optimal_partition, projective_partition,
+                       validate_partition)
+from .twodim import TwoDPlan, make_2d_plan, symm_2d, syr2k_2d, syrk_2d
+
+__all__ = [
+    "AlgoChoice", "choose_algorithm", "largest_c_grid",
+    "memory_dependent_parallel_lower_bound",
+    "memory_independent_lower_bound", "sequential_reads_lower_bound",
+    "symm_1d", "symm_1d_local", "syr2k_1d", "syr2k_1d_local", "syrk_1d",
+    "syrk_1d_local", "pack_tril", "pack_tril_tiles", "tril_size",
+    "unpack_tril", "seq_symm", "seq_syr2k", "seq_syrk", "symm_3d",
+    "syr2k_3d", "syrk_3d", "TrianglePartition", "affine_partition",
+    "cyclic_partition", "optimal_partition", "projective_partition",
+    "validate_partition", "TwoDPlan", "make_2d_plan", "symm_2d", "syr2k_2d",
+    "syrk_2d",
+]

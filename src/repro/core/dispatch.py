@@ -1,0 +1,117 @@
+"""Algorithm + processor-grid selection (paper §VIII-D, §IX).
+
+Given (n₁, n₂, P, m [, M]) returns which family (1D / 2D / 3D /
+3D-limited-memory) is communication-optimal and its grid parameters,
+mirroring the case analysis of Theorem 9:
+
+  case 1 (n₁ ≤ m·n₂, small P)  -> 1D,  words ≈ n₁²/2
+  case 2 (m·n₂ < n₁, small P)  -> 2D,  words ≈ m·n₁n₂/√P
+  case 3 (large P)             -> 3D,  words ≈ (3m/2)·(n₁²n₂/(√m·P))^{2/3}
+  memory-constrained           -> 3D-limited, words ≈ m·n₁n₂/√(P·M̃)
+
+This module is what the training-framework integration calls: the Muon/Gram
+optimizer asks for the right SYRK/SYMM algorithm for each parameter's
+(n₁, n₂) and the mesh size — the paper's regime analysis driving a real
+systems decision.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional
+
+from .lower_bounds import mem_independent_case, memory_independent_lower_bound
+
+
+@dataclass
+class AlgoChoice:
+    kind: str            # "1d" | "2d" | "3d" | "3d-limited"
+    case: int            # Thm 9 case
+    P: int
+    c: int = 0           # 2D/3D triangle-block grid parameter (p1 = c(c+1))
+    p1: int = 0
+    p2: int = 0
+    b: int = 0           # column chunk for limited-memory
+    idle: int = 0        # devices left idle by the c(c+1) embedding
+    predicted_words: float = 0.0
+    lower_bound: float = 0.0
+
+    @property
+    def optimality_ratio(self) -> float:
+        return self.predicted_words / max(self.lower_bound, 1e-30)
+
+
+def largest_c_grid(P: int) -> int:
+    """Largest c with c(c+1) <= P."""
+    c = int((math.isqrt(4 * P + 1) - 1) // 2)
+    while (c + 1) * (c + 2) <= P:
+        c += 1
+    while c > 1 and c * (c + 1) > P:
+        c -= 1
+    return max(c, 1)
+
+
+def predicted_words_1d(n1: int, P: int) -> float:
+    return (1 - 1 / P) * n1 * (n1 + 1) / 2
+
+
+def predicted_words_2d(n1: int, n2: int, m: int, c: int) -> float:
+    P = c * (c + 1)
+    return m * n1 * n2 / c * (1 - 1 / P)
+
+
+def predicted_words_3d(n1: int, n2: int, m: int, c: int, p2: int) -> float:
+    p1 = c * (c + 1)
+    return m * n1 * n2 / (c * p2) + n1 * n1 / (2 * p1)
+
+
+def choose_algorithm(n1: int, n2: int, P: int, m: int,
+                     M: Optional[int] = None) -> AlgoChoice:
+    """Select the communication-optimal family + grid for the problem."""
+    case = mem_independent_case(n1, n2, P, m)
+    lb = memory_independent_lower_bound(n1, n2, P, m).bound
+
+    # memory feasibility of the unconstrained 3D/2D algorithm (§IX trigger)
+    def mem_3d(c: int, p2: int) -> float:
+        p1 = c * (c + 1)
+        return m * n1 * n2 / (max(c, 1) * p2) + n1 * n1 / (2 * p1)
+
+    if case == 1:
+        choice = AlgoChoice(kind="1d", case=1, P=P, p1=1, p2=P,
+                            predicted_words=predicted_words_1d(n1, P),
+                            lower_bound=lb)
+    elif case == 2:
+        c = largest_c_grid(P)
+        choice = AlgoChoice(kind="2d", case=2, P=P, c=c, p1=c * (c + 1), p2=1,
+                            idle=P - c * (c + 1),
+                            predicted_words=predicted_words_2d(n1, n2, m, c),
+                            lower_bound=lb)
+    else:
+        # optimal split (§VIII-D case 3): p1 = (n1 P / (m n2))^(2/3)
+        p1_target = (n1 * P / (m * n2)) ** (2 / 3)
+        c = largest_c_grid(max(int(p1_target), 2))
+        c = max(c, 1)
+        p1 = c * (c + 1)
+        p2 = max(P // p1, 1)
+        choice = AlgoChoice(kind="3d", case=3, P=P, c=c, p1=p1, p2=p2,
+                            idle=P - p1 * p2,
+                            predicted_words=predicted_words_3d(n1, n2, m, c, p2),
+                            lower_bound=lb)
+
+    if M is not None and choice.kind in ("2d", "3d"):
+        c = choice.c if choice.c else largest_c_grid(P)
+        if mem_3d(c, max(choice.p2, 1)) > M:
+            # §IX: keep x·n1²/(2P) resident, stream b columns at a time
+            x = max(2.0 * M * P / (n1 * n1), 1.0)
+            p2 = max(int(x), 1)
+            p1 = max(P // p2, 2)
+            c = largest_c_grid(p1)
+            p1 = c * (c + 1)
+            p2 = max(P // p1, 1)
+            # chunk so the streamed panel m·b·n1/c stays within M/2
+            b = max(int((M / 2) * c / (m * n1)), 1)
+            words = m * n1 * n2 / (c * p2) + n1 * n1 / (2 * p1)
+            choice = AlgoChoice(kind="3d-limited", case=choice.case, P=P, c=c,
+                                p1=p1, p2=p2, b=b, idle=P - p1 * p2,
+                                predicted_words=words, lower_bound=lb)
+    return choice

@@ -1,0 +1,99 @@
+"""Packed lower-triangle storage utilities (numpy + jax variants).
+
+The symmetric communication savings come from moving only the ~n²/2 unique
+entries.  We provide element-granular packing (row-major over the lower
+triangle including the diagonal) and *tile-granular* packing (lower triangle
+of the tile grid, each tile dense) — the latter is what the TPU kernels and
+parallel algorithms use to keep loads MXU-aligned (DESIGN §3).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def tril_size(n: int, diag: bool = True) -> int:
+    return n * (n + 1) // 2 if diag else n * (n - 1) // 2
+
+
+def tril_indices(n: int, diag: bool = True) -> Tuple[np.ndarray, np.ndarray]:
+    return np.tril_indices(n, 0 if diag else -1)
+
+
+def pack_tril(x, diag: bool = True):
+    """(…, n, n) -> (…, n(n±1)/2) packed lower triangle (jnp)."""
+    n = x.shape[-1]
+    i, j = tril_indices(n, diag)
+    return x[..., i, j]
+
+
+def unpack_tril(p, n: int, diag: bool = True, symmetric: bool = True):
+    """Packed (…, n(n±1)/2) -> full (…, n, n); mirrors into the upper
+    triangle when ``symmetric``."""
+    i, j = tril_indices(n, diag)
+    out = jnp.zeros(p.shape[:-1] + (n, n), dtype=p.dtype)
+    out = out.at[..., i, j].set(p)
+    if symmetric:
+        mirror = jnp.swapaxes(out, -1, -2)
+        if diag:
+            dg = jnp.zeros_like(out)
+            idx = jnp.arange(n)
+            dg = dg.at[..., idx, idx].set(out[..., idx, idx])
+            out = out + mirror - dg
+        else:
+            out = out + mirror
+    return out
+
+
+# ---- tile-granular packing -------------------------------------------------
+def tile_tril_count(nt: int) -> int:
+    """Number of tiles in the lower triangle (incl. diagonal) of an nt×nt
+    tile grid."""
+    return nt * (nt + 1) // 2
+
+
+def tile_tril_coords(nt: int) -> np.ndarray:
+    """(T, 2) array of (i, j) tile coords, row-major lower triangle."""
+    out = [(i, j) for i in range(nt) for j in range(i + 1)]
+    return np.array(out, dtype=np.int64)
+
+
+def tile_flat_index(i: int, j: int) -> int:
+    """Flat index of tile (i, j), j <= i, in row-major lower-tri order."""
+    return i * (i + 1) // 2 + j
+
+
+def pack_tril_tiles(x, tile: int):
+    """(…, n, n) -> (…, T, tile, tile): dense tiles of the lower triangle of
+    the tile grid (diagonal tiles kept dense — the intra-tile upper halves of
+    diagonal tiles are the only redundancy, a 1/nt fraction)."""
+    n = x.shape[-1]
+    assert n % tile == 0
+    nt = n // tile
+    coords = tile_tril_coords(nt)
+    xt = x.reshape(x.shape[:-2] + (nt, tile, nt, tile))
+    xt = jnp.moveaxis(xt, -2, -3)  # (…, nt, nt, tile, tile)
+    return xt[..., coords[:, 0], coords[:, 1], :, :]
+
+
+def unpack_tril_tiles(p, n: int, tile: int, symmetric: bool = True):
+    """(…, T, tile, tile) -> full (…, n, n) symmetric matrix."""
+    nt = n // tile
+    coords = tile_tril_coords(nt)
+    full = jnp.zeros(p.shape[:-3] + (nt, nt, tile, tile), dtype=p.dtype)
+    full = full.at[..., coords[:, 0], coords[:, 1], :, :].set(p)
+    if symmetric:
+        mirrored = jnp.swapaxes(jnp.swapaxes(full, -4, -3), -2, -1)
+        # keep lower tiles from `full`, take strict-upper tiles from mirror
+        ii = jnp.arange(nt)
+        lower_mask = (ii[:, None] >= ii[None, :])[..., None, None]
+        full = jnp.where(lower_mask, full, mirrored)
+        # diagonal tiles: symmetrize within the tile
+        diag_tiles = full[..., ii, ii, :, :]
+        tl = jnp.tril(diag_tiles)
+        sym_diag = tl + jnp.swapaxes(jnp.tril(diag_tiles, -1), -1, -2)
+        full = full.at[..., ii, ii, :, :].set(sym_diag)
+    out = jnp.moveaxis(full, -3, -2)
+    return out.reshape(p.shape[:-3] + (n, n))

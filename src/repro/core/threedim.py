@@ -1,0 +1,224 @@
+"""3D and limited-memory parallel SYRK / SYR2K / SYMM (paper Algs 13–18).
+
+Optimal regime (Thm 9 case 3, large P): processor grid p₁ × p₂ with
+p₁ = c(c+1); the 2D algorithm runs inside each p₂-slice on n₂/p₂ columns,
+then the symmetric matrix is reduce-scattered (SYRK/SYR2K) or all-gathered
+(SYMM) across the replication axis — total bandwidth eq. (7):
+m·n₁n₂/(√p₁·p₂) + n₁²/(2p₁).
+
+Limited-memory variants (Algs 16–18, §IX) stream the non-symmetric columns
+in chunks of b via ``lax.scan``, trading latency for a working set of
+m·b·n₁/c + n₁²/(2p₁) — matching the memory-dependent bound (Cor 6–8) when
+p₂ = x = 2MP/n₁² (up to the owned-data term).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .twodim import (TwoDPlan, _exchange_rows, _syrk_blocks, make_2d_plan,
+                     symm_2d_local, syr2k_2d_local, syrk_2d_local)
+
+
+# --------------------------------------------------------------------------
+# local bodies (inside shard_map over axes (tb, rep))
+# --------------------------------------------------------------------------
+def _flatten_tb(off: jax.Array, diag: jax.Array) -> jax.Array:
+    return jnp.concatenate([off.reshape(-1), diag.reshape(-1)])
+
+
+def _unflatten_tb(flat: jax.Array, plan: TwoDPlan) -> Tuple[jax.Array, jax.Array]:
+    t = plan.T * plan.nb * plan.nb
+    off = flat[:t].reshape(plan.T, plan.nb, plan.nb)
+    diag = flat[t:t + plan.nb * plan.nb].reshape(plan.nb, plan.nb)
+    return off, diag
+
+
+def _pad_to(x: jax.Array, mult: int) -> jax.Array:
+    pad = -x.shape[0] % mult
+    return jnp.pad(x, (0, pad))
+
+
+def _varying(x: jax.Array, axes: Tuple[str, ...]) -> jax.Array:
+    """Mark a constant as varying over manual axes (scan-carry vma rule)."""
+    if hasattr(jax.lax, "pcast"):
+        return jax.lax.pcast(x, axes, to="varying")
+    return jax.lax.pvary(x, axes)
+
+
+def syrk_3d_local(a_own: jax.Array, plan: TwoDPlan, tb_axis: str,
+                  rep_axis: str, p2: int) -> jax.Array:
+    """Alg 13: 2D SYRK in-slice + reduce-scatter of the extended triangle
+    block over the replication axis.  a_own: (c, nb, w₂) with
+    w₂ = n₂/(p₂(c+1)).  Returns this device's flat shard of C_Tk."""
+    off, diag = syrk_2d_local(a_own, plan, tb_axis)
+    flat = _pad_to(_flatten_tb(off, diag), p2)
+    return jax.lax.psum_scatter(flat, rep_axis, scatter_dimension=0,
+                                tiled=True)
+
+
+def syr2k_3d_local(a_own: jax.Array, b_own: jax.Array, plan: TwoDPlan,
+                   tb_axis: str, rep_axis: str, p2: int) -> jax.Array:
+    off, diag = syr2k_2d_local(a_own, b_own, plan, tb_axis)
+    flat = _pad_to(_flatten_tb(off, diag), p2)
+    return jax.lax.psum_scatter(flat, rep_axis, scatter_dimension=0,
+                                tiled=True)
+
+
+def symm_3d_local(a_flat_shard: jax.Array, b_own: jax.Array, plan: TwoDPlan,
+                  tb_axis: str, rep_axis: str) -> jax.Array:
+    """Alg 15: all-gather A_Tk over the replication axis, then 2D SYMM
+    in-slice.  a_flat_shard: this device's 1/p₂ of the flattened extended
+    triangle block of A; b_own: (c, nb, w₂).  Returns C shares (c, nb, w₂)."""
+    flat = jax.lax.all_gather(a_flat_shard, rep_axis, axis=0, tiled=True)
+    a_off, a_diag = _unflatten_tb(flat, plan)
+    return symm_2d_local(a_off, a_diag, b_own, plan, tb_axis)
+
+
+# ---- limited-memory variants (Algs 16–18) ---------------------------------
+def syrk_3d_limited_local(a_own_chunks: jax.Array, plan: TwoDPlan,
+                          tb_axis: str, rep_axis: str, p2: int) -> jax.Array:
+    """Alg 16: a_own_chunks (nsteps, c, nb, bw) — b-column chunks streamed
+    through a lax.scan; the accumulator C̄_Tk (the only resident
+    intermediate) has size T·nb² + nb², independent of n₂."""
+    def step(acc, chunk):
+        off, diag = syrk_2d_local(chunk, plan, tb_axis)
+        return acc + _flatten_tb(off, diag), None
+
+    t = plan.T * plan.nb * plan.nb + plan.nb * plan.nb
+    acc0 = _varying(jnp.zeros((t,), a_own_chunks.dtype), (tb_axis, rep_axis))
+    acc, _ = jax.lax.scan(step, acc0, a_own_chunks)
+    return jax.lax.psum_scatter(_pad_to(acc, p2), rep_axis,
+                                scatter_dimension=0, tiled=True)
+
+
+def syr2k_3d_limited_local(a_own_chunks: jax.Array, b_own_chunks: jax.Array,
+                           plan: TwoDPlan, tb_axis: str, rep_axis: str,
+                           p2: int) -> jax.Array:
+    def step(acc, ab):
+        off, diag = syr2k_2d_local(ab[0], ab[1], plan, tb_axis)
+        return acc + _flatten_tb(off, diag), None
+
+    t = plan.T * plan.nb * plan.nb + plan.nb * plan.nb
+    acc0 = _varying(jnp.zeros((t,), a_own_chunks.dtype), (tb_axis, rep_axis))
+    acc, _ = jax.lax.scan(step, acc0, (a_own_chunks, b_own_chunks))
+    return jax.lax.psum_scatter(_pad_to(acc, p2), rep_axis,
+                                scatter_dimension=0, tiled=True)
+
+
+def symm_3d_limited_local(a_flat_shard: jax.Array, b_own_chunks: jax.Array,
+                          plan: TwoDPlan, tb_axis: str, rep_axis: str
+                          ) -> jax.Array:
+    """Alg 18: gather A once, stream B/C chunks."""
+    flat = jax.lax.all_gather(a_flat_shard, rep_axis, axis=0, tiled=True)
+    a_off, a_diag = _unflatten_tb(flat, plan)
+
+    def step(_, chunk):
+        return None, symm_2d_local(a_off, a_diag, chunk, plan, tb_axis)
+
+    _, c_chunks = jax.lax.scan(step, None, b_own_chunks)
+    return c_chunks  # (nsteps, c, nb, bw)
+
+
+# --------------------------------------------------------------------------
+# full-array wrappers over a 2-axis mesh
+# --------------------------------------------------------------------------
+def syrk_3d(a_dist: jax.Array, plan: TwoDPlan, mesh, tb_axis: str = "tb",
+            rep_axis: str = "rep") -> jax.Array:
+    """a_dist global (p1, p2, c, nb, w2) sharded P(tb, rep)."""
+    p2 = mesh.shape[rep_axis]
+    f = functools.partial(syrk_3d_local, plan=plan, tb_axis=tb_axis,
+                          rep_axis=rep_axis, p2=p2)
+
+    def body(a):                       # a: (1, 1, c, nb, w2) per device
+        return f(a[0, 0])[None, None]
+
+    return jax.jit(jax.shard_map(
+        body, mesh=mesh, in_specs=P(tb_axis, rep_axis),
+        out_specs=P(tb_axis, rep_axis)))(a_dist)
+
+
+def syr2k_3d(a_dist, b_dist, plan: TwoDPlan, mesh, tb_axis="tb",
+             rep_axis="rep"):
+    p2 = mesh.shape[rep_axis]
+    f = functools.partial(syr2k_3d_local, plan=plan, tb_axis=tb_axis,
+                          rep_axis=rep_axis, p2=p2)
+
+    def body(a, b):
+        return f(a[0, 0], b[0, 0])[None, None]
+
+    return jax.jit(jax.shard_map(
+        body, mesh=mesh, in_specs=(P(tb_axis, rep_axis),) * 2,
+        out_specs=P(tb_axis, rep_axis)))(a_dist, b_dist)
+
+
+def symm_3d(a_flat, b_dist, plan: TwoDPlan, mesh, tb_axis="tb",
+            rep_axis="rep"):
+    """a_flat global (p1, p2, shard) sharded P(tb, rep);
+    b_dist global (p1, p2, c, nb, w2)."""
+    f = functools.partial(symm_3d_local, plan=plan, tb_axis=tb_axis,
+                          rep_axis=rep_axis)
+
+    def body(a, b):
+        return f(a[0, 0], b[0, 0])[None, None]
+
+    return jax.jit(jax.shard_map(
+        body, mesh=mesh, in_specs=(P(tb_axis, rep_axis),) * 2,
+        out_specs=P(tb_axis, rep_axis)))(a_flat, b_dist)
+
+
+# --------------------------------------------------------------------------
+# host-side distribution helpers
+# --------------------------------------------------------------------------
+def distribute_rows_3d(Xf: np.ndarray, plan: TwoDPlan, p2: int,
+                       nsteps: int = 1) -> np.ndarray:
+    """(n1, n2) -> (p1, p2, [nsteps,] c, nb, bw): column slices over the
+    replication axis, 2D row-share layout within each slice, optionally
+    chunked for the limited-memory variants."""
+    from .twodim import distribute_rows, make_2d_plan
+    n2s = Xf.shape[1] // p2
+    slices = []
+    for l in range(p2):
+        Xs = Xf[:, l * n2s:(l + 1) * n2s]
+        if nsteps == 1:
+            slices.append(distribute_rows(Xs, plan))        # (p1, c, nb, w2)
+        else:
+            b = n2s // nsteps
+            chunk_plan = make_2d_plan(plan.c, plan.n1, b)
+            chunks = [Xs[:, t * b:(t + 1) * b] for t in range(nsteps)]
+            chunked = np.stack([distribute_rows(ch, chunk_plan)
+                                for ch in chunks], axis=1)
+            slices.append(chunked)      # (p1, nsteps, c, nb, bw)
+    return np.stack(slices, axis=1)     # (p1, p2, ...)
+
+
+def flat_tb_size(plan: TwoDPlan) -> int:
+    return plan.T * plan.nb * plan.nb + plan.nb * plan.nb
+
+
+def gather_3d_sym(flat_shards: np.ndarray, plan: TwoDPlan) -> np.ndarray:
+    """(p1, p2, shard) reduce-scattered output -> dense tril (n1, n1)."""
+    from .twodim import assemble_sym
+    p1, p2, s = flat_shards.shape
+    flat = flat_shards.reshape(p1, p2 * s)[:, :flat_tb_size(plan)]
+    t = plan.T * plan.nb * plan.nb
+    off = flat[:, :t].reshape(p1, plan.T, plan.nb, plan.nb)
+    diag = flat[:, t:].reshape(p1, plan.nb, plan.nb)
+    return assemble_sym(off, diag, plan)
+
+
+def distribute_3d_sym(Af: np.ndarray, plan: TwoDPlan, p2: int) -> np.ndarray:
+    """Full symmetric A -> (p1, p2, shard) flattened extended triangle
+    blocks, shard-split over the replication axis (for 3D SYMM input)."""
+    from .twodim import distribute_sym
+    off, diag = distribute_sym(Af, plan)
+    p1 = plan.num_devices
+    flat = np.concatenate([off.reshape(p1, -1), diag.reshape(p1, -1)], 1)
+    pad = -flat.shape[1] % p2
+    flat = np.pad(flat, ((0, 0), (0, pad)))
+    return flat.reshape(p1, p2, -1)

@@ -1,0 +1,6 @@
+"""Deterministic synthetic data pipeline with sharded host loading."""
+from .pipeline import (DataConfig, SyntheticLM, make_train_iterator,
+                       pack_documents)
+
+__all__ = ["DataConfig", "SyntheticLM", "make_train_iterator",
+           "pack_documents"]

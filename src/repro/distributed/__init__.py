@@ -1,0 +1,13 @@
+"""Distributed runtime: fault tolerance, elasticity, stragglers,
+gradient compression."""
+from .checkpoint import (latest_step, restore_checkpoint, save_checkpoint,
+                         wait_for_saves)
+from .compression import (ErrorFeedbackInt8, compressed_allreduce,
+                          dequantize_int8, quantize_int8)
+from .elastic import plan_mesh, plan_shape, reshard_tree
+from .straggler import StepTimer, StragglerMonitor
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "wait_for_saves", "quantize_int8", "dequantize_int8",
+           "ErrorFeedbackInt8", "compressed_allreduce", "plan_mesh",
+           "plan_shape", "reshard_tree", "StragglerMonitor", "StepTimer"]

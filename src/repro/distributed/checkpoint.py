@@ -1,0 +1,204 @@
+"""Atomic, shard-aware, restart-safe checkpointing.
+
+Layout (one directory per step, committed by atomic rename):
+
+    <ckpt_dir>/step_00000420/
+        manifest.json       # leaf paths, shapes, dtypes, crc32s, step
+        <leaf-key>.npy      # one file per pytree leaf
+
+Guarantees:
+  * **Atomicity** — leaves + manifest are written into
+    ``step_N.tmp-<pid>`` and the directory is ``os.rename``d only after
+    every file is fsynced; a crash mid-save never corrupts an existing
+    checkpoint and never leaves a half-readable new one.
+  * **Integrity** — every leaf carries a crc32 in the manifest, checked
+    on restore; a torn file fails loudly instead of silently training on
+    garbage.
+  * **Elasticity** — leaves are stored as *full logical arrays*, so a
+    restore may target a mesh with a different device count / topology
+    (see distributed/elastic.py).  At 1000+-node scale one would stripe
+    shard files per host behind the same manifest; the commit protocol
+    and addressing below are unchanged by that swap.
+  * **Async** — ``save_checkpoint(..., blocking=False)`` snapshots
+    device arrays to host and writes in a background thread, overlapping
+    the serialization with subsequent training steps.  Call
+    ``wait_for_saves()`` before exiting.
+  * **Retention** — keeps the newest ``keep`` checkpoints, never
+    deleting an uncommitted or the being-written one.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import threading
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d{8})$")
+_PENDING: List[threading.Thread] = []
+_PENDING_LOCK = threading.Lock()
+
+
+def _leaf_key(path) -> str:
+    """Stable, filesystem-safe key for a pytree leaf path."""
+    key = jax.tree_util.keystr(path)
+    return re.sub(r"[^A-Za-z0-9_.-]", "_", key).strip("_") or "leaf"
+
+
+def _flatten(tree: Any) -> List[Tuple[str, Any]]:
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    seen: Dict[str, int] = {}
+    for path, leaf in leaves:
+        k = _leaf_key(path)
+        if k in seen:             # disambiguate collisions deterministically
+            seen[k] += 1
+            k = f"{k}__{seen[k]}"
+        else:
+            seen[k] = 0
+        out.append((k, leaf))
+    return out
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        m = _STEP_RE.match(name)
+        if m and os.path.exists(os.path.join(ckpt_dir, name,
+                                             "manifest.json")):
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def _write(ckpt_dir: str, step: int, host_leaves: List[Tuple[str,
+                                                             np.ndarray]],
+           keep: int, extra: Dict[str, Any]) -> str:
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + f".tmp-{os.getpid()}-{threading.get_ident()}"
+    os.makedirs(tmp, exist_ok=True)
+    manifest = {"step": step, "leaves": {}, "extra": extra}
+    for key, arr in host_leaves:
+        fn = os.path.join(tmp, key + ".npy")
+        with open(fn, "wb") as f:
+            np.save(f, arr)
+            f.flush()
+            os.fsync(f.fileno())
+        with open(fn, "rb") as f:
+            crc = zlib.crc32(f.read())
+        manifest["leaves"][key] = {
+            "shape": list(arr.shape), "dtype": str(arr.dtype), "crc": crc}
+    mf = os.path.join(tmp, "manifest.json")
+    with open(mf, "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):      # same step re-saved: replace atomically
+        os.rename(final, final + ".old")
+        os.rename(tmp, final)
+        import shutil
+        shutil.rmtree(final + ".old", ignore_errors=True)
+    else:
+        os.rename(tmp, final)
+    _retire(ckpt_dir, keep)
+    return final
+
+
+def _retire(ckpt_dir: str, keep: int) -> None:
+    import shutil
+    steps = sorted(s for s in (latest_step(ckpt_dir),) if s is not None)
+    all_steps = []
+    for name in os.listdir(ckpt_dir):
+        m = _STEP_RE.match(name)
+        if m:
+            all_steps.append(int(m.group(1)))
+    for s in sorted(all_steps)[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)
+    del steps
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any, *,
+                    keep: int = 3, blocking: bool = True,
+                    extra: Optional[Dict[str, Any]] = None) -> None:
+    """Snapshot ``tree`` (params/opt_state/anything pytree) at ``step``.
+
+    With ``blocking=False`` the device->host copies happen here (cheap,
+    ordered before any later donation) and file IO runs on a background
+    thread.  NOTE: if your train step donates its inputs, the snapshot
+    below is still safe — ``np.asarray`` materializes before return.
+    """
+    os.makedirs(ckpt_dir, exist_ok=True)
+    host_leaves = [(k, np.asarray(v)) for k, v in _flatten(tree)]
+    extra = extra or {}
+    if blocking:
+        _write(ckpt_dir, step, host_leaves, keep, extra)
+        return
+
+    th = threading.Thread(
+        target=_write, args=(ckpt_dir, step, host_leaves, keep, extra),
+        daemon=True)
+    th.start()
+    with _PENDING_LOCK:
+        _PENDING.append(th)
+
+
+def wait_for_saves() -> None:
+    with _PENDING_LOCK:
+        pending, _PENDING[:] = _PENDING[:], []
+    for th in pending:
+        th.join()
+
+
+def restore_checkpoint(ckpt_dir: str, like: Any, *,
+                       step: Optional[int] = None,
+                       shardings: Optional[Any] = None
+                       ) -> Tuple[int, Any]:
+    """Restore the newest (or ``step``) checkpoint into the structure of
+    ``like`` (a pytree of arrays or ShapeDtypeStructs).
+
+    ``shardings`` — optional pytree of NamedShardings (same structure);
+    when given, each leaf is placed with it (this is the elastic-restore
+    path: the mesh may differ from the one that saved).
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    keys = [k for k, _ in _flatten(like)]
+    shard_leaves = jax.tree_util.tree_leaves(shardings) \
+        if shardings is not None else [None] * len(keys)
+    if len(shard_leaves) not in (len(keys), 0):
+        raise ValueError("shardings structure mismatch")
+
+    loaded = []
+    for key, sh in zip(keys, shard_leaves):
+        meta = manifest["leaves"].get(key)
+        if meta is None:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        fn = os.path.join(d, key + ".npy")
+        with open(fn, "rb") as f:
+            raw = f.read()
+        if zlib.crc32(raw) != meta["crc"]:
+            raise IOError(f"crc mismatch for {key!r} — torn checkpoint?")
+        import io
+        arr = np.load(io.BytesIO(raw))
+        if arr.dtype.kind == "V":
+            # ml_dtypes (bfloat16, f8...) round-trip np.save as raw void
+            import ml_dtypes
+            arr = arr.view(np.dtype(getattr(ml_dtypes, meta["dtype"])))
+        if sh is not None:
+            arr = jax.device_put(arr, sh)
+        loaded.append(arr)
+
+    treedef = jax.tree_util.tree_structure(like)
+    return step, jax.tree_util.tree_unflatten(treedef, loaded)

@@ -1,0 +1,142 @@
+"""Int8 gradient compression with error feedback.
+
+Synchronous DP all-reduces move 4 bytes/param/step (f32 master grads).
+Block-wise int8 with per-block scales moves ~1.03 bytes/param — a 3.9×
+wire saving — and error feedback (Seide et al.; Karimireddy et al.)
+carries the quantization residual into the next step so SGD/Adam
+trajectories stay unbiased to first order.
+
+Two integration points:
+
+  * :class:`ErrorFeedbackInt8` — a pure-jax gradient transform inserted
+    before the optimizer update (what launch/train.py uses).  Under
+    GSPMD the transform runs *after* the implicit psum, modelling
+    end-to-end numerics of a compressed pipeline.
+  * :func:`compressed_allreduce` — the explicit shard_map collective:
+    quantize shard → int8 all-to-all (reduce-scatter pattern) →
+    dequant-sum → requant → int8 all-gather.  Wire bytes per device:
+    2·(P-1)/P·n·(1+4/block) vs 2·(P-1)/P·n·4 uncompressed.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def _pad_to(x: jax.Array, block: int) -> Tuple[jax.Array, int]:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat, pad
+
+
+def quantize_int8(x: jax.Array, block: int = 256
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric block-wise int8: returns (q[int8, padded], scale[f32])."""
+    flat, _ = _pad_to(x, block)
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, shape, dtype=jnp.float32
+                    ) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+class EFState(NamedTuple):
+    error: Any                     # residual pytree, f32, same shapes
+
+
+class ErrorFeedbackInt8:
+    """grads -> (decompressed grads, new EF state)."""
+
+    def __init__(self, block: int = 256):
+        self.block = block
+
+    def init(self, params: Any) -> EFState:
+        return EFState(error=jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+    def compress(self, grads: Any, state: EFState
+                 ) -> Tuple[Any, EFState]:
+        def one(g, e):
+            corrected = g.astype(jnp.float32) + e
+            q, s = quantize_int8(corrected, self.block)
+            deq = dequantize_int8(q, s, g.shape)
+            return deq.astype(g.dtype), corrected - deq
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_e = jax.tree_util.tree_leaves(state.error)
+        outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+        new_g = jax.tree_util.tree_unflatten(treedef,
+                                             [o[0] for o in outs])
+        new_e = jax.tree_util.tree_unflatten(treedef,
+                                             [o[1] for o in outs])
+        return new_g, EFState(error=new_e)
+
+
+def compressed_allreduce(x: jax.Array, mesh, axis: str = "data",
+                         block: int = 256) -> jax.Array:
+    """Mean of ``x`` over ``axis`` moving int8 on the wire.
+
+    reduce-scatter in int8 → local dequant-sum (f32) → requant →
+    all-gather in int8.  Matches jnp.mean over the axis to ~1e-2 rel.
+    """
+    naxis = mesh.shape[axis]
+
+    def inner(xs):
+        q, s = quantize_int8(xs, block)                 # local shard
+        # reduce-scatter: each device receives the others' quantized
+        # copies of ITS 1/P stripe and sums after dequant.
+        nb = q.shape[0]
+        stripe = nb // naxis
+        qs = q.reshape(naxis, stripe, block)
+        ss = s.reshape(naxis, stripe, 1)
+        qs = jax.lax.all_to_all(qs, axis, split_axis=0, concat_axis=0,
+                                tiled=False)
+        ss = jax.lax.all_to_all(ss, axis, split_axis=0, concat_axis=0,
+                                tiled=False)
+        part = jnp.sum(qs.astype(jnp.float32) * ss, axis=0) / naxis
+        # requant the reduced stripe and all-gather it
+        q2, s2 = quantize_int8(part, block)
+        q2 = jax.lax.all_gather(q2.reshape(stripe, block), axis, axis=0,
+                                tiled=False).reshape(nb, block)
+        s2 = jax.lax.all_gather(s2, axis, axis=0,
+                                tiled=False).reshape(nb, 1)
+        return q2.astype(jnp.float32) * s2
+
+    _smap = jax.shard_map
+    flat, pad = _pad_to(x, block)
+    nb = flat.shape[0] // block
+    # pad so the block count divides the axis
+    extra = (-nb) % naxis
+    if extra:
+        flat = jnp.concatenate(
+            [flat, jnp.zeros(extra * block, flat.dtype)])
+    blocks = flat.reshape(-1, block)
+    out = _smap(inner, mesh=mesh, in_specs=P(),
+                out_specs=P(), check_vma=False)(blocks)
+    n = 1
+    for d in x.shape:
+        n *= d
+    return out.reshape(-1)[:n].reshape(x.shape).astype(x.dtype)
+
+
+def wire_bytes_per_device(n_params: int, p: int, *, compressed: bool,
+                          block: int = 256) -> float:
+    """Ring-model wire bytes for one DP gradient reduction."""
+    pf = 2.0 * (p - 1) / p
+    per_param = (1.0 + 4.0 / block) if compressed else 4.0
+    return pf * n_params * per_param

@@ -1,0 +1,77 @@
+"""Elastic scaling: re-plan the mesh for whatever devices survive and
+re-shard the training state onto it.
+
+Recovery story at scale: a pod loses hosts -> the job restarts with a
+smaller world -> ``plan_mesh(len(jax.devices()))`` picks the best
+(data, model) factorization -> ``restore_checkpoint`` +
+``reshard_tree`` place the saved logical arrays on the new mesh.  No
+state is keyed to device ids, so shrink and grow are symmetric.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def plan_shape(n_devices: int, *, max_model: int = 16,
+               model_divides: Optional[int] = None) -> Tuple[int, int]:
+    """Pick (data, model) for ``n_devices`` — pure, device-free.
+
+    Prefers the largest model axis ≤ max_model that divides n_devices
+    (and divides ``model_divides`` — e.g. n_heads or d_ff — when given),
+    maximizing TP while keeping DP ≥ 1.  Deterministic, so every
+    surviving host computes the same mesh independently.
+    """
+    best = 1
+    for m in range(1, min(max_model, n_devices) + 1):
+        if n_devices % m:
+            continue
+        if model_divides is not None and model_divides % m:
+            continue
+        best = m
+    return n_devices // best, best
+
+
+def plan_mesh(n_devices: Optional[int] = None, *, max_model: int = 16,
+              model_divides: Optional[int] = None):
+    """Instantiate the planned mesh over the live devices."""
+    if n_devices is None:
+        n_devices = jax.device_count()
+    data, model = plan_shape(n_devices, max_model=max_model,
+                             model_divides=model_divides)
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def reshard_tree(tree: Any, specs: Any, mesh) -> Any:
+    """Place every leaf of ``tree`` per the matching PartitionSpec on
+    ``mesh``.  Accepts host numpy arrays or jax Arrays from another mesh
+    (elastic restore path)."""
+    def place(x, spec):
+        return jax.device_put(x, NamedSharding(mesh, spec))
+    return jax.tree.map(place, tree, specs,
+                        is_leaf=lambda x: not isinstance(x, (dict, list,
+                                                             tuple)))
+
+
+def spec_tree_like(tree: Any, spec: P = P()) -> Any:
+    """A spec tree of the same structure, all replicated (default)."""
+    return jax.tree.map(lambda _: spec, tree)
+
+
+def validate_divisibility(mesh, *, global_batch: int,
+                          model_dims: Sequence[int]) -> Tuple[bool, str]:
+    """Pre-flight check: batch divides the DP axes, model dims divide
+    the TP axis.  Returns (ok, reason)."""
+    dp = 1
+    for a in ("pod", "data"):
+        dp *= mesh.shape.get(a, 1)
+    tp = mesh.shape.get("model", 1)
+    if global_batch % dp:
+        return False, f"global_batch {global_batch} % dp {dp} != 0"
+    for d in model_dims:
+        if d % tp:
+            return False, f"model dim {d} % tp {tp} != 0"
+    return True, "ok"

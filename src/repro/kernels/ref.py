@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the Pallas kernels (the `ref.py` contract).
+
+All kernels compute on the *lower triangle* representation:
+  syrk_ref  : C  = tril(A·Aᵀ)
+  syr2k_ref : C  = tril(A·Bᵀ + B·Aᵀ)
+  symm_ref  : C  = sym(A)·B where only tril(A) is defined (upper mirrored)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def syrk_ref(a: jnp.ndarray) -> jnp.ndarray:
+    a32 = a.astype(jnp.float32)
+    return jnp.tril(a32 @ a32.T)
+
+
+def syr2k_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    a32, b32 = a.astype(jnp.float32), b.astype(jnp.float32)
+    g = a32 @ b32.T
+    return jnp.tril(g + g.T)
+
+
+def symm_ref(a_tril: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """a_tril: full (n1, n1) array whose upper triangle is ignored."""
+    a32 = a_tril.astype(jnp.float32)
+    sym = jnp.tril(a32) + jnp.tril(a32, -1).T
+    return sym @ b.astype(jnp.float32)

@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: fused sLSTM recurrence scan.
+
+The §Perf cell-1 endgame (EXPERIMENTS): under XLA, the sLSTM recurrence
+runs either as an S-trip while loop (state round-trips through HBM every
+token) or as associative scans (log₂S full-tensor pad/slice passes).  A
+fused kernel is the TPU-native answer — the sequence tile lives in VMEM,
+the (c, n, m) state lives in registers across the time loop, and HBM
+traffic is exactly one read of the gates + one write of the outputs:
+
+    traffic = (4 inputs + 1 output) · B·S·d · 4 bytes     (the floor)
+
+vs ~2·log₂S full passes for the associative form.  Grid: (B, d/bd) —
+each grid step scans the whole sequence for one (1, S, bd) gate tile
+(bd=128 lanes, MXU/VPU aligned; VMEM budget ≈ 5·S·bd·4B ≈ 10 MiB at
+S=4096).  Same stabilized recurrence as models/ssm._slstm_seq:
+
+    m_t = max(f_t + m_{t-1}, i_t)
+    c_t = e^{f_t+m_{t-1}-m_t}·c_{t-1} + e^{i_t-m_t}·tanh(z_t)
+    n_t = e^{f_t+m_{t-1}-m_t}·n_{t-1} + e^{i_t-m_t}
+    y_t = σ(o_t)·c_t / max(n_t, 1)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _slstm_kernel(z_ref, i_ref, f_ref, o_ref, c0_ref, n0_ref, m0_ref,
+                  y_ref, c1_ref, n1_ref, m1_ref, *, s: int):
+    c = c0_ref[0, :]
+    n = n0_ref[0, :]
+    m = m0_ref[0, :]
+
+    def step(t, carry):
+        c, n, m = carry
+        zt = z_ref[0, t, :]
+        it = i_ref[0, t, :]
+        ft = f_ref[0, t, :]
+        ot = o_ref[0, t, :]
+        m_new = jnp.maximum(ft + m, it)
+        e_f = jnp.exp(ft + m - m_new)
+        e_i = jnp.exp(it - m_new)
+        c = e_f * c + e_i * jnp.tanh(zt)
+        n = e_f * n + e_i
+        y_ref[0, t, :] = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1.0)
+        return c, n, m_new
+
+    c, n, m = jax.lax.fori_loop(0, s, step, (c, n, m))
+    c1_ref[0, :] = c
+    n1_ref[0, :] = n
+    m1_ref[0, :] = m
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "interpret"))
+def slstm_scan(z: jax.Array, ig: jax.Array, fg: jax.Array, og: jax.Array,
+               c0: jax.Array, n0: jax.Array, m0: jax.Array, *,
+               bd: int = 128, interpret: Optional[bool] = None
+               ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """z/ig/fg/og: (B, S, d) f32; c0/n0/m0: (B, d) f32.
+    Returns (y (B,S,d), c1, n1, m1)."""
+    b, s, d = z.shape
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    bd = min(bd, d)
+    assert d % bd == 0, (d, bd)
+
+    gate_spec = pl.BlockSpec((1, s, bd), lambda bi, di: (bi, 0, di))
+    st_spec = pl.BlockSpec((1, bd), lambda bi, di: (bi, di))
+    f32 = jnp.float32
+    y, c1, n1, m1 = pl.pallas_call(
+        functools.partial(_slstm_kernel, s=s),
+        grid=(b, d // bd),
+        in_specs=[gate_spec] * 4 + [st_spec] * 3,
+        out_specs=[gate_spec] + [st_spec] * 3,
+        out_shape=[jax.ShapeDtypeStruct((b, s, d), f32)]
+        + [jax.ShapeDtypeStruct((b, d), f32)] * 3,
+        interpret=interpret,
+    )(z.astype(f32), ig.astype(f32), fg.astype(f32), og.astype(f32),
+      c0.astype(f32), n0.astype(f32), m0.astype(f32))
+    return y, c1, n1, m1
+
+
+def hbm_traffic_bytes(b: int, s: int, d: int) -> dict:
+    """Analytic HBM traffic: fused kernel vs associative-scan lowering
+    (for §Kernels / §Perf reporting)."""
+    elem = 4
+    fused = 5 * b * s * d * elem + 6 * b * d * elem
+    # assoc form: 3 scans (m, c‖n fused, shifted-m) × ~2·log2(s) level
+    # passes × read+write
+    import math
+    levels = max(int(math.ceil(math.log2(max(s, 2)))), 1)
+    assoc = 3 * 2 * levels * b * s * d * elem
+    return {"fused_bytes": fused, "assoc_bytes": assoc,
+            "saving": assoc / fused}

@@ -1,0 +1,31 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state — the dry-run sets
+the 512-device XLA flag before any jax initialization.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single-pod (data=16, model=16) = 256 chips, or multi-pod
+    (pod=2, data=16, model=16) = 512 chips (v5e pods)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(data: int, model: int, pod: int = 1):
+    """Arbitrary mesh for tests/examples (pod axis only when pod > 1)."""
+    if pod > 1:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple:
+    """The data-parallel axes of a mesh (pod included when present)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)

@@ -1,0 +1,111 @@
+"""Jit-able train / serve step factories.
+
+``make_train_step`` builds the full production step: microbatched gradient
+accumulation (lax.scan), global-norm clipping, DP gradient psum implied by
+GSPMD sharding, optimizer update (AdamW / AdamW-8bit / Muon-SYRK), and
+metric outputs.  ``make_prefill_step`` / ``make_decode_step`` are the
+serving entry points.  All are pure functions of (params, opt_state, batch)
+suitable for ``jax.jit`` with explicit in/out shardings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig
+from repro.models.model import decode_step as _decode
+from repro.models.model import lm_loss
+from repro.models.model import prefill as _prefill
+from repro.optim import AdamW, Muon
+
+
+def make_optimizer(cfg: ArchConfig, name: str = "adamw", lr: float = 3e-4,
+                   mesh=None):
+    if name == "adamw":
+        return AdamW(lr=lr)
+    if name == "adamw8bit":
+        return AdamW(lr=lr, quantize_moments=True)
+    if name == "muon":
+        return Muon(lr=2e-2, mode="reference")
+    if name == "muon-syrk":
+        return Muon(lr=2e-2, mode="syrk-1d", mesh=mesh)
+    raise ValueError(name)
+
+
+def _clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+def make_train_step(cfg: ArchConfig, optimizer, *, microbatches: int = 1,
+                    clip_norm: float = 1.0, loss_chunk: int = 512,
+                    compressor=None) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  ``microbatches`` > 1 scans gradient accumulation over the
+    leading batch split (activation memory /= microbatches).
+
+    ``compressor`` (e.g. distributed.ErrorFeedbackInt8): when given,
+    ``opt_state`` is the pair (optimizer state, EF state) and gradients
+    pass through int8 quantize/dequantize with error feedback before the
+    optimizer — the numerics of a compressed DP all-reduce."""
+
+    def loss_fn(params, batch):
+        return lm_loss(cfg, params, batch, chunk=loss_chunk)
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape((microbatches, b // microbatches)
+                                 + x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc_fn(carry, mbatch):
+                loss_sum, gacc = carry
+                loss, g = jax.value_and_grad(loss_fn)(params, mbatch)
+                gacc = jax.tree.map(
+                    lambda a, b_: a + b_.astype(jnp.float32), gacc, g)
+                return (loss_sum + loss, gacc), None
+
+            gzero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(acc_fn, (jnp.zeros(()), gzero),
+                                            mb)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+
+        grads, gnorm = _clip_by_global_norm(grads, clip_norm)
+        if compressor is not None:
+            inner, ef = opt_state
+            grads, ef = compressor.compress(grads, ef)
+            new_params, new_inner = optimizer.update(grads, inner, params)
+            new_opt = (new_inner, ef)
+        else:
+            new_params, new_opt = optimizer.update(grads, opt_state,
+                                                   params)
+        metrics = {"loss": loss, "grad_norm": gnorm}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, s_max: int) -> Callable:
+    def prefill_step(params, batch):
+        return _prefill(cfg, params, batch, s_max=s_max)
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig) -> Callable:
+    def serve_step(params, token, pos, cache):
+        logits, cache = _decode(cfg, params, token, pos, cache)
+        next_token = jnp.argmax(logits[:, -1], axis=-1)[:, None] \
+            .astype(jnp.int32)
+        return next_token, logits, cache
+    return serve_step

@@ -1,0 +1,284 @@
+"""Attention mixers: GQA (with RoPE / sliding window / logit softcap) and
+MLA (DeepSeek multi-head latent attention with compressed KV cache).
+
+All mixers share one calling convention:
+
+    y, new_cache = mixer(cfg, spec, params, x, positions, cache, layer_slot)
+
+``cache`` is None for training (full causal), a per-layer dict for
+prefill/decode.  Decode passes S=1 tokens and a cache of length S_max.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import (ArchConfig, BlockSpec, MLACfg, Params, apply_rope,
+                     dense_init, softcap, split_keys)
+
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# masking
+# ---------------------------------------------------------------------------
+def _attn_mask(q_pos: jax.Array, k_pos: jax.Array, window: int,
+               k_valid: Optional[jax.Array] = None) -> jax.Array:
+    """(B, Sq, Sk) boolean mask: causal + optional sliding window +
+    cache-validity."""
+    m = q_pos[:, :, None] >= k_pos[:, None, :]
+    if window > 0:
+        m &= (q_pos[:, :, None] - k_pos[:, None, :]) < window
+    if k_valid is not None:
+        m &= k_valid[:, None, :]
+    return m
+
+
+def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array, mask: jax.Array,
+          cap: float, scale: float) -> jax.Array:
+    """q: (B,Sq,H,D), k/v: (B,Sk,Hkv,Dk/Dv) with H % Hkv == 0."""
+    b, sq, h, d = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qf = q.reshape(b, sq, hkv, g, d).astype(jnp.float32) * scale
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32))
+    logits = softcap(logits, cap)
+    logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v.astype(jnp.float32))
+    return out.reshape(b, sq, h * v.shape[-1]).astype(q.dtype)
+
+
+SDPA_KV_BLOCK = 1024
+# streaming pays when the dense logits would be strongly quadratic; at
+# train_4k the scan-AD carry stacking outweighs the saving (measured
+# gemma2: 67.9 -> 87.7 s — §Perf refuted iteration), so the threshold
+# sits above it
+SDPA_STREAM_MIN = 4096 * 32768   # sq*sk above which streaming pays
+
+
+def _sdpa_streamed(q, k, v, q_pos, k_pos, window, k_valid, cap, scale,
+                   block: int = SDPA_KV_BLOCK) -> jax.Array:
+    """Streaming-softmax SDPA (§Perf beyond-paper): exact flash-style
+    scan over KV blocks with running (m, l, acc).
+
+    Never materializes the (B,H,Sq,Sk) logits/weights or the full
+    boolean mask — per step only a (B,H,Sq,block) tile exists, and the
+    per-block body is checkpointed so the backward recomputes tiles
+    instead of stacking them back to S².  Numerics: identical softmax
+    up to fp reassociation (same softcap, same masking)."""
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    hkv = k.shape[2]
+    g = h // hkv
+    nb = sk // block
+    qf = q.reshape(b, sq, hkv, g, d).astype(jnp.float32) * scale
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kb, vb, kpb, kvb = inp                       # (B,block,...)
+        lg = jnp.einsum("bqhgd,bkhd->bhgqk", qf,
+                        kb.astype(jnp.float32))
+        lg = softcap(lg, cap)
+        msk = q_pos[:, :, None] >= kpb[:, None, :]
+        if window > 0:
+            msk &= (q_pos[:, :, None] - kpb[:, None, :]) < window
+        if kvb is not None:
+            msk &= kvb[:, None, :]
+        lg = jnp.where(msk[:, None, None], lg, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(lg, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(lg - m_new[..., None])
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] \
+            + jnp.einsum("bhgqk,bkhd->bhgqd", p, vb.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    def to_blocks(a):
+        return a.reshape((b, nb, block) + a.shape[2:]).swapaxes(0, 1)
+
+    m0 = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, hkv, g, sq, v.shape[-1]), jnp.float32)
+    xs = (to_blocks(k), to_blocks(v), to_blocks(k_pos),
+          to_blocks(k_valid) if k_valid is not None else
+          jnp.ones((nb, b, block), bool))
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), (m0, l0, acc0),
+                                  xs)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]     # (B,hkv,g,Sq,dv)
+    out = jnp.moveaxis(out, 3, 1).reshape(b, sq, h * v.shape[-1])
+    return out.astype(q.dtype)
+
+
+def _dispatch_sdpa(q, k, v, q_pos, k_pos, window, k_valid, cap, scale):
+    """Streamed path for big (Sq×Sk); dense for decode-sized queries."""
+    sq, sk = q.shape[1], k.shape[1]
+    if sq > 1 and sq * sk >= SDPA_STREAM_MIN and sk % SDPA_KV_BLOCK == 0:
+        return _sdpa_streamed(q, k, v, q_pos, k_pos, window, k_valid,
+                              cap, scale)
+    mask = _attn_mask(q_pos, k_pos, window, k_valid)
+    return _sdpa(q, k, v, mask, cap, scale)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+def gqa_params(cfg: ArchConfig, key) -> Params:
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = split_keys(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, h * hd)),
+        "wk": dense_init(ks[1], (d, hkv * hd)),
+        "wv": dense_init(ks[2], (d, hkv * hd)),
+        "wo": dense_init(ks[3], (h * hd, d)),
+    }
+
+
+def gqa_cache_init(cfg: ArchConfig, batch: int, s_max: int,
+                   dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((batch, s_max, hkv, hd), dtype),
+        "v": jnp.zeros((batch, s_max, hkv, hd), dtype),
+    }
+
+
+def gqa_attention(cfg: ArchConfig, spec: BlockSpec, p: Params, x: jax.Array,
+                  positions: jax.Array,
+                  cache: Optional[Dict[str, jax.Array]] = None
+                  ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    b, s, d = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (x @ p["wk"]).reshape(b, s, hkv, hd)
+    v = (x @ p["wv"]).reshape(b, s, hkv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    scale = hd ** -0.5
+
+    if cache is None:
+        y = _dispatch_sdpa(q, k, v, positions, positions,
+                           spec.local_window, None, cfg.attn_softcap,
+                           scale)
+        new_cache = None
+    else:
+        s_max = cache["k"].shape[1]
+        start = positions[:, 0]                      # (B,)
+        ck = jax.vmap(
+            lambda c, u, st: jax.lax.dynamic_update_slice(c, u, (st, 0, 0))
+        )(cache["k"], k, start)
+        cv = jax.vmap(
+            lambda c, u, st: jax.lax.dynamic_update_slice(c, u, (st, 0, 0))
+        )(cache["v"], v, start)
+        k_pos = jnp.broadcast_to(jnp.arange(s_max)[None], (b, s_max))
+        valid = k_pos <= positions[:, -1:]           # filled region (B, Sk)
+        y = _dispatch_sdpa(q, ck, cv, positions, k_pos,
+                           spec.local_window, valid, cfg.attn_softcap,
+                           scale)
+        new_cache = {"k": ck, "v": cv}
+    return y @ p["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2/V3)
+# ---------------------------------------------------------------------------
+def mla_params(cfg: ArchConfig, key) -> Params:
+    m: MLACfg = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_dim
+    ks = split_keys(key, 8)
+    p: Params = {
+        "w_dkv": dense_init(ks[0], (d, m.kv_lora)),         # KV compression
+        "w_kr": dense_init(ks[1], (d, m.rope_head_dim)),    # shared rope key
+        "w_uk": dense_init(ks[2], (m.kv_lora, h * qk)),     # K up-proj
+        "w_uv": dense_init(ks[3], (m.kv_lora, h * m.v_head_dim)),
+        "wo": dense_init(ks[4], (h * m.v_head_dim, d)),
+    }
+    if m.q_lora:
+        p["w_dq"] = dense_init(ks[5], (d, m.q_lora))
+        p["w_uq"] = dense_init(ks[6], (m.q_lora, h * (qk + m.rope_head_dim)))
+    else:
+        p["wq"] = dense_init(ks[7], (d, h * (qk + m.rope_head_dim)))
+    return p
+
+
+def mla_cache_init(cfg: ArchConfig, batch: int, s_max: int,
+                   dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, s_max, m.kv_lora), dtype),
+        "kr": jnp.zeros((batch, s_max, m.rope_head_dim), dtype),
+    }
+
+
+def mla_attention(cfg: ArchConfig, spec: BlockSpec, p: Params, x: jax.Array,
+                  positions: jax.Array,
+                  cache: Optional[Dict[str, jax.Array]] = None
+                  ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Multi-head latent attention: caches only (c_kv, k_rope) —
+    kv_lora + rope_head_dim = 576 values/token for V2/V3."""
+    m: MLACfg = cfg.mla
+    b, s, d = x.shape
+    h, qk, rd, vd = cfg.n_heads, m.qk_nope_dim, m.rope_head_dim, m.v_head_dim
+    if m.q_lora:
+        q = ((x @ p["w_dq"]) @ p["w_uq"]).reshape(b, s, h, qk + rd)
+    else:
+        q = (x @ p["wq"]).reshape(b, s, h, qk + rd)
+    q_nope, q_rope = q[..., :qk], q[..., qk:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = x @ p["w_dkv"]                                  # (B, S, kv_lora)
+    kr = apply_rope((x @ p["w_kr"])[:, :, None, :], positions,
+                    cfg.rope_theta)[:, :, 0]              # (B, S, rd)
+
+    if cache is not None:
+        start = positions[:, 0]
+        ckv = jax.vmap(
+            lambda c, u, st: jax.lax.dynamic_update_slice(c, u, (st, 0))
+        )(cache["ckv"], ckv, start)
+        kr = jax.vmap(
+            lambda c, u, st: jax.lax.dynamic_update_slice(c, u, (st, 0))
+        )(cache["kr"], kr, start)
+        new_cache = {"ckv": ckv, "kr": kr}
+        sk = ckv.shape[1]
+        k_pos = jnp.broadcast_to(jnp.arange(sk)[None], (b, sk))
+        valid = k_pos <= positions[:, -1:]
+        mask = _attn_mask(positions, k_pos, spec.local_window, valid)
+    else:
+        new_cache = None
+        mask = _attn_mask(positions, positions, spec.local_window)
+
+    # up-project cached latents to per-head K/V
+    sk = ckv.shape[1]
+    k_nope = (ckv @ p["w_uk"]).reshape(b, sk, h, qk)
+    v = (ckv @ p["w_uv"]).reshape(b, sk, h, vd)
+    scale = (qk + rd) ** -0.5
+    lf = jnp.float32
+    logits = (jnp.einsum("bqhd,bkhd->bhqk", q_nope.astype(lf),
+                         k_nope.astype(lf))
+              + jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(lf),
+                           kr.astype(lf))) * scale
+    logits = jnp.where(mask[:, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    y = jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(lf))
+    y = y.reshape(b, s, h * vd).astype(x.dtype)
+    return y @ p["wo"], new_cache
+
+
+def attn_params(cfg: ArchConfig, key) -> Params:
+    return mla_params(cfg, key) if cfg.attn_kind == "mla" else \
+        gqa_params(cfg, key)
+
+
+def attn_cache_init(cfg: ArchConfig, batch: int, s_max: int) -> Params:
+    return mla_cache_init(cfg, batch, s_max) if cfg.attn_kind == "mla" else \
+        gqa_cache_init(cfg, batch, s_max)
+
+
+def attention(cfg: ArchConfig, spec: BlockSpec, p: Params, x, positions,
+              cache=None):
+    if cfg.attn_kind == "mla":
+        return mla_attention(cfg, spec, p, x, positions, cache)
+    return gqa_attention(cfg, spec, p, x, positions, cache)

@@ -1,0 +1,199 @@
+"""Shared model infrastructure: config schema, norms, RoPE, initializers.
+
+All 10 assigned architectures are expressed as an :class:`ArchConfig` whose
+``pattern`` lists the block descriptors of ONE repeating period; the model
+stacks ``n_layers // len(pattern)`` periods via ``lax.scan`` (stacked params)
+to keep HLO size and compile time bounded on 60-layer configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# block descriptors
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class BlockSpec:
+    mixer: str = "attn"          # attn | mamba | mlstm | slstm
+    mlp: str = "dense"           # dense | moe | none
+    local_window: int = 0        # sliding-window size; 0 = global attention
+
+
+@dataclass(frozen=True)
+class MoECfg:
+    n_experts: int = 0
+    top_k: int = 1
+    n_shared: int = 0
+    d_ff_expert: int = 0
+
+
+@dataclass(frozen=True)
+class MLACfg:
+    kv_lora: int = 512
+    q_lora: int = 0              # 0 = no query compression
+    rope_head_dim: int = 64
+    v_head_dim: int = 128
+    qk_nope_dim: int = 128
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0                       # 0 -> d_model // n_heads
+    pattern: Tuple[BlockSpec, ...] = (BlockSpec(),)
+    prefix: Tuple[BlockSpec, ...] = ()      # unscanned lead-in blocks
+    attn_kind: str = "gqa"                  # gqa | mla
+    mla: Optional[MLACfg] = None
+    moe: Optional[MoECfg] = None
+    norm: str = "rmsnorm"                   # rmsnorm | layernorm
+    act: str = "silu"                       # silu(swiglu) | gelu(geglu) | gelu_mlp
+    rope_theta: float = 10000.0
+    rope_fraction: float = 1.0              # stablelm: 0.25 partial rotary
+    attn_softcap: float = 0.0               # gemma2: 50.0
+    final_softcap: float = 0.0              # gemma2: 30.0
+    post_block_norm: bool = False           # gemma2/3 post-norms
+    tie_embeddings: bool = False
+    embed_scale: bool = False               # gemma: multiply embed by sqrt(d)
+    frontend: str = "tokens"                # tokens | embeddings | vlm
+    n_frontend_tokens: int = 0              # vlm: patch tokens per sample
+    mtp: bool = False                       # deepseek-v3 multi-token predict
+    mamba_d_state: int = 16
+    mamba_d_conv: int = 4
+    mamba_expand: int = 2
+    subquadratic: bool = False              # eligible for long_500k
+    remat_policy: str = "full"              # full | dots | names (§Perf)
+    # sharding hints
+    fsdp_params: bool = False               # 2D (data, model) weight shard
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def period(self) -> int:
+        return len(self.pattern)
+
+    @property
+    def n_periods(self) -> int:
+        scanned = self.n_layers - len(self.prefix)
+        assert scanned % self.period == 0, (self.n_layers, self.period)
+        return scanned // self.period
+
+    def param_count(self) -> int:
+        """Approximate parameter count (for 6ND model-flops accounting)."""
+        from .model import init_params  # lazy; counts from real shapes
+        shapes = jax.eval_shape(lambda: init_params(self, jax.random.key(0)))
+        return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only top-k + shared experts)."""
+        total = self.param_count()
+        if not self.moe or not self.moe.n_experts:
+            return total
+        # subtract inactive routed experts
+        n_moe_layers = sum(1 for b in self.pattern if b.mlp == "moe") \
+            * self.n_periods
+        per_expert = 3 * self.d_model * self.moe.d_ff_expert
+        inactive = (self.moe.n_experts - self.moe.top_k) * per_expert \
+            * n_moe_layers
+        return total - inactive
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale + bias).astype(x.dtype)
+
+
+def apply_norm(cfg: ArchConfig, p: Params, x: jax.Array) -> jax.Array:
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"])
+    return rms_norm(x, p["scale"])
+
+
+def norm_params(cfg: ArchConfig, d: int) -> Params:
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32),
+                "bias": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.zeros((d,), jnp.float32)}
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if cap <= 0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               fraction: float = 1.0) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S).  Rotates the first
+    ``fraction·D`` dims (partial rotary à la stablelm)."""
+    d = x.shape[-1]
+    rot = int(d * fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    freqs = rope_freqs(rot, theta)                       # (rot/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, rot/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = xr[..., ::2].astype(jnp.float32), xr[..., 1::2].astype(jnp.float32)
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape).astype(x.dtype)
+    return jnp.concatenate([out, xp], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+def dense_init(key, shape, in_axis: int = 0) -> jax.Array:
+    fan_in = shape[in_axis]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2, 2, shape, jnp.float32)
+            * std).astype(jnp.bfloat16)
+
+
+def embed_init(key, shape) -> jax.Array:
+    return (jax.random.truncated_normal(key, -2, 2, shape, jnp.float32)
+            ).astype(jnp.bfloat16)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))

@@ -1,0 +1,156 @@
+"""Sharding rules: parameter + cache + batch PartitionSpecs per arch.
+
+Scheme (DESIGN §6):
+  * TP over 'model' (Megatron column/row splits; experts sharded over
+    'model' = EP for MoE archs);
+  * DP over 'pod' + 'data' (gradients psum over both);
+  * >100B archs (cfg.fsdp_params) additionally shard weight rows over
+    'data' (ZeRO-3-style 2D sharding via GSPMD);
+  * KV caches are sequence-sharded over 'model' (distributed flash-style
+    decode: partial lse/softmax + psum — the right pattern when
+    n_kv_heads < |model| axis), batch-sharded over 'data' when possible.
+
+Every rule degrades to replication when divisibility fails, so one rule
+set covers all 10 archs on any mesh.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from .common import ArchConfig
+
+
+def _div(n: int, mesh: Mesh, axis: Optional[str]) -> bool:
+    if axis is None:
+        return True
+    return n % int(np.prod([mesh.shape[a] for a in _tuplize(axis)])) == 0
+
+
+def _tuplize(axis) -> Tuple[str, ...]:
+    if axis is None:
+        return ()
+    return (axis,) if isinstance(axis, str) else tuple(axis)
+
+
+def _spec(shape, mesh: Mesh, *axes) -> P:
+    """PartitionSpec with per-dim divisibility fallback to replication."""
+    out = []
+    for dim, ax in zip(shape, axes):
+        out.append(ax if ax is not None and _div(dim, mesh, ax) else None)
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+def _leaf_spec(cfg: ArchConfig, path: str, shape, mesh: Mesh) -> P:
+    fs = "data" if cfg.fsdp_params else None
+    nd = len(shape)
+    name = path.split("/")[-1]
+
+    if name == "embed":
+        return _spec(shape, mesh, "model", fs)
+    if name == "unembed":
+        return _spec(shape, mesh, fs, "model")
+    if name in ("scale", "bias", "conv_b", "dt_bias", "d_skip"):
+        return P(*([None] * nd))
+    if name == "router":
+        return P(*([None] * nd))
+    # MoE experts are TENSOR-parallel over f (every shard holds a slice
+    # of every expert) rather than expert-parallel: tokens then never
+    # cross devices — one (T,d) psum per layer replaces the EP
+    # all-to-all + the global dispatch sort/gather collectives
+    # (§Perf iter 5; the paper's 2D-regime logic: mn₂ < n₁ — keep the
+    # big operand stationary).
+    if name in ("wi", "wg") and nd == 3:      # MoE experts (E, d, f)
+        return _spec(shape, mesh, None, fs, "model")
+    if name == "wo" and nd == 3:              # MoE experts (E, f, d)
+        return _spec(shape, mesh, None, "model", fs)
+    if nd == 2 and name in ("wq", "wk", "wv", "wi", "wg", "in_proj", "wx",
+                            "wif", "wo_gate", "w_dkv", "w_kr", "w_dq",
+                            "w_uq", "w_uk", "w_uv", "dt_proj", "conv_w"):
+        return _spec(shape, mesh, fs, "model")      # column-parallel
+    if nd == 2 and name in ("wo", "out_proj", "x_proj", "a_log"):
+        return _spec(shape, mesh, "model", fs)      # row-parallel
+    return P(*([None] * nd))
+
+
+def param_specs(cfg: ArchConfig, params_shape: Any, mesh: Mesh) -> Any:
+    """PartitionSpec pytree mirroring params (ShapeDtypeStructs or arrays).
+    Leaves under 'periods' carry a leading scan dim (unsharded)."""
+    def fn(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        spath = "/".join(str(k) for k in keys)
+        shape = leaf.shape
+        if "periods" in keys:                 # strip scan-stacked leading dim
+            inner = _leaf_spec(cfg, spath, shape[1:], mesh)
+            return P(None, *inner)
+        return _leaf_spec(cfg, spath, shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(fn, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# cache + batch specs
+# ---------------------------------------------------------------------------
+def cache_specs(cfg: ArchConfig, cache_shape: Any, mesh: Mesh,
+                batch: int) -> Any:
+    """Sequence-sharded KV over 'model'; batch over 'data' when divisible
+    (long_500k batch=1 falls back to sequence over both axes)."""
+    bax = "data" if batch % mesh.shape["data"] == 0 and batch > 1 else None
+    sax = "model" if bax else ("data", "model")
+
+    def fn(path, leaf):
+        keys = [str(getattr(k, "key", getattr(k, "name", k))) for k in path]
+        name = keys[-1]
+        shape = leaf.shape
+        # caches under 'periods' have leading scan dim
+        lead = (None,) if "periods" in keys else ()
+        core = shape[len(lead):]
+        if name in ("k", "v"):        # (B, S, hkv, hd)
+            return P(*lead, bax, sax, None, None)
+        if name == "ckv":             # (B, S, kv_lora)
+            return P(*lead, bax, sax, None)
+        if name == "kr":              # (B, S, rd)
+            return P(*lead, bax, sax, None)
+        if name == "conv":            # (B, dc-1, di)
+            return _pad_spec(lead, core, mesh, bax, None, "model")
+        if name == "ssm":             # (B, di, ds)
+            return _pad_spec(lead, core, mesh, bax, "model", None)
+        if name == "C":               # (B, H, dh, dh)
+            return _pad_spec(lead, core, mesh, bax, None, None, None)
+        if name in ("n", "c", "m"):
+            return P(*lead, *([bax] + [None] * (len(core) - 1)))
+        return P(*lead, *([None] * len(core)))
+
+    return jax.tree_util.tree_map_with_path(fn, cache_shape)
+
+
+def _pad_spec(lead, core, mesh, *axes) -> P:
+    out = list(lead)
+    for dim, ax in zip(core, axes):
+        ok = ax is not None and dim % int(
+            np.prod([mesh.shape[a] for a in _tuplize(ax)])) == 0
+        out.append(ax if ok else None)
+    return P(*out)
+
+
+def batch_specs(cfg: ArchConfig, mesh: Mesh, batch: int,
+                has_pod: bool) -> Dict[str, P]:
+    """Input shardings for tokens/labels/embeds (batch over DP axes)."""
+    dp: Tuple[str, ...] = (("pod",) if has_pod else ()) + ("data",)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    bax = dp if batch % dp_size == 0 else (
+        ("data",) if batch % mesh.shape["data"] == 0 else None)
+    return {
+        "tokens": P(bax, None),
+        "labels": P(bax, None),
+        "positions": P(bax, None),
+        "embeds": P(bax, None, None),
+        "patch_embeds": P(bax, None, None),
+    }

@@ -1,0 +1,443 @@
+"""Recurrent mixers: Mamba (selective SSM) and xLSTM (mLSTM + sLSTM).
+
+All three share the calling convention of attention mixers and are
+sub-quadratic: training runs a ``lax.scan`` over time; decode is an O(1)
+state update (this is what makes long_500k feasible for xlstm/jamba).
+
+State layouts (per layer):
+  mamba : conv buffer (B, d_conv-1, d_inner) + ssm state (B, d_inner, d_state)
+  mlstm : matrix memory (B, H, dh, dh) + normalizer (B, H, dh) + m (B, H)
+  slstm : c/n/m scalars per head-dim (B, H, dh)
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from .common import ArchConfig, Params, dense_init, split_keys
+
+
+# ===========================================================================
+# Mamba (S6)
+# ===========================================================================
+def mamba_params(cfg: ArchConfig, key) -> Params:
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    ds, dc = cfg.mamba_d_state, cfg.mamba_d_conv
+    dt_rank = max(d // 16, 1)
+    ks = split_keys(key, 8)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di)),
+        "conv_w": dense_init(ks[1], (dc, di)),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": dense_init(ks[2], (di, dt_rank + 2 * ds)),
+        "dt_proj": dense_init(ks[3], (dt_rank, di)),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "a_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], (di, d)),
+    }
+
+
+def mamba_state_init(cfg: ArchConfig, batch: int) -> Dict[str, jax.Array]:
+    di = cfg.mamba_expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, di), jnp.bfloat16),
+        "ssm": jnp.zeros((batch, di, cfg.mamba_d_state), jnp.float32),
+    }
+
+
+def _selective_scan_seq(u, dt, A, B, C, D, h0):
+    """Reference sequential scan (decode + oracle for the chunked path).
+    u: (B,S,di); dt: (B,S,di); A: (di,ds); B,C: (B,S,ds)."""
+    dA = jnp.exp(dt[..., None] * A[None, None])            # (B,S,di,ds)
+    dBu = dt[..., None] * B[:, :, None, :] * u[..., None]  # (B,S,di,ds)
+
+    def step(h, inp):
+        da_t, dbu_t, c_t = inp
+        h = da_t * h + dbu_t                               # (B,di,ds)
+        y = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y
+
+    xs = (jnp.moveaxis(dA, 1, 0), jnp.moveaxis(dBu, 1, 0),
+          jnp.moveaxis(C, 1, 0))
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + u * D[None, None]
+    return y, h_last
+
+
+SSM_CHUNK = 64
+
+
+def _selective_scan(u, dt, A, B, C, D, h0, chunk: int = SSM_CHUNK):
+    """Chunked selective scan (TPU adaptation — §Perf hillclimb).
+
+    A time-sequential scan (trip count S) stashes per-step state for the
+    backward pass and moves the (B,di,ds) state through HBM every step.
+    Here the sequence is processed in chunks of L: an outer scan carries
+    the state across S/L chunk boundaries (stash /= L) while the inner
+    recurrence runs as an ``associative_scan`` over the chunk, whose
+    (B,L,di,ds) temporaries live only inside the chunk body.  Numerics
+    match the sequential scan exactly (same linear recurrence, fp
+    reassociation only).
+    """
+    b, s, di = u.shape
+    if s % chunk or s <= chunk:
+        return _selective_scan_seq(u, dt, A, B, C, D, h0)
+    nc = s // chunk
+
+    def chunk_body(h, inp):
+        uc, dtc, Bc, Cc = inp                       # (L,B,...) time-major
+        dA = jnp.exp(dtc[..., None] * A[None, None])        # (L,B,di,ds)
+        dBu = dtc[..., None] * Bc[:, :, None, :] * uc[..., None]
+
+        def combine(x, y):
+            a1, b1 = x
+            a2, b2 = y
+            return a1 * a2, b1 * a2 + b2
+
+        acc_a, acc_b = jax.lax.associative_scan(combine, (dA, dBu), axis=0)
+        hs = acc_a * h[None] + acc_b                        # (L,B,di,ds)
+        yc = checkpoint_name(
+            jnp.einsum("lbds,lbs->lbd", hs, Cc), "scan_out")
+        return hs[-1], yc
+
+    def to_chunks(a):                               # (B,S,...)->(nc,L,B,...)
+        a = jnp.moveaxis(a, 1, 0)                   # (S,B,...)
+        return a.reshape((nc, chunk) + a.shape[1:])
+
+    xs = (to_chunks(u), to_chunks(dt), to_chunks(B), to_chunks(C))
+    h_last, ys = jax.lax.scan(chunk_body, h0, xs)   # ys: (nc,L,B,di)
+    y = jnp.moveaxis(ys.reshape((s,) + ys.shape[2:]), 0, 1)
+    return y + u * D[None, None], h_last
+
+
+def mamba_mixer(cfg: ArchConfig, p: Params, x: jax.Array,
+                state: Optional[Dict[str, jax.Array]] = None
+                ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    b, s, d = x.shape
+    di = cfg.mamba_expand * d
+    ds = cfg.mamba_d_state
+    dc = cfg.mamba_d_conv
+    dt_rank = max(d // 16, 1)
+
+    xz = x @ p["in_proj"]
+    u, z = xz[..., :di], xz[..., di:]
+
+    # causal depthwise conv, carrying the (dc-1)-token buffer when decoding
+    if state is not None:
+        upad = jnp.concatenate([state["conv"].astype(u.dtype), u], axis=1)
+        new_conv = upad[:, -(dc - 1):]
+    else:
+        upad = jnp.pad(u, ((0, 0), (dc - 1, 0), (0, 0)))
+        new_conv = upad[:, -(dc - 1):]
+    uc = sum(upad[:, i:i + s] * p["conv_w"][i][None, None]
+             for i in range(dc))
+    uc = jax.nn.silu(uc + p["conv_b"][None, None])
+
+    proj = uc @ p["x_proj"]
+    dt = jax.nn.softplus(proj[..., :dt_rank] @ p["dt_proj"]
+                         + p["dt_bias"][None, None])
+    Bm = proj[..., dt_rank:dt_rank + ds].astype(jnp.float32)
+    Cm = proj[..., dt_rank + ds:].astype(jnp.float32)
+    A = -jnp.exp(p["a_log"])
+
+    h0 = state["ssm"] if state is not None else \
+        jnp.zeros((b, di, ds), jnp.float32)
+    y, h_last = _selective_scan(uc.astype(jnp.float32),
+                                dt.astype(jnp.float32), A, Bm, Cm,
+                                p["d_skip"], h0)
+    out = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+    new_state = None if state is None else \
+        {"conv": new_conv.astype(jnp.bfloat16), "ssm": h_last}
+    return out, new_state
+
+
+# ===========================================================================
+# mLSTM (xLSTM matrix memory)
+# ===========================================================================
+def mlstm_params(cfg: ArchConfig, key) -> Params:
+    d, h = cfg.d_model, cfg.n_heads
+    hd = d // h
+    ks = split_keys(key, 6)
+    return {
+        "wq": dense_init(ks[0], (d, d)),
+        "wk": dense_init(ks[1], (d, d)),
+        "wv": dense_init(ks[2], (d, d)),
+        "wif": dense_init(ks[3], (d, 2 * h)),    # input+forget gate logits
+        "wo_gate": dense_init(ks[4], (d, d)),
+        "wo": dense_init(ks[5], (d, d)),
+    }
+
+
+def mlstm_state_init(cfg: ArchConfig, batch: int) -> Dict[str, jax.Array]:
+    h = cfg.n_heads
+    hd = cfg.d_model // h
+    return {
+        "C": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+MLSTM_CHUNK = 128
+
+
+def _mlstm_seq(q, k, v, ig, fg, st):
+    """Reference per-step recurrence (decode + oracle for chunkwise)."""
+    def step(carry, inp):
+        C, n, m = carry
+        qt, kt, vt, it, ft = inp
+        m_new = jnp.maximum(ft + m, it)                   # stabilizer
+        i_ = jnp.exp(it - m_new)
+        f_ = jnp.exp(ft + m - m_new)
+        C = f_[..., None, None] * C + i_[..., None, None] * \
+            jnp.einsum("bhd,bhe->bhde", vt, kt)
+        n = f_[..., None] * n + i_[..., None] * kt
+        num = jnp.einsum("bhde,bhe->bhd", C, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, qt)), 1.0)
+        y = num / den[..., None]
+        return (C, n, m_new), y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (q, k, v, ig, fg))
+    (C, n, m), ys = jax.lax.scan(step, (st["C"], st["n"], st["m"]), xs)
+    return jnp.moveaxis(ys, 0, 1), {"C": C, "n": n, "m": m}
+
+
+def _mlstm_chunkwise(q, k, v, ig, fg, st, chunk: int = MLSTM_CHUNK):
+    """Chunkwise-parallel mLSTM (TPU adaptation — §Perf hillclimb).
+
+    The per-token recurrence C_t = f̄C_{t-1} + ī v_t k_tᵀ costs one
+    (B,H,hd,hd) state round-trip per token and runs on the VPU.  Over a
+    chunk of L tokens the SAME stabilized recurrence (identical m_t!)
+    unrolls to
+
+        m_j  = b_j + w_j,  b_j = Σ_{l≤j} f_l,
+        w_j  = max(m₀, cummax_{l≤j}(i_l − b_l))
+        y_j ∝ Σ_{l≤j} e^{i_l−b_l−w_j}(q_j·k_l)v_l + e^{m₀−w_j} q_j·C₀
+
+    — an (L,L)-masked matmul chain on the MXU plus one state update per
+    chunk: state traffic /= L, elementwise VPU work becomes matmuls.
+    """
+    b, s, h, hd = q.shape
+    nc = s // chunk
+
+    def to_chunks(a):                       # (B,S,H,...) -> (nc,B,L,H,...)
+        am = jnp.moveaxis(a, 1, 0)          # (S,B,H,...)
+        am = am.reshape((nc, chunk) + am.shape[1:])
+        return jnp.moveaxis(am, 2, 1)
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
+    igc, fgc = to_chunks(ig), to_chunks(fg)
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
+
+    def chunk_body(carry, inp):
+        C0, n0, m0 = carry                  # (B,H,hd,hd),(B,H,hd),(B,H)
+        qt, kt, vt, it, ft = inp            # (B,L,H,...)
+        bcum = jnp.cumsum(ft, axis=1)                        # b_j (B,L,H)
+        a_l = it - bcum                                      # i_l − b_l
+        w = jnp.maximum(m0[:, None], jax.lax.cummax(a_l, axis=1))
+        m_j = bcum + w                                       # == seq m_t
+        # intra-chunk: D_{jl} = e^{a_l − w_j} for l ≤ j
+        D = jnp.exp(a_l[:, None, :, :] - w[:, :, None, :])   # (B,j,l,H)
+        D = D * tri[None, :, :, None]
+        S = jnp.einsum("bjhd,blhd->bjlh", qt, kt) * D
+        carry_scale = jnp.exp(m0[:, None] - w)               # (B,L,H)
+        num = jnp.einsum("bjlh,blhd->bjhd", S, vt) \
+            + carry_scale[..., None] \
+            * jnp.einsum("bjhe,bhde->bjhd", qt, C0)
+        # ⟨n_j, q_j⟩ = Σ_l S_{jl} + e^{m0−w_j}(q_j·n₀)
+        nq_j = jnp.sum(S, axis=2) \
+            + carry_scale * jnp.einsum("bjhe,bhe->bjh", qt, n0)
+        y = checkpoint_name(
+            num / jnp.maximum(jnp.abs(nq_j), 1.0)[..., None],
+            "scan_out")
+        # chunk-final state (the j = L row of the same algebra)
+        scale_l = jnp.exp(a_l - w[:, -1:, :])                # (B,L,H)
+        end_scale = jnp.exp(m0 - w[:, -1])                   # (B,H)
+        C1 = end_scale[..., None, None] * C0 \
+            + jnp.einsum("blhd,blhe->bhde", vt * scale_l[..., None], kt)
+        n1 = end_scale[..., None] * n0 \
+            + jnp.sum(kt * scale_l[..., None], axis=1)
+        return (C1, n1, m_j[:, -1]), y
+
+    (C, n, m), ys = jax.lax.scan(
+        chunk_body, (st["C"], st["n"], st["m"]),
+        (qc, kc, vc, igc, fgc))                  # ys: (nc,B,L,H,hd)
+    y = jnp.moveaxis(ys, 1, 0).reshape(b, s, h, hd)
+    return y, {"C": C, "n": n, "m": m}
+
+
+def mlstm_mixer(cfg: ArchConfig, p: Params, x: jax.Array,
+                state: Optional[Dict[str, jax.Array]] = None
+                ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Exponential-gated matrix-memory LSTM (xLSTM eq. 19–27), stabilized.
+    Training/prefill run the chunkwise-parallel form; decode (S small or
+    not chunk-divisible) runs the per-step recurrence."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    q = (x @ p["wq"]).reshape(b, s, h, hd).astype(jnp.float32) * hd ** -0.5
+    k = (x @ p["wk"]).reshape(b, s, h, hd).astype(jnp.float32) * hd ** -0.5
+    v = (x @ p["wv"]).reshape(b, s, h, hd).astype(jnp.float32)
+    gif = (x @ p["wif"]).reshape(b, s, h, 2).astype(jnp.float32)
+    ig, fg = gif[..., 0], gif[..., 1]                     # log-space gates
+
+    st = state if state is not None else mlstm_state_init(cfg, b)
+    if s % MLSTM_CHUNK == 0 and s > MLSTM_CHUNK:
+        ys, new_st = _mlstm_chunkwise(q, k, v, ig, fg, st)
+    else:
+        ys, new_st = _mlstm_seq(q, k, v, ig, fg, st)
+    y = ys.reshape(b, s, d).astype(x.dtype)
+    og = jax.nn.sigmoid(x @ p["wo_gate"])
+    out = (y * og) @ p["wo"]
+    new_state = None if state is None else new_st
+    return out, new_state
+
+
+# ===========================================================================
+# sLSTM (xLSTM scalar memory)
+# ===========================================================================
+def slstm_params(cfg: ArchConfig, key) -> Params:
+    d = cfg.d_model
+    ks = split_keys(key, 2)
+    return {
+        "wx": dense_init(ks[0], (d, 4 * d)),     # z, i, f, o pre-activations
+        "wo": dense_init(ks[1], (d, d)),
+    }
+
+
+def slstm_state_init(cfg: ArchConfig, batch: int) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.ones((batch, d), jnp.float32),
+        "m": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def _slstm_seq(z, ig, fg, og, st):
+    """Reference per-step recurrence (decode + oracle)."""
+    def step(carry, inp):
+        c, n, m = carry
+        zt, it, ft, ot = inp
+        m_new = jnp.maximum(ft + m, it)
+        i_ = jnp.exp(it - m_new)
+        f_ = jnp.exp(ft + m - m_new)
+        c = f_ * c + i_ * jnp.tanh(zt)
+        n = f_ * n + i_
+        y = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1.0)
+        return (c, n, m_new), y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (z, ig, fg, og))
+    (c, n, m), ys = jax.lax.scan(step, (st["c"], st["n"], st["m"]), xs)
+    return jnp.moveaxis(ys, 0, 1), {"c": c, "n": n, "m": m}
+
+
+# with d model-sharded the scan temporaries are (B, S, d/tp) — small —
+# so chunking only pays past very long sequences (it costs reshapes)
+SLSTM_CHUNK = 8192
+
+
+def _slstm_parallel_chunk(z, ig, fg, og, st):
+    """One chunk of the associative-scan sLSTM (see _slstm_parallel)."""
+    def mscan(e1, e2):
+        f1, i1 = e1
+        f2, i2 = e2
+        return f1 + f2, jnp.maximum(i1 + f2, i2)
+
+    # fold the carried m₀ into the first step's gates; the prefix
+    # composition (F_t, I_t) represents x ↦ max(x+F_t, I_t), so at x=0
+    # m_t = max(F_t, I_t)
+    fg0 = fg.at[:, 0].add(st["m"])
+    fcum, icum = jax.lax.associative_scan(mscan, (fg0, ig), axis=1)
+    m = jnp.maximum(fcum, icum)
+    m_prev = jnp.concatenate([st["m"][:, None], m[:, :-1]], axis=1)
+
+    a = jnp.exp(fg + m_prev - m)
+    a = a.at[:, 0].set(jnp.exp(fg[:, 0] + st["m"] - m[:, 0]))
+    bi = jnp.exp(ig - m)
+
+    def lscan(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2 + b2
+
+    # fold carried c₀/n₀ into step 1: b₁ += a₁·(c₀|n₀); the c and n
+    # recurrences share `a`, so ONE scan over the stacked last dim
+    # covers both (§Perf iter 3: halves the scan passes).
+    bc = bi * jnp.tanh(z)
+    bc = bc.at[:, 0].add(a[:, 0] * st["c"])
+    bn = bi.at[:, 0].add(a[:, 0] * st["n"])
+    bcn = jnp.concatenate([bc, bn], axis=-1)
+    a2 = jnp.concatenate([a, a], axis=-1)
+    _, cn = jax.lax.associative_scan(lscan, (a2, bcn), axis=1)
+    d = z.shape[-1]
+    c, n = cn[..., :d], cn[..., d:]
+    c = checkpoint_name(c, "scan_out")
+    n = checkpoint_name(n, "scan_out")
+    y = jax.nn.sigmoid(og) * c / jnp.maximum(n, 1.0)
+    return y, {"c": c[:, -1], "n": n[:, -1], "m": m[:, -1]}
+
+
+def _slstm_parallel(z, ig, fg, og, st, chunk: int = SLSTM_CHUNK):
+    """Chunked associative-scan sLSTM (TPU adaptation — §Perf hillclimb).
+
+    The scalar recurrence is expressed as associative scans instead of
+    an S-trip while loop:
+      1. the stabilizer m_t = max(f_t + m_{t-1}, i_t) is a max-plus scan
+         over functions x ↦ max(x + f, i): (f₁,i₁)∘(f₂,i₂) =
+         (f₁+f₂, max(i₁+f₂, i₂));
+      2. given m, the (c, n) updates are ONE stacked linear scan
+         x ↦ a·x + b with a_t = e^{f_t + m_{t-1} − m_t},
+         b_t = e^{i_t − m_t}·(tanh z_t ‖ 1).
+    The scans run per chunk of L (outer lax.scan carries c/n/m), so the
+    per-level pad/slice restructuring of associative_scan touches
+    (B,L,d) tiles with log₂L levels instead of (B,S,d) with log₂S —
+    scan traffic scales S·log L instead of S·log S and the level
+    temporaries stay chunk-sized.  Numerics match the sequential scan
+    exactly (same stabilizer m)."""
+    b, s, d = z.shape
+    if s % chunk or s <= chunk:
+        return _slstm_parallel_chunk(z, ig, fg, og, st)
+    nc = s // chunk
+
+    def to_chunks(x):
+        return jnp.moveaxis(x, 1, 0).reshape(nc, chunk, b, d) \
+            .swapaxes(1, 2)                       # (nc, B, L, d)
+
+    def body(carry, inp):
+        zt, it, ft, ot = inp
+        y, new = _slstm_parallel_chunk(zt, it, ft, ot, carry)
+        return new, y
+
+    st_end, ys = jax.lax.scan(
+        body, st, tuple(map(to_chunks, (z, ig, fg, og))))
+    y = jnp.moveaxis(ys.swapaxes(1, 2).reshape(s, b, d), 0, 1)
+    return y, st_end
+
+
+def slstm_mixer(cfg: ArchConfig, p: Params, x: jax.Array,
+                state: Optional[Dict[str, jax.Array]] = None
+                ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    b, s, d = x.shape
+    # d-major gate layout: reshape (B,S,4d)->(B,S,d,4) keeps the
+    # column-sharded projection sharded on d under GSPMD (a gate-major
+    # (B,S,4,d) split straddles the shard boundary and forces
+    # replication — §Perf iter 4)
+    pre = (x @ p["wx"]).reshape(b, s, d, 4).astype(jnp.float32)
+    z, ig, fg, og = (pre[..., 0], pre[..., 1], pre[..., 2], pre[..., 3])
+    st = state if state is not None else slstm_state_init(cfg, b)
+
+    if s > 8:
+        ys, new_st = _slstm_parallel(z, ig, fg, og, st)
+    else:
+        ys, new_st = _slstm_seq(z, ig, fg, og, st)
+    y = ys.astype(x.dtype)
+    out = y @ p["wo"]
+    new_state = None if state is None else new_st
+    return out, new_state

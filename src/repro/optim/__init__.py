@@ -1,0 +1,7 @@
+"""Optimizers: AdamW (w/ 8-bit moments) and Muon built on the paper's
+communication-optimal SYRK/SYMM (see muon.py)."""
+from .adamw import AdamW, AdamWState
+from .muon import Muon, MuonState, orthogonalize_1d, orthogonalize_reference
+
+__all__ = ["AdamW", "AdamWState", "Muon", "MuonState", "orthogonalize_1d",
+           "orthogonalize_reference"]

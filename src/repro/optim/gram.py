@@ -1,0 +1,112 @@
+"""Gram/curvature statistics monitor on the paper's comm-optimal SYRK.
+
+Training-observability integration of the paper (DESIGN §4.2): per-layer
+activation/gradient Gram matrices G = X·Xᵀ are the standard statistic
+behind curvature monitors, whitening (K-FAC style factors), and
+feature-rank diagnostics.  X is (d, tokens) with tokens ≫ d — exactly
+Thm 9 case 1 — so the packed-triangle 1D SYRK (Alg 7) is the
+communication-optimal way to maintain them on a (data, model) mesh:
+(1−1/P)·d(d+1)/2 words per update instead of 2·(1−1/P)·d² for a naive
+all-reduce+broadcast of the dense Gram.
+
+``GramMonitor`` keeps an EMA of the packed lower triangle per tracked
+layer and derives cheap summaries (trace, Frobenius norm, effective
+rank) without ever materializing the dense matrix on host.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from ..core.dispatch import choose_algorithm
+from ..core.onedim import syrk_1d_local
+from ..core.packing import pack_tril, tril_size, unpack_tril
+
+
+def packed_gram(x: jax.Array, mesh: Optional[Mesh] = None,
+                axis: str = "model") -> jax.Array:
+    """Packed lower triangle of X·Xᵀ / n for X (d, n).
+
+    With a mesh whose ``axis`` divides n, uses the paper's 1D SYRK
+    (local outer product + reduce-scatter of the packed triangle +
+    tiled all-gather); otherwise computes locally.  Returns
+    (d(d+1)/2,) f32.
+    """
+    d, n = x.shape
+    x = x.astype(jnp.float32)
+    if mesh is not None and axis in mesh.shape \
+            and n % mesh.shape[axis] == 0 and mesh.shape[axis] > 1:
+        nsh = mesh.shape[axis]
+
+        def body(x_loc):
+            shard = syrk_1d_local(x_loc, axis, nsh)
+            full = jax.lax.all_gather(shard, axis, axis=0, tiled=True)
+            return full[:tril_size(d)]
+
+        packed = jax.shard_map(body, mesh=mesh, in_specs=P(None, axis),
+                               out_specs=P(), check_vma=False)(x)
+    else:
+        packed = pack_tril(x @ x.T)
+    return packed / n
+
+
+@dataclass
+class GramMonitor:
+    """EMA'd packed Grams + scalar summaries per tracked layer."""
+    decay: float = 0.99
+    mesh: Optional[Mesh] = None
+    axis: str = "model"
+    _state: Dict[str, jax.Array] = field(default_factory=dict)
+    _dims: Dict[str, int] = field(default_factory=dict)
+
+    def update(self, name: str, x: jax.Array) -> None:
+        """x: (d, n) activations/gradients (n = tokens in the batch)."""
+        d = x.shape[0]
+        g = packed_gram(x, self.mesh, self.axis)
+        if name not in self._state:
+            self._state[name] = g
+            self._dims[name] = d
+        else:
+            self._state[name] = self.decay * self._state[name] \
+                + (1.0 - self.decay) * g
+
+    def regime(self, name: str, n_tokens: int, P_: int) -> str:
+        """Which of the paper's algorithm families is optimal for this
+        Gram update (Thm 9) — case 1 is the 1D path used here."""
+        d = self._dims[name]
+        return f"case {choose_algorithm(d, n_tokens, P_, m=1).case}"
+
+    def summaries(self, name: str) -> Dict[str, float]:
+        """trace / frobenius / effective rank (exp of spectral entropy)
+        from the packed EMA (dense rebuild only here, on host demand)."""
+        d = self._dims[name]
+        dense = unpack_tril(self._state[name], d, diag=True,
+                            symmetric=True)
+        evs = jnp.linalg.eigvalsh(dense)
+        evs = jnp.maximum(evs, 0.0)
+        p = evs / jnp.maximum(jnp.sum(evs), 1e-30)
+        ent = -jnp.sum(jnp.where(p > 0, p * jnp.log(p), 0.0))
+        return {
+            "trace": float(jnp.sum(evs)),
+            "fro": float(jnp.sqrt(jnp.sum(evs ** 2))),
+            "effective_rank": float(jnp.exp(ent)),
+            "packed_words": tril_size(d),
+            "dense_words": d * d,
+        }
+
+
+def whitening_factor(monitor: GramMonitor, name: str,
+                     eps: float = 1e-5) -> jax.Array:
+    """G^{-1/2} from the EMA'd packed Gram (K-FAC-style factor)."""
+    d = monitor._dims[name]
+    dense = unpack_tril(monitor._state[name], d, diag=True,
+                        symmetric=True)
+    evs, vecs = jnp.linalg.eigh(dense)
+    inv_sqrt = jnp.where(evs > eps, jax.lax.rsqrt(evs + eps), 0.0)
+    return (vecs * inv_sqrt[None]) @ vecs.T

@@ -1,0 +1,188 @@
+"""Multi-device correctness checks for the parallel algorithms.
+
+Run as a subprocess with a fake device count (tests must NOT set
+XLA_FLAGS globally — see dryrun rules), e.g.::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=12 \
+        python tests/dist_checks.py --suite 2d --c 3
+
+Prints ``OK <suite>`` on success; nonzero exit on failure.
+"""
+import argparse
+import os
+import sys
+
+import numpy as np
+
+
+def _mesh(shape, names):
+    import jax
+    return jax.make_mesh(shape, names)
+
+
+def check_1d(P: int) -> None:
+    import jax.numpy as jnp
+
+    from repro.core.onedim import (pack_for_1d_symm, symm_1d, syr2k_1d,
+                                   syrk_1d, unpack_1d_result)
+    rng = np.random.default_rng(0)
+    n1, n2 = 24, 8 * P
+    A = rng.standard_normal((n1, n2)).astype(np.float32)
+    B = rng.standard_normal((n1, n2)).astype(np.float32)
+    mesh = _mesh((P,), ("x",))
+
+    out = np.asarray(syrk_1d(jnp.asarray(A), mesh))
+    got = unpack_1d_result(out, n1)
+    np.testing.assert_allclose(got, np.tril(A @ A.T), rtol=2e-4, atol=2e-4)
+
+    out = np.asarray(syr2k_1d(jnp.asarray(A), jnp.asarray(B), mesh))
+    got = unpack_1d_result(out, n1)
+    np.testing.assert_allclose(got, np.tril(A @ B.T + B @ A.T), rtol=2e-4,
+                               atol=2e-4)
+
+    S = rng.standard_normal((n1, n1)).astype(np.float32)
+    S = np.tril(S) + np.tril(S, -1).T
+    packed = pack_for_1d_symm(S, P)
+    got = np.asarray(symm_1d(jnp.asarray(packed), jnp.asarray(B), n1, mesh))
+    np.testing.assert_allclose(got, S @ B, rtol=2e-4, atol=2e-4)
+    print(f"OK 1d P={P}")
+
+
+def check_2d(c: int) -> None:
+    import jax.numpy as jnp
+
+    from repro.core.twodim import (assemble_sym, collect_rows, distribute_rows,
+                                   distribute_sym, make_2d_plan, symm_2d,
+                                   syr2k_2d, syrk_2d)
+    P = c * (c + 1)
+    rng = np.random.default_rng(1)
+    n1, n2 = 4 * c * c, 3 * (c + 1)
+    plan = make_2d_plan(c, n1, n2)
+    A = rng.standard_normal((n1, n2)).astype(np.float32)
+    B = rng.standard_normal((n1, n2)).astype(np.float32)
+    mesh = _mesh((P,), ("x",))
+
+    a_dist = jnp.asarray(distribute_rows(A, plan))
+    assert np.allclose(collect_rows(np.asarray(a_dist), plan), A)
+    off, diag = syrk_2d(a_dist, plan, mesh)
+    got = assemble_sym(np.asarray(off), np.asarray(diag), plan)
+    np.testing.assert_allclose(got, np.tril(A @ A.T), rtol=2e-4, atol=2e-4)
+
+    b_dist = jnp.asarray(distribute_rows(B, plan))
+    off, diag = syr2k_2d(a_dist, b_dist, plan, mesh)
+    got = assemble_sym(np.asarray(off), np.asarray(diag), plan)
+    np.testing.assert_allclose(got, np.tril(A @ B.T + B @ A.T), rtol=2e-4,
+                               atol=2e-4)
+
+    S = rng.standard_normal((n1, n1)).astype(np.float32)
+    S = np.tril(S) + np.tril(S, -1).T
+    s_off, s_diag = distribute_sym(S, plan)
+    c_dist = symm_2d(jnp.asarray(s_off), jnp.asarray(s_diag), b_dist, plan,
+                     mesh)
+    got = collect_rows(np.asarray(c_dist), plan)
+    np.testing.assert_allclose(got, S @ B, rtol=2e-4, atol=2e-4)
+    print(f"OK 2d c={c} P={P}")
+
+
+def check_3d(c: int, p2: int, nsteps: int) -> None:
+    import jax.numpy as jnp
+
+    from repro.core.threedim import (distribute_3d_sym, distribute_rows_3d,
+                                     flat_tb_size, gather_3d_sym, symm_3d,
+                                     syr2k_3d, syrk_3d)
+    from repro.core.twodim import collect_rows, make_2d_plan
+    import functools
+    import jax
+    from jax.sharding import PartitionSpec as P_
+
+    p1 = c * (c + 1)
+    rng = np.random.default_rng(2)
+    n1 = 2 * c * c
+    n2 = 2 * (c + 1) * p2 * max(nsteps, 1)
+    n2s = n2 // p2
+    plan = make_2d_plan(c, n1, n2s)
+    A = rng.standard_normal((n1, n2)).astype(np.float32)
+    B = rng.standard_normal((n1, n2)).astype(np.float32)
+    mesh = _mesh((p1, p2), ("tb", "rep"))
+
+    if nsteps == 1:
+        a_dist = jnp.asarray(distribute_rows_3d(A, plan, p2))
+        out = syrk_3d(a_dist, plan, mesh)
+        got = gather_3d_sym(np.asarray(out), plan)
+        np.testing.assert_allclose(got, np.tril(A @ A.T), rtol=2e-4,
+                                   atol=2e-4)
+        b_dist = jnp.asarray(distribute_rows_3d(B, plan, p2))
+        out = syr2k_3d(a_dist, b_dist, plan, mesh)
+        got = gather_3d_sym(np.asarray(out), plan)
+        np.testing.assert_allclose(got, np.tril(A @ B.T + B @ A.T),
+                                   rtol=2e-4, atol=2e-4)
+        # SYMM 3D
+        S = rng.standard_normal((n1, n1)).astype(np.float32)
+        S = np.tril(S) + np.tril(S, -1).T
+        s_flat = jnp.asarray(distribute_3d_sym(S, plan, p2))
+        c_dist = symm_3d(s_flat, b_dist, plan, mesh)
+        # reassemble: each slice l holds C columns of its slice
+        cd = np.asarray(c_dist)  # (p1, p2, c, nb, w2)
+        C = np.zeros((n1, n2), np.float32)
+        for l in range(p2):
+            C[:, l * n2s:(l + 1) * n2s] = collect_rows(cd[:, l], plan)
+        np.testing.assert_allclose(C, S @ B, rtol=2e-4, atol=2e-4)
+        print(f"OK 3d c={c} p2={p2}")
+    else:
+        # limited-memory variants
+        from repro.core.threedim import (symm_3d_limited_local,
+                                         syrk_3d_limited_local)
+        a_dist = jnp.asarray(distribute_rows_3d(A, plan, p2, nsteps=nsteps))
+        bchunk_plan = make_2d_plan(c, n1, n2s // nsteps)
+
+        f = functools.partial(syrk_3d_limited_local, plan=bchunk_plan,
+                              tb_axis="tb", rep_axis="rep", p2=p2)
+        out = jax.jit(jax.shard_map(
+            lambda a: f(a[0, 0])[None, None], mesh=mesh,
+            in_specs=P_("tb", "rep"), out_specs=P_("tb", "rep")))(a_dist)
+        got = gather_3d_sym(np.asarray(out), bchunk_plan)
+        np.testing.assert_allclose(got, np.tril(A @ A.T), rtol=2e-4,
+                                   atol=2e-4)
+
+        S = rng.standard_normal((n1, n1)).astype(np.float32)
+        S = np.tril(S) + np.tril(S, -1).T
+        s_flat = jnp.asarray(distribute_3d_sym(S, bchunk_plan, p2))
+        b_dist = jnp.asarray(distribute_rows_3d(B, plan, p2, nsteps=nsteps))
+        g = functools.partial(symm_3d_limited_local, plan=bchunk_plan,
+                              tb_axis="tb", rep_axis="rep")
+        c_out = jax.jit(jax.shard_map(
+            lambda a, b: g(a[0, 0], b[0, 0])[None, None], mesh=mesh,
+            in_specs=(P_("tb", "rep"),) * 2,
+            out_specs=P_("tb", "rep")))(s_flat, b_dist)
+        cd = np.asarray(c_out)  # (p1, p2, nsteps, c, nb, bw)
+        C = np.zeros((n1, n2), np.float32)
+        bwidth = n2s // nsteps
+        for l in range(p2):
+            for t in range(nsteps):
+                Cs = collect_rows(cd[:, l, t], bchunk_plan)
+                C[:, l * n2s + t * bwidth: l * n2s + (t + 1) * bwidth] = Cs
+        np.testing.assert_allclose(C, S @ B, rtol=2e-4, atol=2e-4)
+        print(f"OK 3d-limited c={c} p2={p2} nsteps={nsteps}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", required=True,
+                    choices=["1d", "2d", "3d", "3d-limited"])
+    ap.add_argument("--P", type=int, default=4)
+    ap.add_argument("--c", type=int, default=2)
+    ap.add_argument("--p2", type=int, default=2)
+    ap.add_argument("--nsteps", type=int, default=2)
+    args = ap.parse_args()
+    if args.suite == "1d":
+        check_1d(args.P)
+    elif args.suite == "2d":
+        check_2d(args.c)
+    elif args.suite == "3d":
+        check_3d(args.c, args.p2, 1)
+    else:
+        check_3d(args.c, args.p2, args.nsteps)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,133 @@
+"""Per-architecture smoke tests: reduced same-family configs run one
+forward/train step and one prefill+decode step on CPU, asserting output
+shapes and finiteness (the FULL configs are exercised only via the
+dry-run ShapeDtypeStruct lowering)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.configs.shapes import SHAPES, cell_applicable, input_specs
+from repro.models.model import (decode_step, init_cache, init_params,
+                                lm_loss, prefill)
+
+
+def _batch(cfg, B, S, seed=0, with_labels=True):
+    rng = np.random.default_rng(seed)
+    batch = {}
+    s_tot = S
+    if cfg.frontend == "embeddings":
+        batch["embeds"] = jnp.asarray(
+            rng.standard_normal((B, S, cfg.d_model)), jnp.bfloat16)
+    else:
+        batch["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+        if cfg.frontend == "vlm":
+            batch["patch_embeds"] = jnp.asarray(
+                rng.standard_normal((B, cfg.n_frontend_tokens, cfg.d_model)),
+                jnp.bfloat16)
+            s_tot = S + cfg.n_frontend_tokens
+    if with_labels:
+        batch["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab, (B, s_tot)), jnp.int32)
+    return batch, s_tot
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_smoke(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, jax.random.key(0))
+    batch, _ = _batch(cfg, B=2, S=32)
+    loss, grads = jax.jit(jax.value_and_grad(
+        lambda p: lm_loss(cfg, p, batch, chunk=16)))(params)
+    assert np.isfinite(float(loss)), arch
+    for leaf in jax.tree.leaves(grads):
+        assert np.isfinite(np.asarray(leaf, np.float32)).all(), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_serve_smoke(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, jax.random.key(1))
+    batch, s_tot = _batch(cfg, B=2, S=16, with_labels=False)
+    logits, cache = jax.jit(
+        lambda p, b: prefill(cfg, p, b, s_max=32))(params, batch)
+    assert logits.shape[0] == 2 and logits.shape[-1] == cfg.vocab
+    assert np.isfinite(np.asarray(logits)).all(), arch
+    if cfg.frontend == "embeddings":
+        tok = jnp.zeros((2, 1, cfg.d_model), jnp.bfloat16)
+    else:
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    pos = jnp.full((2, 1), s_tot, jnp.int32)
+    logits2, cache2 = jax.jit(
+        lambda p, t, po, c: decode_step(cfg, p, t, po, c))(params, tok, pos,
+                                                           cache)
+    assert logits2.shape == (2, 1, cfg.vocab)
+    assert np.isfinite(np.asarray(logits2)).all(), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The FULL configs carry the exact published numbers."""
+    cfg = get_config(arch)
+    expected = {
+        "musicgen_large": (48, 2048, 32, 32, 8192, 2048),
+        "granite_20b": (52, 6144, 48, 1, 24576, 49152),
+        "gemma3_12b": (48, 3840, 16, 8, 15360, 262144),
+        "gemma2_9b": (42, 3584, 16, 8, 14336, 256000),
+        "stablelm_1_6b": (24, 2048, 32, 32, 5632, 100352),
+        "xlstm_350m": (24, 1024, 4, 4, 0, 50304),
+        "deepseek_v2_236b": (60, 5120, 128, 128, 12288, 102400),
+        "deepseek_v3_671b": (61, 7168, 128, 128, 18432, 129280),
+        "pixtral_12b": (40, 5120, 32, 8, 14336, 131072),
+        "jamba_v0_1_52b": (32, 4096, 32, 8, 14336, 65536),
+    }[arch.replace("-", "_").replace(".", "_")]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff,
+           cfg.vocab)
+    assert got == expected, (arch, got, expected)
+    # MoE assignments
+    if arch == "deepseek_v2_236b":
+        assert cfg.moe.n_experts == 160 and cfg.moe.top_k == 6
+        assert cfg.moe.d_ff_expert == 1536 and cfg.mla.kv_lora == 512
+    if arch == "deepseek_v3_671b":
+        assert cfg.moe.n_experts == 256 and cfg.moe.top_k == 8
+        assert cfg.moe.d_ff_expert == 2048 and cfg.mtp
+    if arch == "jamba_v0_1_52b":
+        assert cfg.moe.n_experts == 16 and cfg.moe.top_k == 2
+        # 1:7 attention:mamba interleave
+        mixers = [b.mixer for b in cfg.pattern]
+        assert mixers.count("attn") == 1 and len(mixers) == 8
+
+
+def test_shape_cells():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["long_500k"].seq_len == 524288
+    xl = get_config("xlstm_350m")
+    assert cell_applicable(xl, "long_500k")
+    assert cell_applicable(get_config("jamba_v0_1_52b"), "long_500k")
+    assert not cell_applicable(get_config("granite_20b"), "long_500k")
+    assert not cell_applicable(get_config("gemma3_12b"), "long_500k")
+
+
+def test_input_specs_shapes():
+    cfg = get_config("stablelm_1_6b")
+    sp = input_specs(cfg, "train_4k")
+    assert sp["tokens"].shape == (256, 4096)
+    sp = input_specs(cfg, "decode_32k")
+    assert sp["token"].shape == (128, 1)
+    # cache is a ShapeDtypeStruct pytree with the full 32k length
+    k = sp["cache"]["periods"]["b0"]["mixer"]["k"] \
+        if "mixer" in str(sp["cache"]) else None
+    leaves = jax.tree.leaves(sp["cache"])
+    assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+    assert any(32768 in l.shape for l in leaves)
+    # musicgen embeds frontend
+    mg = get_config("musicgen_large")
+    sp = input_specs(mg, "train_4k")
+    assert sp["embeds"].shape == (256, 4096, 2048)
+    # pixtral vlm: patches + text = 4096
+    px = get_config("pixtral_12b")
+    sp = input_specs(px, "train_4k")
+    assert sp["tokens"].shape[1] + sp["patch_embeds"].shape[1] == 4096

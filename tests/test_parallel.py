@@ -1,0 +1,94 @@
+"""Parallel algorithm tests.  Multi-device numerics run in subprocesses so
+the fake-device XLA flag never leaks into this process (smoke tests and
+benches must see 1 device — see dryrun rules)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core.dispatch import choose_algorithm, largest_c_grid
+from repro.core.lower_bounds import memory_independent_lower_bound
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(suite: str, ndev: int, **kw) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    cmd = [sys.executable, os.path.join(ROOT, "tests", "dist_checks.py"),
+           "--suite", suite]
+    for k, v in kw.items():
+        cmd += [f"--{k}", str(v)]
+    out = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, f"{suite} failed:\n{out.stdout}\n{out.stderr}"
+    return out.stdout
+
+
+@pytest.mark.parametrize("P", [4, 8])
+def test_1d_algorithms(P):
+    assert f"OK 1d P={P}" in _run("1d", P, P=P)
+
+
+@pytest.mark.parametrize("c", [2, 3])
+def test_2d_algorithms(c):
+    assert f"OK 2d c={c}" in _run("2d", c * (c + 1), c=c)
+
+
+def test_3d_algorithms():
+    assert "OK 3d c=2 p2=2" in _run("3d", 12, c=2, p2=2)
+
+
+def test_3d_limited_memory():
+    assert "OK 3d-limited" in _run("3d-limited", 12, c=2, p2=2, nsteps=2)
+
+
+# ---------------------------------------------------------------------------
+# dispatch (§VIII-D) — pure logic, no devices needed
+# ---------------------------------------------------------------------------
+def test_largest_c_grid():
+    assert largest_c_grid(6) == 2
+    assert largest_c_grid(12) == 3
+    assert largest_c_grid(20) == 4
+    assert largest_c_grid(256) == 15   # 15*16=240 <= 256
+    assert largest_c_grid(512) == 22   # 22*23=506 <= 512
+
+
+def test_choose_1d_regime():
+    ch = choose_algorithm(n1=1024, n2=65536, P=8, m=1)
+    assert ch.kind == "1d" and ch.case == 1
+    # words ~ n1^2/2, matches bound leading order
+    assert ch.predicted_words <= 1.1 * (ch.lower_bound
+                                        + 1024 * 1025 / 2 / 8 + 1024 * 65536 / 8)
+
+
+def test_choose_2d_regime():
+    ch = choose_algorithm(n1=65536, n2=128, P=12, m=1)
+    assert ch.kind == "2d" and ch.case == 2 and ch.c == 3
+    assert ch.idle == 0
+
+
+def test_choose_3d_regime():
+    ch = choose_algorithm(n1=4096, n2=4096, P=4096, m=1)
+    assert ch.kind == "3d" and ch.case == 3
+    assert ch.p1 * ch.p2 <= 4096
+    assert ch.p1 == ch.c * (ch.c + 1)
+
+
+def test_choose_limited_memory():
+    # force tiny memory: 3D would need ~ n1^2/(2 p1) + ...
+    ch = choose_algorithm(n1=32768, n2=1024, P=240, m=1, M=1 << 22)
+    assert ch.kind == "3d-limited"
+    assert ch.b >= 1 and ch.p1 * ch.p2 <= 240
+
+
+def test_optimality_ratio_close_to_one():
+    # in each regime the predicted words should track the memory-independent
+    # lower bound's W term within a modest constant
+    for (n1, n2, P, m) in [(512, 1 << 16, 8, 1), (1 << 16, 256, 12, 1),
+                           (8192, 8192, 1980, 1)]:
+        ch = choose_algorithm(n1, n2, P, m)
+        W = memory_independent_lower_bound(n1, n2, P, m).W
+        assert ch.predicted_words <= 2.0 * W, (ch, W)

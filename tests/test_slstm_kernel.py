@@ -1,0 +1,56 @@
+"""Pallas sLSTM kernel vs the models/ssm sequential oracle
+(interpret mode; shape/dtype sweep per the kernel test policy)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.slstm import hbm_traffic_bytes, slstm_scan
+from repro.models import ssm
+
+
+def _gates(key, b, s, d, scale=2.5):
+    ks = jax.random.split(key, 4)
+    return [jax.random.normal(ks[i], (b, s, d), jnp.float32)
+            * (scale if i in (1, 2) else 1.0) for i in range(4)]
+
+
+@pytest.mark.parametrize("b,s,d,bd", [
+    (1, 64, 128, 128),
+    (2, 128, 256, 128),
+    (1, 96, 64, 64),       # s not a power of two
+])
+def test_kernel_matches_seq_oracle(b, s, d, bd):
+    z, ig, fg, og = _gates(jax.random.key(0), b, s, d)
+    st = {"c": jnp.zeros((b, d)), "n": jnp.ones((b, d)),
+          "m": jnp.zeros((b, d))}
+    y_ref, st_ref = ssm._slstm_seq(z, ig, fg, og, st)
+    y, c1, n1, m1 = slstm_scan(z, ig, fg, og, st["c"], st["n"], st["m"],
+                               bd=bd, interpret=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(st_ref["c"]),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(n1), np.asarray(st_ref["n"]),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(st_ref["m"]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_kernel_warm_state():
+    b, s, d = 1, 64, 64
+    z, ig, fg, og = _gates(jax.random.key(1), b, s, d)
+    st = {"c": jnp.full((b, d), 0.5), "n": jnp.full((b, d), 1.2),
+          "m": jnp.full((b, d), 0.3)}
+    y_ref, _ = ssm._slstm_seq(z, ig, fg, og, st)
+    y, *_ = slstm_scan(z, ig, fg, og, st["c"], st["n"], st["m"],
+                       bd=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_traffic_model_saving_grows_with_s():
+    t4k = hbm_traffic_bytes(16, 4096, 1024)
+    t32k = hbm_traffic_bytes(2, 32768, 1024)
+    assert t4k["saving"] > 10
+    assert t32k["saving"] > t4k["saving"]

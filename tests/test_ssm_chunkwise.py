@@ -1,0 +1,127 @@
+"""Chunkwise/parallel recurrent mixers vs their sequential oracles.
+
+The §Perf hillclimb replaced S-trip time scans with chunkwise (mLSTM),
+associative-scan (sLSTM), and chunked-associative (Mamba) forms.  These
+must be numerically equivalent — same stabilizers, fp reassociation
+only."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ssm
+from repro.models.common import ArchConfig
+
+
+def _mk_qkvg(key, b, s, h, hd, gate_scale=3.0):
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, h, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, h, hd), jnp.float32)
+    ig = gate_scale * jax.random.normal(ks[3], (b, s, h), jnp.float32)
+    fg = gate_scale * jax.random.normal(ks[4], (b, s, h), jnp.float32)
+    return q, k, v, ig, fg
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("s", [256, 512])
+def test_mlstm_chunkwise_matches_seq(seed, s):
+    b, h, hd = 2, 3, 16
+    q, k, v, ig, fg = _mk_qkvg(jax.random.key(seed), b, s, h, hd)
+    st = {"C": jnp.zeros((b, h, hd, hd)), "n": jnp.zeros((b, h, hd)),
+          "m": jnp.full((b, h), -1e30)}
+    y_ref, st_ref = ssm._mlstm_seq(q, k, v, ig, fg, st)
+    y_chk, st_chk = ssm._mlstm_chunkwise(q, k, v, ig, fg, st, chunk=128)
+    np.testing.assert_allclose(np.asarray(y_chk), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+    for key_ in ("C", "n", "m"):
+        np.testing.assert_allclose(np.asarray(st_chk[key_]),
+                                   np.asarray(st_ref[key_]),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_mlstm_chunkwise_nonzero_initial_state():
+    """Prefill continuation: carry a warm state across the boundary."""
+    b, s, h, hd = 1, 256, 2, 8
+    q, k, v, ig, fg = _mk_qkvg(jax.random.key(7), b, 2 * s, h, hd)
+    st0 = {"C": jnp.zeros((b, h, hd, hd)), "n": jnp.zeros((b, h, hd)),
+           "m": jnp.full((b, h), -1e30)}
+    y_all, _ = ssm._mlstm_seq(q, k, v, ig, fg, st0)
+    # first half sequential, second half chunkwise from the carried state
+    y1, st1 = ssm._mlstm_seq(*[a[:, :s] for a in (q, k, v, ig, fg)], st0)
+    y2, _ = ssm._mlstm_chunkwise(*[a[:, s:] for a in (q, k, v, ig, fg)],
+                                 st1, chunk=128)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y_all[:, s:]),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_slstm_parallel_matches_seq(seed):
+    b, s, d = 2, 200, 24
+    ks = jax.random.split(jax.random.key(seed), 4)
+    z, ig, fg, og = (jax.random.normal(ks[i], (b, s, d), jnp.float32)
+                     * (3.0 if i in (1, 2) else 1.0) for i in range(4))
+    st = {"c": jnp.zeros((b, d)), "n": jnp.ones((b, d)),
+          "m": jnp.zeros((b, d))}
+    y_ref, st_ref = ssm._slstm_seq(z, ig, fg, og, st)
+    y_par, st_par = ssm._slstm_parallel(z, ig, fg, og, st)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+    for key_ in ("c", "n", "m"):
+        np.testing.assert_allclose(np.asarray(st_par[key_]),
+                                   np.asarray(st_ref[key_]),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_slstm_parallel_warm_state():
+    b, s, d = 1, 64, 8
+    ks = jax.random.split(jax.random.key(9), 4)
+    z, ig, fg, og = (jax.random.normal(ks[i], (b, s, d)) * 2.0
+                     for i in range(4))
+    st = {"c": jnp.full((b, d), 0.7), "n": jnp.full((b, d), 1.3),
+          "m": jnp.full((b, d), 0.4)}
+    y_ref, _ = ssm._slstm_seq(z, ig, fg, og, st)
+    y_par, _ = ssm._slstm_parallel(z, ig, fg, og, st)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("s", [128, 256])
+def test_selective_scan_chunked_matches_seq(s):
+    b, di, ds = 2, 12, 4
+    ks = jax.random.split(jax.random.key(1), 5)
+    u = jax.random.normal(ks[0], (b, s, di))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, di)))
+    A = -jnp.exp(jax.random.normal(ks[2], (di, ds)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, ds))
+    C = jax.random.normal(ks[4], (b, s, ds))
+    D = jnp.ones((di,))
+    h0 = jnp.zeros((b, di, ds))
+    y_ref, h_ref = ssm._selective_scan_seq(u, dt, A, B, C, D, h0)
+    y_chk, h_chk = ssm._selective_scan(u, dt, A, B, C, D, h0, chunk=32)
+    np.testing.assert_allclose(np.asarray(y_chk), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h_chk), np.asarray(h_ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_mlstm_gradients_flow_through_chunkwise():
+    b, s, h, hd = 1, 256, 2, 8
+    q, k, v, ig, fg = _mk_qkvg(jax.random.key(4), b, s, h, hd)
+    st = {"C": jnp.zeros((b, h, hd, hd)), "n": jnp.zeros((b, h, hd)),
+          "m": jnp.full((b, h), -1e30)}
+
+    def loss_chunk(v_):
+        y, _ = ssm._mlstm_chunkwise(q, k, v_, ig, fg, st, chunk=128)
+        return jnp.sum(y ** 2)
+
+    def loss_seq(v_):
+        y, _ = ssm._mlstm_seq(q, k, v_, ig, fg, st)
+        return jnp.sum(y ** 2)
+
+    g1 = jax.grad(loss_chunk)(v)
+    g2 = jax.grad(loss_seq)(v)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                               rtol=5e-3, atol=5e-3)

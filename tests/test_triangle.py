@@ -1,0 +1,172 @@
+"""Tests for finite fields, triangle block partitions, and diagonal
+assignment (paper §VI)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.gf import GF, get_field, prime_power
+from repro.core.lower_bounds import (mem_independent_case,
+                                     memory_independent_lower_bound,
+                                     sequential_reads_lower_bound)
+from repro.core.triangle import (affine_partition, assign_diagonals,
+                                 cyclic_partition, optimal_partition,
+                                 projective_partition,
+                                 refined_cyclic_partition,
+                                 steiner_divisibility, trivial_partition,
+                                 validate_partition)
+
+PRIME_POWERS = [2, 3, 4, 5, 7, 8, 9, 11, 13]
+
+
+# ---------------------------------------------------------------------------
+# GF(q)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("q", PRIME_POWERS + [16, 25, 27])
+def test_gf_field_axioms(q):
+    F = get_field(q)
+    add, mul = F.add_table, F.mul_table
+    # commutativity + identity
+    assert (add == add.T).all() and (mul == mul.T).all()
+    assert (add[0] == np.arange(q)).all()
+    assert (mul[1] == np.arange(q)).all()
+    assert (mul[0] == 0).all()
+    # every nonzero element invertible
+    for a in range(1, q):
+        assert (mul[a] == 1).sum() == 1
+    # associativity + distributivity on samples
+    rng = np.random.default_rng(q)
+    for _ in range(20):
+        a, b, c = rng.integers(0, q, 3)
+        assert add[add[a, b], c] == add[a, add[b, c]]
+        assert mul[mul[a, b], c] == mul[a, mul[b, c]]
+        assert mul[a, add[b, c]] == add[mul[a, b], mul[a, c]]
+
+
+def test_prime_power():
+    assert prime_power(8) == (2, 3)
+    assert prime_power(9) == (3, 2)
+    assert prime_power(7) == (7, 1)
+    assert prime_power(12) is None
+    assert prime_power(1) is None
+
+
+# ---------------------------------------------------------------------------
+# constructions
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("c", [2, 3, 4, 5, 7, 8, 9])
+def test_affine_plane(c):
+    p = affine_partition(c)
+    validate_partition(p.n, p.blocks)
+    assert p.n == c * c and p.num_blocks == c * c + c
+    assert all(len(R) == c for R in p.blocks)
+    # Steiner (c^2, c, 2): each index in (n-1)/(r-1) = c+1 blocks
+    counts = np.zeros(p.n, int)
+    for R in p.blocks:
+        counts[R] += 1
+    assert (counts == c + 1).all()
+
+
+@pytest.mark.parametrize("c", [2, 3, 4, 5])
+def test_projective_plane(c):
+    p = projective_partition(c)
+    validate_partition(p.n, p.blocks)
+    assert p.n == c * c + c + 1 == p.num_blocks  # de Bruijn–Erdős minimum
+    assert all(len(R) == c + 1 for R in p.blocks)
+    # projective planes are the unique balanced minimal clique partitions
+    # (paper Thm 13) and every block gets exactly one diagonal
+    assert all(len(d) == 1 for d in p.diag)
+
+
+def test_higher_dimensional_spaces():
+    p = affine_partition(3, alpha=3)       # lines of A^3(F_3): Steiner(27,3,2)
+    validate_partition(p.n, p.blocks)
+    assert p.n == 27 and all(len(R) == 3 for R in p.blocks)
+    p = projective_partition(2, alpha=3)   # Steiner(15,3,2) — paper appendix
+    validate_partition(p.n, p.blocks)
+    assert p.n == 15 and all(len(R) == 3 for R in p.blocks)
+    assert p.num_blocks == 35
+
+
+@pytest.mark.parametrize("c,k", [(5, 4), (7, 5), (5, 5), (11, 4), (7, 3)])
+def test_cyclic_family(c, k):
+    p = cyclic_partition(c, k)
+    validate_partition(p.n, p.blocks)
+    assert p.n == c * k
+
+
+def test_cyclic_invalid():
+    with pytest.raises(ValueError):
+        cyclic_partition(4, 4)  # gcd(2,4) != 1
+
+
+@pytest.mark.parametrize("c,k,M,m", [(29, 10, 128, 1), (47, 14, 200, 2)])
+def test_refined_cyclic(c, k, M, m):
+    p = refined_cyclic_partition(c, k, M, m)
+    validate_partition(p.n, p.blocks, n_real=p.n_real)
+    assert p.n_real == c * k
+    # memory constraint respected by every block
+    r_cap = int(math.isqrt(2 * M + m * m)) - m
+    for R in p.blocks:
+        assert len(R) <= max(r_cap, k)
+
+
+def test_diagonal_assignment_covers_once():
+    for c in [3, 4, 5, 7]:
+        p = affine_partition(c)
+        ds = [d for dl in p.diag for d in dl]
+        assert len(ds) == len(set(ds)) == p.n
+        for k, dl in enumerate(p.diag):
+            assert len(dl) <= 1           # Steiner system: spread assignment
+            for d in dl:
+                assert d in p.blocks[k]
+    # trivial partition: all diagonals on the single block
+    p = trivial_partition(9)
+    assert sorted(p.diag[0]) == list(range(9))
+
+
+def test_intersection_structure():
+    # lines meet in <= 1 point — the property the 2D all-to-all routing uses
+    p = affine_partition(4)
+    t = p.intersection_table()
+    assert t.shape == (20, 20)
+    # affine plane: each pair of non-parallel lines meets exactly once;
+    # among c(c+1) lines, each line is parallel to c-1 others
+    for a in range(p.num_blocks):
+        misses = sum(1 for b in range(p.num_blocks) if b != a and t[a, b] < 0)
+        assert misses == 4 - 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(n1=st.integers(20, 400), logM=st.integers(5, 10),
+       m=st.sampled_from([1, 2]))
+def test_optimal_partition_always_valid(n1, logM, m):
+    M = 1 << logM
+    p = optimal_partition(n1, M, m)
+    validate_partition(p.n, p.blocks, n_real=min(p.n_real, p.n))
+    assert p.n_real >= n1 or p.construction == "trivial"
+    # every block fits fast memory: r(r-1)/2 + 1 + m*r <= M (or trivial)
+    if p.construction != "trivial":
+        for R in p.blocks:
+            r = len(R)
+            assert r * (r - 1) // 2 + 1 + m * r <= M
+
+
+def test_steiner_divisibility():
+    assert steiner_divisibility(16, 4)       # affine c=4
+    assert steiner_divisibility(13, 4)       # projective c=3
+    assert steiner_divisibility(15, 3)       # Steiner(15,3,2)
+    assert not steiner_divisibility(17, 4)
+
+
+def test_lower_bound_cases():
+    # case boundaries of Theorem 9
+    assert mem_independent_case(100, 1000, 4, 1) == 1       # n1<=mn2, small P
+    assert mem_independent_case(1000, 10, 4, 1) == 2        # mn2<n1, small P
+    assert mem_independent_case(100, 1000, 10**4, 1) == 3   # large P
+    b = memory_independent_lower_bound(1000, 10, 4, 1)
+    assert b.case == 2 and b.bound > 0
+    # sequential bound positive in sane regimes
+    assert sequential_reads_lower_bound(512, 64, 128, 1) > 0
