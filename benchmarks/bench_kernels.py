@@ -14,7 +14,8 @@ from typing import List
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ops, ref
+from repro import blas
+from repro.kernels import ref
 
 
 def _traffic_syrk(n: int, k: int, bm: int, bk: int) -> dict:
@@ -40,17 +41,19 @@ def rows() -> List[dict]:
         B = rng.standard_normal((n, k)).astype(np.float32)
         S = np.tril(rng.standard_normal((n, n)).astype(np.float32))
 
+        tile = (128, 128)
         err_syrk = float(np.abs(
-            np.asarray(ops.syrk(jnp.asarray(A), interpret=True))
+            np.asarray(blas.syrk(jnp.asarray(A), tile=tile,
+                                 interpret=True))
             - np.asarray(ref.syrk_ref(jnp.asarray(A)))).max())
         err_syr2k = float(np.abs(
-            np.asarray(ops.syr2k(jnp.asarray(A), jnp.asarray(B),
-                                 interpret=True))
+            np.asarray(blas.syr2k(jnp.asarray(A), jnp.asarray(B),
+                                  tile=tile, interpret=True))
             - np.asarray(ref.syr2k_ref(jnp.asarray(A),
                                        jnp.asarray(B)))).max())
         err_symm = float(np.abs(
-            np.asarray(ops.symm(jnp.asarray(S), jnp.asarray(B),
-                                interpret=True))
+            np.asarray(blas.symm(jnp.asarray(S), jnp.asarray(B),
+                                 tile=tile, interpret=True))
             - np.asarray(ref.symm_ref(jnp.asarray(S),
                                       jnp.asarray(B)))).max())
         t = _traffic_syrk(n, k, bm=128, bk=128)

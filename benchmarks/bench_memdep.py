@@ -24,6 +24,7 @@ import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.analysis.hlo_cost import analyze_hlo
+from repro.compat import shard_map
 from repro.core.lower_bounds import memory_dependent_parallel_lower_bound
 from repro.core.twodim import make_2d_plan
 from repro.core.threedim import syrk_3d_limited_local
@@ -43,7 +44,7 @@ for p2, nsteps in ((1, 4), (2, 2), (2, 4), (4, 1), (4, 2)):
                              jnp.float32)
     f = functools.partial(syrk_3d_limited_local, plan=plan, tb_axis="tb",
                           rep_axis="rep", p2=p2)
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(shard_map(
         lambda x: f(x[0, 0])[None, None], mesh=mesh,
         in_specs=P("tb", "rep"), out_specs=P("tb", "rep")))
     hlo = fn.lower(a).compile().as_text()

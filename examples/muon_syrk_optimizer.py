@@ -58,8 +58,9 @@ def ns_naive_1d(x, steps=5):
             return a * v + (b * s + c * (s @ s)) @ v
         return jax.lax.fori_loop(0, steps, it, x_loc).astype(x.dtype)
 
-    return jax.shard_map(body, mesh=mesh, in_specs=P(None, "model"),
-                         out_specs=P(None, "model"))(x)
+    from repro.compat import shard_map
+    return shard_map(body, mesh=mesh, in_specs=P(None, "model"),
+                     out_specs=P(None, "model"))(x)
 
 
 def wire_bytes(fn, *args):

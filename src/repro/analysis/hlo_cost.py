@@ -117,6 +117,37 @@ _GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 
 
+_CONST_INT_RE = re.compile(r"constant\((-?\d+)\)")
+
+
+def _condition_trip_counts(computations: Dict[str, List["_Op"]]
+                           ) -> Dict[str, int]:
+    """Trip counts inferred from while-condition bodies.
+
+    Older XLA backends do not annotate ``while`` ops with
+    ``known_trip_count``; for ``lax.scan`` loops (induction var starts at
+    0, steps by 1) the bound is the constant in the condition's ROOT
+    ``compare(%ivar, %constant), direction=LT``.
+    """
+    consts: Dict[str, int] = {}
+    for ops in computations.values():
+        for op in ops:
+            if op.opcode == "constant":
+                m = _CONST_INT_RE.search(op.line)
+                if m and op.result_type.startswith(("s32[]", "u32[]",
+                                                    "s64[]", "u64[]")):
+                    consts[op.name] = int(m.group(1))
+    trips: Dict[str, int] = {}
+    for name, ops in computations.items():
+        for op in ops:
+            if op.opcode == "compare" and op.line.startswith("ROOT") \
+                    and "direction=LT" in op.line:
+                operands = _operand_names(op)
+                if len(operands) == 2 and operands[1] in consts:
+                    trips[name] = consts[operands[1]]
+    return trips
+
+
 def parse_hlo_module(hlo_text: str):
     """-> (computations: name -> [_Op], entry_name, symbols: op -> type)."""
     computations: Dict[str, List[_Op]] = {}
@@ -149,7 +180,7 @@ def _operand_names(op: _Op) -> List[str]:
     m = re.search(re.escape(op.opcode) + r"\((.*)$", op.line)
     if not m:
         return []
-    # cut at the matching close paren (operands never contain parens)
+    # cut at the matching close paren (tuple-typed operands nest parens)
     body = m.group(1)
     depth = 1
     for i, ch in enumerate(body):
@@ -160,12 +191,13 @@ def _operand_names(op: _Op) -> List[str]:
             if depth == 0:
                 body = body[:i]
                 break
-    names = []
-    for tok in body.split(","):
-        tok = tok.strip().lstrip("%")
-        if tok:
-            names.append(tok)
-    return names
+    # verbose dialect prints operands with their types
+    # ("dot(f32[8,8]{1,0} %a, ...)"); the value names are the %-sigils
+    names = re.findall(r"%([\w.\-]+)", body)
+    if names:
+        return names
+    # terse dialect: bare comma-separated names
+    return [t.strip().lstrip("%") for t in body.split(",") if t.strip()]
 
 
 def _dot_flops(op: _Op, symbols: Dict[str, str]) -> float:
@@ -290,7 +322,8 @@ def _param_traffic(ops: List[_Op], symbols: Dict[str, str]
 
 
 def _analyze_computation(ops: List[_Op], symbols: Dict[str, str],
-                         fusion_traffic: Dict[str, Dict[int, float]]
+                         fusion_traffic: Dict[str, Dict[int, float]],
+                         cond_trips: Optional[Dict[str, int]] = None
                          ) -> _CompCost:
     cc = _CompCost()
     for op in ops:
@@ -353,7 +386,15 @@ def _analyze_computation(ops: List[_Op], symbols: Dict[str, str],
             if tm:
                 trip = int(tm.group(1))
             else:
-                cc.unknown_trips += 1
+                # no known_trip_count annotation (older XLA): infer the
+                # bound from the condition computation's ROOT compare
+                cm = re.search(r"condition=%?([\w.\-]+)", op.line)
+                inferred = (cond_trips or {}).get(cm.group(1)) \
+                    if cm else None
+                if inferred is not None:
+                    trip = inferred
+                else:
+                    cc.unknown_trips += 1
         for rm in _REF_RE.finditer(op.line):
             attr, target = rm.group(1), rm.group(2)
             targets = []
@@ -382,7 +423,9 @@ def analyze_hlo(hlo_text: str) -> HloCost:
     computations, entry, symbols = parse_hlo_module(hlo_text)
     fusion_traffic = {name: _param_traffic(ops, symbols)
                       for name, ops in computations.items()}
-    costs = {name: _analyze_computation(ops, symbols, fusion_traffic)
+    cond_trips = _condition_trip_counts(computations)
+    costs = {name: _analyze_computation(ops, symbols, fusion_traffic,
+                                        cond_trips)
              for name, ops in computations.items()}
     if entry is None:
         entry = next(iter(computations), None)

@@ -1,0 +1,22 @@
+"""Unified symmetric-BLAS dispatch (the single public entry point).
+
+    from repro import blas
+    c = blas.syrk(a)                        # tril(A·Aᵀ), f32 accumulate
+    c = blas.syrk(a, mesh=mesh)             # comm-optimal 1D/2D/3D path
+    c = blas.symm(s, b, out_dtype=a.dtype)  # sym(S)·B
+
+Every call routes through :func:`repro.core.dispatch.choose_algorithm`
+(paper Thm 9 / §VIII-D) plus backend feasibility: dense jnp for tiny
+shapes and GSPMD fallback, triangular flat-grid Pallas kernels on a
+single accelerator, and the paper's 1D/2D/3D shard_map schedules on a
+mesh.  See api.py for the dtype/fill/batching contracts.
+"""
+from .api import explain, symm, syr2k, syrk
+from .autotune import clear_cache, heuristic_tiles, pick_tiles
+from .routing import PALLAS_MIN_N1, Route, plan_route
+
+__all__ = [
+    "syrk", "syr2k", "symm", "explain",
+    "plan_route", "Route", "PALLAS_MIN_N1",
+    "pick_tiles", "heuristic_tiles", "clear_cache",
+]

@@ -1,0 +1,246 @@
+"""The public symmetric-BLAS surface: ``syrk`` / ``syr2k`` / ``symm``.
+
+One entry point per computation; every call is routed to the best
+execution path for its (shape, dtype, mesh) by
+:func:`repro.blas.routing.plan_route`:
+
+  dense   — fused jnp (tiny shapes, CPU, GSPMD fallback);
+  pallas  — triangular flat-grid TPU kernels (kernels/*.py), tiles from
+            the autotuner;
+  1d/2d/3d — the paper's communication-optimal shard_map schedules when
+            a mesh is present (meshpath.py).
+
+Contracts shared by all paths:
+  * accumulation is always f32; ``out_dtype=None`` (default) returns the
+    f32 accumulation instead of silently downcasting to the input dtype;
+  * leading batch dimensions are supported (vmapped over the packed-tile
+    kernels / dense path; mesh paths apply to unbatched operands and
+    batched mesh calls fall back to GSPMD dense);
+  * SYRK/SYR2K ``fill``: "tril" (dense lower-triangular, default),
+    "full" (symmetrized dense), or "packed" (row-major packed lower
+    triangle, the wire format of the 1D algorithms);
+  * SYMM reads only the lower triangle of its symmetric operand.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.packing import (pack_tril, pack_tril_tiles, pad2d, unpack_tril,
+                            unpack_tril_tiles)
+from ..kernels.symm import symm_tiles
+from ..kernels.syr2k import syr2k_tiles
+from ..kernels.syrk import syrk_tiles
+from . import meshpath
+from .routing import Route, plan_route
+
+_FILLS = ("tril", "full", "packed")
+
+
+def _check_fill(fill: str) -> None:
+    if fill not in _FILLS:
+        raise ValueError(f"fill must be one of {_FILLS}, got {fill!r}")
+
+
+def _out(x: jax.Array, out_dtype) -> jax.Array:
+    return x if out_dtype is None else x.astype(out_dtype)
+
+
+# --------------------------------------------------------------------------
+# fill conversions (all f32 in, f32 out)
+# --------------------------------------------------------------------------
+def _tril_to_fill(tril: jax.Array, fill: str) -> jax.Array:
+    if fill == "tril":
+        return tril
+    if fill == "full":
+        return tril + jnp.tril(tril, -1).swapaxes(-1, -2)
+    return pack_tril(tril)
+
+
+def _packed_to_fill(packed: jax.Array, n1: int, fill: str) -> jax.Array:
+    if fill == "packed":
+        return packed
+    return unpack_tril(packed, n1, diag=True, symmetric=(fill == "full"))
+
+
+# --------------------------------------------------------------------------
+# single-matrix executors
+# --------------------------------------------------------------------------
+def _syrk_dense(a32: jax.Array, fill: str) -> jax.Array:
+    g = a32 @ a32.swapaxes(-1, -2)
+    return g if fill == "full" else _tril_to_fill(jnp.tril(g), fill)
+
+
+def _syr2k_dense(a32: jax.Array, b32: jax.Array, fill: str) -> jax.Array:
+    g = a32 @ b32.swapaxes(-1, -2)
+    g = g + g.swapaxes(-1, -2)
+    return g if fill == "full" else _tril_to_fill(jnp.tril(g), fill)
+
+
+def _symm_dense(a32: jax.Array, b32: jax.Array) -> jax.Array:
+    sym = jnp.tril(a32) + jnp.tril(a32, -1).swapaxes(-1, -2)
+    return sym @ b32
+
+
+def _syrk_pallas(a32: jax.Array, fill: str, tiles: Tuple[int, int],
+                 interpret: Optional[bool]) -> jax.Array:
+    bm, bk = tiles
+    n1 = a32.shape[0]
+    ap = pad2d(a32, bm, bk)
+    packed_tiles = syrk_tiles(ap, bm=bm, bk=bk, interpret=interpret)
+    dense = unpack_tril_tiles(packed_tiles, ap.shape[0], bm,
+                              symmetric=(fill == "full"))[:n1, :n1]
+    if fill == "full":
+        return dense
+    return _tril_to_fill(jnp.tril(dense), fill)
+
+
+def _syr2k_pallas(a32: jax.Array, b32: jax.Array, fill: str,
+                  tiles: Tuple[int, int], interpret: Optional[bool]
+                  ) -> jax.Array:
+    bm, bk = tiles
+    n1 = a32.shape[0]
+    ap, bp = pad2d(a32, bm, bk), pad2d(b32, bm, bk)
+    packed_tiles = syr2k_tiles(ap, bp, bm=bm, bk=bk, interpret=interpret)
+    dense = unpack_tril_tiles(packed_tiles, ap.shape[0], bm,
+                              symmetric=(fill == "full"))[:n1, :n1]
+    if fill == "full":
+        return dense
+    return _tril_to_fill(jnp.tril(dense), fill)
+
+
+def _symm_pallas(a32: jax.Array, b32: jax.Array, tiles: Tuple[int, int],
+                 interpret: Optional[bool]) -> jax.Array:
+    bm, bn = tiles
+    n1, n2 = b32.shape
+    ap = pad2d(jnp.tril(a32), bm, bm)
+    bp = pad2d(b32, bm, bn)
+    packed = pack_tril_tiles(ap, bm)
+    return symm_tiles(packed, bp, bm=bm, bn=bn,
+                      interpret=interpret)[:n1, :n2]
+
+
+# --------------------------------------------------------------------------
+# batching helper
+# --------------------------------------------------------------------------
+def _apply_batched(fn, *arrays):
+    """vmap ``fn`` over flattened leading batch dims (shared by all
+    operands), or call directly for 2-D operands."""
+    lead = arrays[0].shape[:-2]
+    for x in arrays[1:]:
+        if x.shape[:-2] != lead:
+            raise ValueError("operands must share leading batch dims: "
+                             f"{[x.shape for x in arrays]}")
+    if not lead:
+        return fn(*arrays)
+    flat = [x.reshape((-1,) + x.shape[-2:]) for x in arrays]
+    out = jax.vmap(fn)(*flat)
+    return out.reshape(lead + out.shape[1:])
+
+
+# --------------------------------------------------------------------------
+# public API
+# --------------------------------------------------------------------------
+def syrk(a, *, out_dtype=None, fill: str = "tril", mesh=None,
+         axis: Optional[str] = None, tile=None,
+         interpret: Optional[bool] = None) -> jax.Array:
+    """C = A·Aᵀ for A (..., n1, n2), routed per regime.
+
+    ``fill``: "tril" (default), "full", or "packed".  Accumulates in
+    f32; ``out_dtype=None`` returns f32.
+    """
+    _check_fill(fill)
+    a = jnp.asarray(a)
+    n1, n2 = a.shape[-2:]
+    route = plan_route("syrk", n1, n2, dtype=a.dtype, batch=a.ndim > 2,
+                       mesh=mesh, axis=axis, tile=tile, interpret=interpret)
+    a32 = a.astype(jnp.float32)
+    if route.path == "1d":
+        packed = meshpath.syrk_1d_packed(a32, mesh, route.axis)
+        return _out(_packed_to_fill(packed, n1, fill), out_dtype)
+    if route.path == "2d":
+        tril = meshpath.syrk_2d_dense(a32, route.choice.c, mesh, route.axis)
+        return _out(_tril_to_fill(tril, fill), out_dtype)
+    if route.path == "3d":
+        tril = meshpath.syrk_3d_dense(a32, route.choice.c, route.choice.p2,
+                                      mesh)
+        return _out(_tril_to_fill(tril, fill), out_dtype)
+    if route.path == "pallas":
+        fn = functools.partial(_syrk_pallas, fill=fill, tiles=route.tiles,
+                               interpret=interpret)
+        return _out(_apply_batched(fn, a32), out_dtype)
+    return _out(_syrk_dense(a32, fill), out_dtype)
+
+
+def syr2k(a, b, *, out_dtype=None, fill: str = "tril", mesh=None,
+          axis: Optional[str] = None, tile=None,
+          interpret: Optional[bool] = None) -> jax.Array:
+    """C = A·Bᵀ + B·Aᵀ for A, B (..., n1, n2), routed per regime."""
+    _check_fill(fill)
+    a, b = jnp.asarray(a), jnp.asarray(b)
+    if a.shape != b.shape:
+        raise ValueError(f"syr2k operands must match: {a.shape} vs "
+                         f"{b.shape}")
+    n1, n2 = a.shape[-2:]
+    route = plan_route("syr2k", n1, n2, dtype=a.dtype, batch=a.ndim > 2,
+                       mesh=mesh, axis=axis, tile=tile, interpret=interpret)
+    a32, b32 = a.astype(jnp.float32), b.astype(jnp.float32)
+    if route.path == "1d":
+        packed = meshpath.syr2k_1d_packed(a32, b32, mesh, route.axis)
+        return _out(_packed_to_fill(packed, n1, fill), out_dtype)
+    if route.path == "2d":
+        tril = meshpath.syr2k_2d_dense(a32, b32, route.choice.c, mesh,
+                                       route.axis)
+        return _out(_tril_to_fill(tril, fill), out_dtype)
+    if route.path == "3d":
+        tril = meshpath.syr2k_3d_dense(a32, b32, route.choice.c,
+                                       route.choice.p2, mesh)
+        return _out(_tril_to_fill(tril, fill), out_dtype)
+    if route.path == "pallas":
+        fn = functools.partial(_syr2k_pallas, fill=fill, tiles=route.tiles,
+                               interpret=interpret)
+        return _out(_apply_batched(fn, a32, b32), out_dtype)
+    return _out(_syr2k_dense(a32, b32, fill), out_dtype)
+
+
+def symm(a_sym, b, *, out_dtype=None, mesh=None,
+         axis: Optional[str] = None, tile=None,
+         interpret: Optional[bool] = None) -> jax.Array:
+    """C = sym(A)·B for tril-valid A (..., n1, n1) and B (..., n1, n2).
+
+    Only the lower triangle of ``a_sym`` is read (the upper half may
+    hold garbage); the symmetric matrix is never materialized beyond
+    each path's working set.
+    """
+    a_sym, b = jnp.asarray(a_sym), jnp.asarray(b)
+    n1, n2 = b.shape[-2:]
+    if a_sym.shape[-2:] != (n1, n1):
+        raise ValueError(f"symm shapes: a {a_sym.shape} vs b {b.shape}")
+    route = plan_route("symm", n1, n2, dtype=b.dtype, batch=b.ndim > 2,
+                       mesh=mesh, axis=axis, tile=tile, interpret=interpret)
+    a32, b32 = a_sym.astype(jnp.float32), b.astype(jnp.float32)
+    if route.path == "1d":
+        return _out(meshpath.symm_1d_dense(a32, b32, mesh, route.axis),
+                    out_dtype)
+    if route.path == "2d":
+        return _out(meshpath.symm_2d_dense(a32, b32, route.choice.c, mesh,
+                                           route.axis), out_dtype)
+    if route.path == "3d":
+        return _out(meshpath.symm_3d_dense(a32, b32, route.choice.c,
+                                           route.choice.p2, mesh),
+                    out_dtype)
+    if route.path == "pallas":
+        fn = functools.partial(_symm_pallas, tiles=route.tiles,
+                               interpret=interpret)
+        return _out(_apply_batched(fn, a32, b32), out_dtype)
+    return _out(_apply_batched(_symm_dense, a32, b32), out_dtype)
+
+
+def explain(op: str, n1: int, n2: int, *, dtype=jnp.float32, mesh=None,
+            axis: Optional[str] = None) -> str:
+    """Human-readable routing decision for an (op, shape, mesh) triple."""
+    r = plan_route(op, n1, n2, dtype=dtype, mesh=mesh, axis=axis)
+    return r.describe()

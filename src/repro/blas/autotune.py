@@ -1,0 +1,147 @@
+"""(bm, bk) tile selection for the Pallas symmetric kernels.
+
+Two modes:
+  * heuristic (default) — MXU-aligned tiles derived from the problem
+    shape, no measurement;
+  * measured (``tile="auto"``)  — time a small candidate set once and
+    remember the winner in an in-process dict AND an on-disk JSON cache,
+    keyed by (op, shape, dtype, backend), so the search cost is paid at
+    most once per problem class per machine.
+
+The cache location is ``$REPRO_BLAS_CACHE_DIR`` (default
+``~/.cache/repro_blas``).  Disk I/O failures are never fatal — the tuner
+degrades to in-process caching.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+from typing import Callable, Dict, Optional, Tuple
+
+Tiles = Tuple[int, int]
+
+# measured-mode candidates: MXU-aligned, small enough to pad cheaply
+_CANDIDATES: Tuple[Tiles, ...] = ((64, 64), (128, 128), (128, 256),
+                                  (256, 128), (256, 256))
+
+_memory_cache: Dict[str, Tiles] = {}
+
+
+def cache_key(op: str, n1: int, n2: int, dtype, backend: str) -> str:
+    return f"{op}:{n1}x{n2}:{dtype}:{backend}"
+
+
+def _cache_dir() -> str:
+    return os.environ.get(
+        "REPRO_BLAS_CACHE_DIR",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro_blas"))
+
+
+def _cache_path() -> str:
+    return os.path.join(_cache_dir(), "tiles.json")
+
+
+def _load_disk() -> Dict[str, Tiles]:
+    try:
+        with open(_cache_path()) as f:
+            raw = json.load(f)
+        return {k: (int(v[0]), int(v[1])) for k, v in raw.items()
+                if isinstance(v, (list, tuple)) and len(v) == 2}
+    except (OSError, ValueError):
+        return {}
+
+
+def _store_disk(key: str, tiles: Tiles) -> None:
+    """Read-modify-write with an atomic replace; best-effort only."""
+    try:
+        os.makedirs(_cache_dir(), exist_ok=True)
+        data = {k: list(v) for k, v in _load_disk().items()}
+        data[key] = list(tiles)
+        fd, tmp = tempfile.mkstemp(dir=_cache_dir(), suffix=".json")
+        with os.fdopen(fd, "w") as f:
+            json.dump(data, f, indent=0, sort_keys=True)
+        os.replace(tmp, _cache_path())
+    except OSError:
+        pass
+
+
+def clear_cache(disk: bool = False) -> None:
+    """Drop the in-process cache (and optionally the on-disk file)."""
+    _memory_cache.clear()
+    if disk:
+        try:
+            os.remove(_cache_path())
+        except OSError:
+            pass
+
+
+def _round_up_tile(n: int, cap: int = 128, floor: int = 8) -> int:
+    """Smallest power of two >= n (>= floor), capped at ``cap``."""
+    t = floor
+    while t < n and t < cap:
+        t *= 2
+    return min(t, cap)
+
+
+def heuristic_tiles(op: str, n1: int, n2: int) -> Tiles:
+    """Shape-derived MXU-aligned default: full 128 tiles for big
+    problems, shrink-to-fit powers of two for small ones (padding a
+    20-row matrix to 128 would waste 6x the kernel work)."""
+    bm = _round_up_tile(n1)
+    bk = _round_up_tile(n2 if op != "symm" else max(n2, n1))
+    return bm, bk
+
+
+def pick_tiles(op: str, n1: int, n2: int, dtype, backend: str, *,
+               mode: str = "heuristic",
+               runner: Optional[Callable[[int, int], float]] = None,
+               repeats: int = 2) -> Tiles:
+    """Tiles for (op, n1, n2, dtype, backend).
+
+    ``mode="heuristic"``: shape-derived, not cached on disk.
+    ``mode="auto"``: consult the in-process then on-disk cache; on a
+    miss, time ``runner(bm, bk)`` (seconds; the caller provides a
+    blocking executor of the real kernel) over the candidate set and
+    persist the winner.
+    """
+    if mode != "auto":
+        return heuristic_tiles(op, n1, n2)
+    key = cache_key(op, n1, n2, dtype, backend)
+    if key in _memory_cache:
+        return _memory_cache[key]
+    disk = _load_disk()
+    if key in disk:
+        _memory_cache[key] = disk[key]
+        return disk[key]
+    if runner is None:
+        tiles = heuristic_tiles(op, n1, n2)
+        _memory_cache[key] = tiles
+        return tiles
+    best, best_t = None, float("inf")
+    for bm, bk in _candidates_for(n1, n2):
+        try:
+            runner(bm, bk)                    # compile + warm up
+            t = min(_time_once(runner, bm, bk) for _ in range(repeats))
+        except Exception:                     # candidate invalid: skip
+            continue
+        if t < best_t:
+            best, best_t = (bm, bk), t
+    tiles = best or heuristic_tiles(op, n1, n2)
+    _memory_cache[key] = tiles
+    _store_disk(key, tiles)
+    return tiles
+
+
+def _candidates_for(n1: int, n2: int) -> Tuple[Tiles, ...]:
+    """Candidates no larger than ~2x the (padded) problem."""
+    out = [t for t in _CANDIDATES if t[0] <= 2 * n1 and t[1] <= 2 * n2]
+    return tuple(out) or (heuristic_tiles("syrk", n1, n2),)
+
+
+def _time_once(runner: Callable[[int, int], float], bm: int, bk: int
+               ) -> float:
+    t0 = time.perf_counter()
+    runner(bm, bk)
+    return time.perf_counter() - t0

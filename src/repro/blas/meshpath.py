@@ -1,0 +1,275 @@
+"""shard_map execution paths for :mod:`repro.blas` (replicated in/out).
+
+The core parallel algorithms (core/{onedim,twodim,threedim}.py) operate
+on pre-distributed device layouts — the right interface when the data
+already lives sharded.  The blas front-end instead takes ordinary
+(replicated or GSPMD-sharded) arrays, so this module adds traced jnp
+distribute / assemble shims around them:
+
+  1D — column-shard the non-symmetric operands, move only the packed
+       triangle (Algs 7–9);
+  2D — triangle-block layout on exactly P = c(c+1) devices (Algs 10–12);
+  3D — p1 × p2 grid (2D in-slice + replication axis, Algs 13–15),
+       reshaped from a single-axis mesh.
+
+All functions take/return f32 and produce dense results (tril for
+SYRK/SYR2K, full for SYMM); :mod:`repro.blas.api` handles fill/dtype.
+
+The distribute/assemble helpers mirror the numpy host-side versions in
+core/twodim.py but use static index tables with jnp gathers/scatters so
+they stay traceable under jit.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from ..compat import shard_map
+from ..core.onedim import (_padded_tril_len, symm_1d_local, syr2k_1d_local,
+                           syrk_1d_local)
+from ..core.packing import pack_tril, tril_size
+from ..core.twodim import TwoDPlan, make_2d_plan, symm_2d, syr2k_2d, syrk_2d
+from ..core.threedim import symm_3d, syr2k_3d, syrk_3d
+
+TB_AXIS, REP_AXIS = "blas_p1", "blas_p2"
+
+
+# --------------------------------------------------------------------------
+# traced distribute / assemble (static index tables from the plan)
+# --------------------------------------------------------------------------
+def distribute_rows_jnp(x: jax.Array, plan: TwoDPlan) -> jax.Array:
+    """(n1, n2) -> (P, c, nb, w) per-device row-block column shares."""
+    c, nb, w = plan.c, plan.nb, plan.w
+    xp = jnp.zeros((plan.n1_pad, plan.n2_pad), x.dtype)
+    xp = xp.at[:x.shape[0], :x.shape[1]].set(x)
+    blocks = xp.reshape(c * c, nb, plan.n2_pad)
+    rows = blocks[np.asarray(plan.R)]                   # (P, c, nb, n2_pad)
+    base = plan.self_col[..., None] * w + np.arange(w)  # (P, c, w) static
+    idx = jnp.asarray(base)[:, :, None, :]
+    return jnp.take_along_axis(rows, idx, axis=-1)
+
+
+def collect_rows_jnp(dist: jax.Array, plan: TwoDPlan) -> jax.Array:
+    """Inverse of :func:`distribute_rows_jnp` (unpadded)."""
+    c, nb, w = plan.c, plan.nb, plan.w
+    Pn = plan.num_devices
+    rows_idx = np.asarray(plan.R).reshape(-1)           # (P*c,)
+    col_idx = (plan.self_col[..., None] * w
+               + np.arange(w)).reshape(Pn * c, w)
+    data = dist.reshape(Pn * c, nb, w)
+    out = jnp.zeros((c * c, nb, plan.n2_pad), dist.dtype)
+    out = out.at[jnp.asarray(rows_idx)[:, None, None],
+                 jnp.arange(nb)[None, :, None],
+                 jnp.asarray(col_idx)[:, None, :]].set(data)
+    return out.reshape(plan.n1_pad, plan.n2_pad)[:plan.n1, :plan.n2]
+
+
+def assemble_sym_jnp(off: jax.Array, diag: jax.Array, plan: TwoDPlan
+                     ) -> jax.Array:
+    """(P, T, nb, nb) + (P, nb, nb) -> dense lower-triangular (n1, n1)."""
+    c, nb = plan.c, plan.nb
+    Pn = plan.num_devices
+    full = jnp.zeros((c * c, c * c, nb, nb), off.dtype)
+    if plan.T:
+        sel = np.array([(k, t, plan.R[k][a], plan.R[k][b])
+                        for k in range(Pn)
+                        for t, (a, b) in enumerate(plan.pairs)])
+        full = full.at[sel[:, 2], sel[:, 3]].set(off[sel[:, 0], sel[:, 1]])
+    dsel = np.array([(k, plan.R[k][plan.diag_slot[k]])
+                     for k in range(Pn) if plan.diag_slot[k] >= 0])
+    if len(dsel):
+        full = full.at[dsel[:, 1], dsel[:, 1]].set(diag[dsel[:, 0]])
+    dense = full.transpose(0, 2, 1, 3).reshape(plan.n1_pad, plan.n1_pad)
+    return jnp.tril(dense)[:plan.n1, :plan.n1]
+
+
+def distribute_sym_jnp(a: jax.Array, plan: TwoDPlan
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """tril-valid (n1, n1) -> extended triangle blocks
+    ((P, T, nb, nb) off-diag, (P, nb, nb) lower-tri diag).
+
+    Only the lower triangle of ``a`` is ever read: off-diagonal blocks
+    (i > j) lie strictly below the diagonal and diagonal blocks are
+    tril'd."""
+    c, nb = plan.c, plan.nb
+    Pn = plan.num_devices
+    ap = jnp.zeros((plan.n1_pad, plan.n1_pad), a.dtype)
+    ap = ap.at[:a.shape[0], :a.shape[1]].set(jnp.tril(a))
+    At = ap.reshape(c * c, nb, c * c, nb).transpose(0, 2, 1, 3)
+    if plan.T:
+        I = np.array([[plan.R[k][a_] for (a_, b_) in plan.pairs]
+                      for k in range(Pn)])
+        J = np.array([[plan.R[k][b_] for (a_, b_) in plan.pairs]
+                      for k in range(Pn)])
+        off = At[I, J]
+    else:
+        off = jnp.zeros((Pn, 0, nb, nb), a.dtype)
+    ds = plan.diag_slot
+    D = np.array([plan.R[k][max(int(ds[k]), 0)] for k in range(Pn)])
+    diag = jnp.tril(At[D, D])
+    diag = diag * jnp.asarray(ds >= 0)[:, None, None].astype(diag.dtype)
+    return off, diag
+
+
+def distribute_rows_3d_jnp(x: jax.Array, plan: TwoDPlan, p2: int
+                           ) -> jax.Array:
+    """(n1, n2) -> (p1, p2, c, nb, w2): column slices over the
+    replication axis, 2D layout within each (n2 % p2 == 0 required)."""
+    n1, n2 = x.shape
+    xs = x.reshape(n1, p2, n2 // p2).transpose(1, 0, 2)   # (p2, n1, n2s)
+    dist = jax.vmap(lambda s: distribute_rows_jnp(s, plan))(xs)
+    return dist.transpose(1, 0, 2, 3, 4)                  # (p1, p2, ...)
+
+
+def collect_rows_3d_jnp(c_dist: jax.Array, plan: TwoDPlan, p2: int
+                        ) -> jax.Array:
+    """(p1, p2, c, nb, w2) SYMM output -> dense (n1, n2)."""
+    per = jax.vmap(lambda d: collect_rows_jnp(d, plan))(
+        c_dist.transpose(1, 0, 2, 3, 4))                  # (p2, n1, n2s)
+    n1 = per.shape[1]
+    return per.transpose(1, 0, 2).reshape(n1, -1)
+
+
+def flat_tb_size(plan: TwoDPlan) -> int:
+    return (plan.T + 1) * plan.nb * plan.nb
+
+
+def gather_3d_sym_jnp(flat_shards: jax.Array, plan: TwoDPlan) -> jax.Array:
+    """(p1, p2, shard) reduce-scattered output -> dense tril (n1, n1)."""
+    p1, p2, s = flat_shards.shape
+    flat = flat_shards.reshape(p1, p2 * s)[:, :flat_tb_size(plan)]
+    t = plan.T * plan.nb * plan.nb
+    off = flat[:, :t].reshape(p1, plan.T, plan.nb, plan.nb)
+    diag = flat[:, t:].reshape(p1, plan.nb, plan.nb)
+    return assemble_sym_jnp(off, diag, plan)
+
+
+def distribute_3d_sym_jnp(a: jax.Array, plan: TwoDPlan, p2: int
+                          ) -> jax.Array:
+    """tril-valid (n1, n1) -> (p1, p2, shard) flattened extended
+    triangle blocks, shard-split over the replication axis."""
+    off, diag = distribute_sym_jnp(a, plan)
+    p1 = plan.num_devices
+    flat = jnp.concatenate([off.reshape(p1, -1), diag.reshape(p1, -1)], 1)
+    pad = -flat.shape[1] % p2
+    flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    return flat.reshape(p1, p2, -1)
+
+
+# --------------------------------------------------------------------------
+# 1D paths (Algs 7–9): packed triangle on the wire
+# --------------------------------------------------------------------------
+def syrk_1d_packed(a: jax.Array, mesh: Mesh, axis: str) -> jax.Array:
+    """f32 (n1, n2), n2 % P == 0 -> replicated packed tril of A·Aᵀ."""
+    n1 = a.shape[0]
+    nsh = mesh.shape[axis]
+
+    def body(a_loc):
+        shard = syrk_1d_local(a_loc, axis, nsh)
+        full = jax.lax.all_gather(shard, axis, axis=0, tiled=True)
+        return full[:tril_size(n1)]
+
+    return shard_map(body, mesh=mesh, in_specs=P(None, axis),
+                     out_specs=P(), check_vma=False)(a)
+
+
+def syr2k_1d_packed(a: jax.Array, b: jax.Array, mesh: Mesh, axis: str
+                    ) -> jax.Array:
+    n1 = a.shape[0]
+    nsh = mesh.shape[axis]
+
+    def body(a_loc, b_loc):
+        shard = syr2k_1d_local(a_loc, b_loc, axis, nsh)
+        full = jax.lax.all_gather(shard, axis, axis=0, tiled=True)
+        return full[:tril_size(n1)]
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(None, axis), P(None, axis)),
+                     out_specs=P(), check_vma=False)(a, b)
+
+
+def symm_1d_dense(a_sym: jax.Array, b: jax.Array, mesh: Mesh, axis: str
+                  ) -> jax.Array:
+    """f32 tril-valid (n1, n1) × (n1, n2), n2 % P == 0 -> (n1, n2)."""
+    n1 = a_sym.shape[0]
+    nsh = mesh.shape[axis]
+    packed = pack_tril(jnp.tril(a_sym))
+    packed = jnp.pad(packed,
+                     (0, _padded_tril_len(n1, nsh) - packed.shape[0]))
+    f = functools.partial(symm_1d_local, axis=axis, n1=n1)
+    return shard_map(f, mesh=mesh, in_specs=(P(axis), P(None, axis)),
+                     out_specs=P(None, axis), check_vma=False)(packed, b)
+
+
+# --------------------------------------------------------------------------
+# 2D paths (Algs 10–12): P == c(c+1) triangle-block grid
+# --------------------------------------------------------------------------
+def syrk_2d_dense(a: jax.Array, c: int, mesh: Mesh, axis: str) -> jax.Array:
+    n1, n2 = a.shape
+    plan = make_2d_plan(c, n1, n2)
+    off, diag = syrk_2d(distribute_rows_jnp(a, plan), plan, mesh, axis)
+    return assemble_sym_jnp(off, diag, plan)
+
+
+def syr2k_2d_dense(a: jax.Array, b: jax.Array, c: int, mesh: Mesh,
+                   axis: str) -> jax.Array:
+    n1, n2 = a.shape
+    plan = make_2d_plan(c, n1, n2)
+    off, diag = syr2k_2d(distribute_rows_jnp(a, plan),
+                         distribute_rows_jnp(b, plan), plan, mesh, axis)
+    return assemble_sym_jnp(off, diag, plan)
+
+
+def symm_2d_dense(a_sym: jax.Array, b: jax.Array, c: int, mesh: Mesh,
+                  axis: str) -> jax.Array:
+    n1, n2 = b.shape
+    plan = make_2d_plan(c, n1, n2)
+    a_off, a_diag = distribute_sym_jnp(a_sym, plan)
+    c_dist = symm_2d(a_off, a_diag, distribute_rows_jnp(b, plan), plan,
+                     mesh, axis)
+    return collect_rows_jnp(c_dist, plan)
+
+
+# --------------------------------------------------------------------------
+# 3D paths (Algs 13–15): p1 × p2 grid from a single-axis mesh
+# --------------------------------------------------------------------------
+def _mesh_3d(mesh: Mesh, p1: int, p2: int) -> Mesh:
+    devs = np.asarray(mesh.devices).reshape(-1)
+    return Mesh(devs[:p1 * p2].reshape(p1, p2), (TB_AXIS, REP_AXIS))
+
+
+def syrk_3d_dense(a: jax.Array, c: int, p2: int, mesh: Mesh) -> jax.Array:
+    n1, n2 = a.shape
+    plan = make_2d_plan(c, n1, n2 // p2)
+    mesh3 = _mesh_3d(mesh, c * (c + 1), p2)
+    flat = syrk_3d(distribute_rows_3d_jnp(a, plan, p2), plan, mesh3,
+                   TB_AXIS, REP_AXIS)
+    return gather_3d_sym_jnp(flat, plan)
+
+
+def syr2k_3d_dense(a: jax.Array, b: jax.Array, c: int, p2: int, mesh: Mesh
+                   ) -> jax.Array:
+    n1, n2 = a.shape
+    plan = make_2d_plan(c, n1, n2 // p2)
+    mesh3 = _mesh_3d(mesh, c * (c + 1), p2)
+    flat = syr2k_3d(distribute_rows_3d_jnp(a, plan, p2),
+                    distribute_rows_3d_jnp(b, plan, p2), plan, mesh3,
+                    TB_AXIS, REP_AXIS)
+    return gather_3d_sym_jnp(flat, plan)
+
+
+def symm_3d_dense(a_sym: jax.Array, b: jax.Array, c: int, p2: int,
+                  mesh: Mesh) -> jax.Array:
+    n1, n2 = b.shape
+    plan = make_2d_plan(c, n1, n2 // p2)
+    mesh3 = _mesh_3d(mesh, c * (c + 1), p2)
+    c_dist = symm_3d(distribute_3d_sym_jnp(a_sym, plan, p2),
+                     distribute_rows_3d_jnp(b, plan, p2), plan, mesh3,
+                     TB_AXIS, REP_AXIS)
+    return collect_rows_3d_jnp(c_dist, plan, p2)

@@ -1,0 +1,157 @@
+"""Route planning for :mod:`repro.blas` — the dispatch brain.
+
+``plan_route`` turns (op, shapes, dtype, mesh, overrides) into an
+executable :class:`Route`.  The regime analysis is
+:func:`repro.core.dispatch.choose_algorithm` (paper Thm 9 / §VIII-D);
+this module layers the *executability* constraints of the concrete
+backends on top and picks the fallback chain:
+
+  mesh present:   regime kind (1d / 2d / 3d)  →  1d  →  dense (GSPMD)
+  single device:  pallas (TPU or explicit opt-in)  →  dense (jnp)
+
+All decisions are static functions of shapes/dtypes/mesh, so routing is
+jit/vmap-safe and free after the first trace.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+
+from ..core.dispatch import AlgoChoice, choose_algorithm
+from ..core.gf import prime_power
+from .autotune import heuristic_tiles, pick_tiles
+
+M_OF = {"syrk": 1, "syr2k": 2, "symm": 2}
+
+#: below this n1 a single 128-tile covers the triangle — the Pallas
+#: schedule cannot beat a fused dense matmul, so default to jnp
+PALLAS_MIN_N1 = 256
+
+
+@dataclass(frozen=True)
+class Route:
+    """An executable routing decision."""
+    op: str
+    path: str                 # "dense" | "pallas" | "1d" | "2d" | "3d"
+    reason: str
+    n1: int
+    n2: int
+    m: int
+    P: int = 1
+    axis: Optional[str] = None
+    choice: Optional[AlgoChoice] = None
+    tiles: Optional[Tuple[int, int]] = None
+
+    def describe(self) -> str:
+        grid = ""
+        if self.choice is not None and self.path in ("2d", "3d"):
+            grid = (f" grid c={self.choice.c} p1={self.choice.p1}"
+                    f" p2={self.choice.p2}")
+        tiles = f" tiles={self.tiles}" if self.tiles else ""
+        return (f"{self.op}[{self.n1}x{self.n2}] -> {self.path}"
+                f"{grid}{tiles} ({self.reason})")
+
+
+def _resolve_axis(mesh, axis: Optional[str]) -> Optional[str]:
+    if mesh is None:
+        return None
+    names = list(mesh.shape)
+    if axis is not None:
+        if axis not in mesh.shape:
+            raise ValueError(f"axis {axis!r} not in mesh axes {names}; "
+                             "pass axis=None to auto-select")
+        return axis
+    if len(names) == 1:
+        return names[0]
+    return "model" if "model" in mesh.shape else names[-1]
+
+
+def _grid_fits(choice: AlgoChoice, P: int, n2: int, single_axis: bool
+               ) -> Optional[str]:
+    """Which mesh path (if any) can execute ``choice`` exactly."""
+    c = choice.c
+    if choice.kind == "2d":
+        if choice.idle == 0 and c >= 2 and _is_prime_power(c):
+            return "2d"
+        return None
+    if choice.kind in ("3d", "3d-limited"):
+        if choice.idle != 0 or c < 2 or not _is_prime_power(c):
+            return None
+        if choice.p2 == 1:        # degenerate replication axis: pure 2D
+            return "2d"
+        if single_axis and n2 % choice.p2 == 0:
+            return "3d"
+    return None
+
+
+def _is_prime_power(c: int) -> bool:
+    try:
+        prime_power(c)
+        return True
+    except (ValueError, TypeError):
+        return False
+
+
+def plan_route(op: str, n1: int, n2: int, *, dtype=None, batch: bool = False,
+               mesh=None, axis: Optional[str] = None,
+               tile=None, interpret: Optional[bool] = None,
+               autotune_runner=None) -> Route:
+    """Pick the execution path for one blas call.
+
+    ``tile``: None (heuristic), "auto" (measured + cached), or an
+    explicit (bm, bk) pair — an explicit pair also forces the Pallas
+    path off-mesh.
+    """
+    if op not in M_OF:
+        raise ValueError(f"unknown op {op!r}")
+    m = M_OF[op]
+    ax = _resolve_axis(mesh, axis)
+
+    if mesh is not None and ax is not None and mesh.shape[ax] > 1:
+        if tile is not None or interpret is not None:
+            import warnings
+            warnings.warn("repro.blas: tile=/interpret= only affect the "
+                          "single-device Pallas path and are ignored when "
+                          "a mesh routes the call", stacklevel=3)
+        P = mesh.shape[ax]
+        if batch:
+            return Route(op, "dense", "batched inputs use the GSPMD "
+                         "dense path (collectives don't vmap)", n1, n2, m,
+                         P=P, axis=ax)
+        choice = choose_algorithm(n1, n2, P, m)
+        fits_1d = n2 % P == 0
+        grid_path = _grid_fits(choice, P, n2, len(mesh.shape) == 1)
+        if choice.kind == "1d" and fits_1d:
+            return Route(op, "1d", f"Thm 9 case {choice.case}: packed-"
+                         "triangle 1D is optimal", n1, n2, m, P=P, axis=ax,
+                         choice=choice)
+        if grid_path is not None:
+            return Route(op, grid_path, f"Thm 9 case {choice.case}: "
+                         f"{choice.kind} grid embeds exactly", n1, n2, m,
+                         P=P, axis=ax, choice=choice)
+        if fits_1d:
+            return Route(op, "1d", f"{choice.kind} grid infeasible on "
+                         f"P={P}; 1D fallback", n1, n2, m, P=P, axis=ax,
+                         choice=choice)
+        return Route(op, "dense", f"no distributed grid fits (P={P}, "
+                     f"n2%P={n2 % P}); GSPMD dense", n1, n2, m, P=P,
+                     axis=ax, choice=choice)
+
+    # single device --------------------------------------------------------
+    explicit = tile is not None or interpret is True
+    backend = jax.default_backend()
+    if explicit or (backend == "tpu" and n1 >= PALLAS_MIN_N1):
+        if isinstance(tile, tuple):
+            tiles = tile
+        elif tile == "auto":
+            tiles = pick_tiles(op, n1, n2, dtype, backend, mode="auto",
+                               runner=autotune_runner)
+        else:
+            tiles = heuristic_tiles(op, n1, n2)
+        why = "explicit tile/interpret request" if explicit else \
+            f"triangular flat-grid kernel on {backend}"
+        return Route(op, "pallas", why, n1, n2, m, tiles=tiles)
+    return Route(op, "dense", f"small shape or no kernel backend "
+                 f"({backend}); fused jnp", n1, n2, m)

@@ -7,7 +7,8 @@ Public surface:
   dispatch               — regime selection per Theorem 9 (§VIII-D)
   lower bounds           — closed forms with leading constants
 """
-from .dispatch import AlgoChoice, choose_algorithm, largest_c_grid
+from .dispatch import (AlgoChoice, choose_algorithm, fit_c_grid,
+                       largest_c_grid)
 from .lower_bounds import (memory_dependent_parallel_lower_bound,
                            memory_independent_lower_bound,
                            sequential_reads_lower_bound)
@@ -22,7 +23,7 @@ from .triangle import (TrianglePartition, affine_partition, cyclic_partition,
 from .twodim import TwoDPlan, make_2d_plan, symm_2d, syr2k_2d, syrk_2d
 
 __all__ = [
-    "AlgoChoice", "choose_algorithm", "largest_c_grid",
+    "AlgoChoice", "choose_algorithm", "fit_c_grid", "largest_c_grid",
     "memory_dependent_parallel_lower_bound",
     "memory_independent_lower_bound", "sequential_reads_lower_bound",
     "symm_1d", "symm_1d_local", "syr2k_1d", "syr2k_1d_local", "syrk_1d",

@@ -42,13 +42,26 @@ class AlgoChoice:
 
 
 def largest_c_grid(P: int) -> int:
-    """Largest c with c(c+1) <= P."""
+    """Largest c with c(c+1) <= P.
+
+    Note the return value is clamped to >= 1, so for P < 2 the implied
+    grid p1 = c(c+1) = 2 does NOT fit; callers that need a feasible grid
+    should use :func:`fit_c_grid`.
+    """
     c = int((math.isqrt(4 * P + 1) - 1) // 2)
     while (c + 1) * (c + 2) <= P:
         c += 1
     while c > 1 and c * (c + 1) > P:
         c -= 1
     return max(c, 1)
+
+
+def fit_c_grid(P: int) -> int:
+    """Largest c with c(c+1) <= P, or 0 when no triangle grid fits
+    (P < 2)."""
+    if P < 2:
+        return 0
+    return largest_c_grid(P)
 
 
 def predicted_words_1d(n1: int, P: int) -> float:
@@ -67,7 +80,12 @@ def predicted_words_3d(n1: int, n2: int, m: int, c: int, p2: int) -> float:
 
 def choose_algorithm(n1: int, n2: int, P: int, m: int,
                      M: Optional[int] = None) -> AlgoChoice:
-    """Select the communication-optimal family + grid for the problem."""
+    """Select the communication-optimal family + grid for the problem.
+
+    Invariants (any P >= 1): the returned grid satisfies
+    ``p1 * p2 <= P`` and ``idle >= 0``; when no c(c+1) triangle grid fits
+    (P < 2) the 1D algorithm is returned regardless of regime.
+    """
     case = mem_independent_case(n1, n2, P, m)
     lb = memory_independent_lower_bound(n1, n2, P, m).bound
 
@@ -76,36 +94,47 @@ def choose_algorithm(n1: int, n2: int, P: int, m: int,
         p1 = c * (c + 1)
         return m * n1 * n2 / (max(c, 1) * p2) + n1 * n1 / (2 * p1)
 
+    def one_d(case_: int) -> AlgoChoice:
+        return AlgoChoice(kind="1d", case=case_, P=P, p1=1, p2=P,
+                          predicted_words=predicted_words_1d(n1, P),
+                          lower_bound=lb)
+
     if case == 1:
-        choice = AlgoChoice(kind="1d", case=1, P=P, p1=1, p2=P,
-                            predicted_words=predicted_words_1d(n1, P),
-                            lower_bound=lb)
+        choice = one_d(1)
     elif case == 2:
-        c = largest_c_grid(P)
-        choice = AlgoChoice(kind="2d", case=2, P=P, c=c, p1=c * (c + 1), p2=1,
-                            idle=P - c * (c + 1),
-                            predicted_words=predicted_words_2d(n1, n2, m, c),
-                            lower_bound=lb)
+        c = fit_c_grid(P)
+        if c == 0:
+            choice = one_d(2)
+        else:
+            choice = AlgoChoice(
+                kind="2d", case=2, P=P, c=c, p1=c * (c + 1), p2=1,
+                idle=P - c * (c + 1),
+                predicted_words=predicted_words_2d(n1, n2, m, c),
+                lower_bound=lb)
     else:
-        # optimal split (§VIII-D case 3): p1 = (n1 P / (m n2))^(2/3)
+        # optimal split (§VIII-D case 3): p1 = (n1 P / (m n2))^(2/3),
+        # capped at P so the grid always embeds
         p1_target = (n1 * P / (m * n2)) ** (2 / 3)
-        c = largest_c_grid(max(int(p1_target), 2))
-        c = max(c, 1)
-        p1 = c * (c + 1)
-        p2 = max(P // p1, 1)
-        choice = AlgoChoice(kind="3d", case=3, P=P, c=c, p1=p1, p2=p2,
-                            idle=P - p1 * p2,
-                            predicted_words=predicted_words_3d(n1, n2, m, c, p2),
-                            lower_bound=lb)
+        c = fit_c_grid(min(max(int(p1_target), 2), P))
+        if c == 0:
+            choice = one_d(3)
+        else:
+            p1 = c * (c + 1)
+            p2 = max(P // p1, 1)
+            choice = AlgoChoice(
+                kind="3d", case=3, P=P, c=c, p1=p1, p2=p2,
+                idle=P - p1 * p2,
+                predicted_words=predicted_words_3d(n1, n2, m, c, p2),
+                lower_bound=lb)
 
     if M is not None and choice.kind in ("2d", "3d"):
-        c = choice.c if choice.c else largest_c_grid(P)
+        c = choice.c
         if mem_3d(c, max(choice.p2, 1)) > M:
             # §IX: keep x·n1²/(2P) resident, stream b columns at a time
             x = max(2.0 * M * P / (n1 * n1), 1.0)
-            p2 = max(int(x), 1)
-            p1 = max(P // p2, 2)
-            c = largest_c_grid(p1)
+            p2 = min(max(int(x), 1), P // 2)   # leave room for p1 >= 2
+            p1_budget = max(P // p2, 2)
+            c = largest_c_grid(p1_budget)      # p1_budget >= 2 -> fits
             p1 = c * (c + 1)
             p2 = max(P // p1, 1)
             # chunk so the streamed panel m·b·n1/c stays within M/2
@@ -114,4 +143,7 @@ def choose_algorithm(n1: int, n2: int, P: int, m: int,
             choice = AlgoChoice(kind="3d-limited", case=choice.case, P=P, c=c,
                                 p1=p1, p2=p2, b=b, idle=P - p1 * p2,
                                 predicted_words=words, lower_bound=lb)
+
+    if choice.kind != "1d":
+        assert choice.p1 * choice.p2 <= P and choice.idle >= 0, choice
     return choice

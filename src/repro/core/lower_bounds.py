@@ -34,6 +34,8 @@ class MemIndependentBound:
 def mem_independent_case(n1: int, n2: int, P: int, m: int) -> int:
     """Regime selection of Theorem 9 (also drives algorithm choice §VIII-D)."""
     nn = n1 * (n1 - 1)
+    if nn == 0:          # n1 == 1: no symmetric interactions, 1D trivially
+        return 1
     if n1 <= m * n2 and P <= m * n2 / math.sqrt(nn):
         return 1
     if m * n2 < n1 and P <= nn / (m * n2) ** 2:

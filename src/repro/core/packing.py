@@ -18,6 +18,15 @@ def tril_size(n: int, diag: bool = True) -> int:
     return n * (n + 1) // 2 if diag else n * (n - 1) // 2
 
 
+def pad2d(x, m0: int, m1: int):
+    """Zero-pad a 2-D array up to multiples of (m0, m1) (jnp)."""
+    p0 = -x.shape[0] % m0
+    p1 = -x.shape[1] % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
 def tril_indices(n: int, diag: bool = True) -> Tuple[np.ndarray, np.ndarray]:
     return np.tril_indices(n, 0 if diag else -1)
 

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from ..compat import pvary, shard_map
 from .twodim import (TwoDPlan, _exchange_rows, _syrk_blocks, make_2d_plan,
                      symm_2d_local, syr2k_2d_local, syrk_2d_local)
 
@@ -46,9 +47,7 @@ def _pad_to(x: jax.Array, mult: int) -> jax.Array:
 
 def _varying(x: jax.Array, axes: Tuple[str, ...]) -> jax.Array:
     """Mark a constant as varying over manual axes (scan-carry vma rule)."""
-    if hasattr(jax.lax, "pcast"):
-        return jax.lax.pcast(x, axes, to="varying")
-    return jax.lax.pvary(x, axes)
+    return pvary(x, axes)
 
 
 def syrk_3d_local(a_own: jax.Array, plan: TwoDPlan, tb_axis: str,
@@ -138,7 +137,7 @@ def syrk_3d(a_dist: jax.Array, plan: TwoDPlan, mesh, tb_axis: str = "tb",
     def body(a):                       # a: (1, 1, c, nb, w2) per device
         return f(a[0, 0])[None, None]
 
-    return jax.jit(jax.shard_map(
+    return jax.jit(shard_map(
         body, mesh=mesh, in_specs=P(tb_axis, rep_axis),
         out_specs=P(tb_axis, rep_axis)))(a_dist)
 
@@ -152,7 +151,7 @@ def syr2k_3d(a_dist, b_dist, plan: TwoDPlan, mesh, tb_axis="tb",
     def body(a, b):
         return f(a[0, 0], b[0, 0])[None, None]
 
-    return jax.jit(jax.shard_map(
+    return jax.jit(shard_map(
         body, mesh=mesh, in_specs=(P(tb_axis, rep_axis),) * 2,
         out_specs=P(tb_axis, rep_axis)))(a_dist, b_dist)
 
@@ -167,7 +166,7 @@ def symm_3d(a_flat, b_dist, plan: TwoDPlan, mesh, tb_axis="tb",
     def body(a, b):
         return f(a[0, 0], b[0, 0])[None, None]
 
-    return jax.jit(jax.shard_map(
+    return jax.jit(shard_map(
         body, mesh=mesh, in_specs=(P(tb_axis, rep_axis),) * 2,
         out_specs=P(tb_axis, rep_axis)))(a_flat, b_dist)
 

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map
 from .triangle import TrianglePartition, affine_partition
 
 
@@ -224,7 +225,7 @@ def syrk_2d(a_dist: jax.Array, plan: TwoDPlan, mesh, axis: str = "x"):
         off, diag = syrk_2d_local(a[0], plan, axis)
         return off[None], diag[None]
 
-    return jax.jit(jax.shard_map(
+    return jax.jit(shard_map(
         body, mesh=mesh, in_specs=P(axis),
         out_specs=(P(axis), P(axis))))(a_dist)
 
@@ -235,7 +236,7 @@ def syr2k_2d(a_dist: jax.Array, b_dist: jax.Array, plan: TwoDPlan, mesh,
         off, diag = syr2k_2d_local(a[0], b[0], plan, axis)
         return off[None], diag[None]
 
-    return jax.jit(jax.shard_map(
+    return jax.jit(shard_map(
         body, mesh=mesh, in_specs=(P(axis), P(axis)),
         out_specs=(P(axis), P(axis))))(a_dist, b_dist)
 
@@ -245,7 +246,7 @@ def symm_2d(a_off: jax.Array, a_diag: jax.Array, b_dist: jax.Array,
     def body(ao, ad, b):
         return symm_2d_local(ao[0], ad[0], b[0], plan, axis)[None]
 
-    return jax.jit(jax.shard_map(
+    return jax.jit(shard_map(
         body, mesh=mesh, in_specs=(P(axis), P(axis), P(axis)),
         out_specs=P(axis)))(a_off, a_diag, b_dist)
 

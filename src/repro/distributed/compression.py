@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map
+
 
 def _pad_to(x: jax.Array, block: int) -> Tuple[jax.Array, int]:
     flat = x.reshape(-1)
@@ -117,7 +119,7 @@ def compressed_allreduce(x: jax.Array, mesh, axis: str = "data",
                                 tiled=False).reshape(nb, 1)
         return q2.astype(jnp.float32) * s2
 
-    _smap = jax.shard_map
+    _smap = shard_map
     flat, pad = _pad_to(x, block)
     nb = flat.shape[0] // block
     # pad so the block count divides the axis

@@ -1,7 +1,15 @@
 """Jit'd public wrappers for the Pallas symmetric kernels.
 
-Handles padding to tile multiples, tile packing/unpacking, and dtype
-round-trips; returns dense lower-triangular results matching ref.py."""
+Handles padding to tile multiples, tile packing/unpacking, and the dtype
+contract; returns dense lower-triangular results matching ref.py.
+
+Dtype contract: the kernels always accumulate in f32.  ``out_dtype``
+selects the output precision; the default (``None``) PRESERVES the f32
+accumulation rather than silently downcasting to the input dtype — bf16
+inputs produce f32 outputs unless the caller explicitly asks otherwise.
+Most callers should go through :mod:`repro.blas`, which adds regime
+routing, batching, and tile autotuning on top of these wrappers.
+"""
 from __future__ import annotations
 
 import functools
@@ -11,17 +19,10 @@ import jax
 import jax.numpy as jnp
 
 from ..core.packing import pack_tril_tiles, unpack_tril_tiles
+from ..core.packing import pad2d as _pad2
 from .symm import symm_tiles
 from .syr2k import syr2k_tiles
 from .syrk import syrk_tiles
-
-
-def _pad2(x: jax.Array, m0: int, m1: int) -> jax.Array:
-    p0 = -x.shape[0] % m0
-    p1 = -x.shape[1] % m1
-    if p0 or p1:
-        x = jnp.pad(x, ((0, p0), (0, p1)))
-    return x
 
 
 def _unpack_dense(tiles: jax.Array, n1_pad: int, bm: int, n1: int
@@ -30,35 +31,44 @@ def _unpack_dense(tiles: jax.Array, n1_pad: int, bm: int, n1: int
     return jnp.tril(dense)[:n1, :n1]
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bk", "interpret"))
-def syrk(a: jax.Array, *, bm: int = 128, bk: int = 128,
+def _cast_out(x: jax.Array, out_dtype) -> jax.Array:
+    return x if out_dtype is None else x.astype(out_dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bk", "out_dtype", "interpret"))
+def syrk(a: jax.Array, *, bm: int = 128, bk: int = 128, out_dtype=None,
          interpret: Optional[bool] = None) -> jax.Array:
-    """C = tril(A·Aᵀ) via the triangular-grid Pallas kernel."""
+    """C = tril(A·Aᵀ) via the triangular-grid Pallas kernel.
+
+    f32 accumulation; ``out_dtype=None`` keeps the f32 result."""
     n1 = a.shape[0]
     ap = _pad2(a, bm, bk)
     tiles = syrk_tiles(ap, bm=bm, bk=bk, interpret=interpret)
-    return _unpack_dense(tiles, ap.shape[0], bm, n1).astype(a.dtype)
+    return _cast_out(_unpack_dense(tiles, ap.shape[0], bm, n1), out_dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bk", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bk", "out_dtype", "interpret"))
 def syr2k(a: jax.Array, b: jax.Array, *, bm: int = 128, bk: int = 128,
-          interpret: Optional[bool] = None) -> jax.Array:
-    """C = tril(A·Bᵀ + B·Aᵀ)."""
+          out_dtype=None, interpret: Optional[bool] = None) -> jax.Array:
+    """C = tril(A·Bᵀ + B·Aᵀ); f32 accumulation, f32 out by default."""
     n1 = a.shape[0]
     ap, bp = _pad2(a, bm, bk), _pad2(b, bm, bk)
     tiles = syr2k_tiles(ap, bp, bm=bm, bk=bk, interpret=interpret)
-    return _unpack_dense(tiles, ap.shape[0], bm, n1).astype(a.dtype)
+    return _cast_out(_unpack_dense(tiles, ap.shape[0], bm, n1), out_dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "out_dtype", "interpret"))
 def symm(a_tril: jax.Array, b: jax.Array, *, bm: int = 128, bn: int = 128,
-         interpret: Optional[bool] = None) -> jax.Array:
+         out_dtype=None, interpret: Optional[bool] = None) -> jax.Array:
     """C = sym(A)·B; A passed dense but only tril(A) is read (packed into
     lower-triangle tiles before the kernel — the dense upper half never
-    reaches kernel HBM)."""
+    reaches kernel HBM).  f32 accumulation, f32 out by default."""
     n1, n2 = b.shape
     ap = _pad2(jnp.tril(a_tril), bm, bm)
     bp = _pad2(b, bm, bn)
     packed = pack_tril_tiles(ap, bm)
     out = symm_tiles(packed, bp, bm=bm, bn=bn, interpret=interpret)
-    return out[:n1, :n2].astype(b.dtype)
+    return _cast_out(out[:n1, :n2], out_dtype)

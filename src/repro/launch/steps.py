@@ -22,6 +22,27 @@ from repro.models.model import prefill as _prefill
 from repro.optim import AdamW, Muon
 
 
+def describe_blas_routing(params_shape, mesh, axis: str = "model",
+                          limit: int = 12):
+    """Routing table for the optimizer's symmetric kernels: one line per
+    distinct trailing-2D parameter shape, showing which `repro.blas`
+    path (dense / pallas / 1d / 2d / 3d) the NS Gram SYRK takes on this
+    mesh.  Printed at startup by launch/train.py for muon runs."""
+    from repro import blas
+    if axis not in mesh.shape:
+        return [f"  (mesh has no {axis!r} axis: all shapes route dense)"]
+    shapes = sorted({tuple(sorted(int(s) for s in x.shape[-2:]))
+                     for x in jax.tree.leaves(params_shape)
+                     if len(x.shape) >= 2})
+    lines = []
+    for n1, n2 in shapes[:limit]:
+        lines.append("  " + blas.explain("syrk", n1, n2, mesh=mesh,
+                                         axis=axis))
+    if len(shapes) > limit:
+        lines.append(f"  ... ({len(shapes) - limit} more shapes)")
+    return lines
+
+
 def make_optimizer(cfg: ArchConfig, name: str = "adamw", lr: float = 3e-4,
                    mesh=None):
     if name == "adamw":

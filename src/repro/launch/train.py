@@ -39,7 +39,9 @@ from repro.distributed import (ErrorFeedbackInt8, StepTimer,
                                StragglerMonitor, latest_step, plan_mesh,
                                restore_checkpoint, save_checkpoint,
                                wait_for_saves)
-from repro.launch.steps import make_optimizer, make_train_step
+from repro.compat import use_mesh
+from repro.launch.steps import (describe_blas_routing, make_optimizer,
+                                make_train_step)
 from repro.models.model import init_params
 from repro.models.sharding import batch_specs, param_specs
 
@@ -83,6 +85,11 @@ def train(args) -> Dict[str, Any]:
     p_specs = param_specs(cfg, params_shape, mesh)
     p_sh = _ns(mesh, p_specs)
 
+    if args.optimizer.startswith("muon"):
+        print("[train] symmetric-BLAS routing (repro.blas):")
+        for line in describe_blas_routing(params_shape, mesh):
+            print(line)
+
     # ---- init or resume -------------------------------------------------
     start_step = 0
     resumed = False
@@ -104,7 +111,7 @@ def train(args) -> Dict[str, Any]:
         print(f"[train] resumed from step {start_step} "
               f"({args.ckpt_dir})")
     else:
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             params = jax.jit(
                 lambda k: init_params(cfg, k),
                 out_shardings=p_sh)(jax.random.key(args.seed))
@@ -126,7 +133,7 @@ def train(args) -> Dict[str, Any]:
     losses = []
 
     t_train0 = time.time()
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         for step in range(start_step, args.steps):
             if args.fail_at is not None and step == args.fail_at \
                     and not resumed:

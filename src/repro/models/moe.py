@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..compat import get_ambient_mesh, shard_map
 from .common import ArchConfig, MoECfg, Params, dense_init, split_keys
 
 
@@ -276,7 +277,7 @@ def moe_apply(cfg: ArchConfig, p: Params, x: jax.Array,
     collectives, flops ∝ active experts (capacity-factor windows).
     Off-mesh (tests, 1 device) the same body runs locally."""
     b, s, d = x.shape
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_ambient_mesh()
     tp = mesh.shape.get("model", 1) if mesh is not None else 1
 
     if tp <= 1 or (cfg.moe.d_ff_expert % tp) != 0:
@@ -314,7 +315,7 @@ def moe_apply(cfg: ArchConfig, p: Params, x: jax.Array,
         if "wg" in p["shared"]:
             shared["wg"] = P(None, "model")
         p_specs["shared"] = shared
-    fn = jax.shard_map(body, mesh=mesh,
+    fn = shard_map(body, mesh=mesh,
                        in_specs=(P(ba if ba else None, None, None),
                                  p_specs),
                        out_specs=P(ba if ba else None, None, None),

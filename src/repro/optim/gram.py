@@ -20,39 +20,27 @@ from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh
-from jax.sharding import PartitionSpec as P
 
+from .. import blas
 from ..core.dispatch import choose_algorithm
-from ..core.onedim import syrk_1d_local
-from ..core.packing import pack_tril, tril_size, unpack_tril
+from ..core.packing import tril_size, unpack_tril
 
 
 def packed_gram(x: jax.Array, mesh: Optional[Mesh] = None,
                 axis: str = "model") -> jax.Array:
     """Packed lower triangle of X·Xᵀ / n for X (d, n).
 
-    With a mesh whose ``axis`` divides n, uses the paper's 1D SYRK
-    (local outer product + reduce-scatter of the packed triangle +
-    tiled all-gather); otherwise computes locally.  Returns
-    (d(d+1)/2,) f32.
+    One :func:`repro.blas.syrk` call: on a mesh whose ``axis`` divides n
+    the router picks the paper's packed-triangle 1D SYRK (Alg 7, the
+    case-1 regime these Grams live in); off-mesh it computes locally.
+    Returns (d(d+1)/2,) f32.
     """
-    d, n = x.shape
-    x = x.astype(jnp.float32)
-    if mesh is not None and axis in mesh.shape \
-            and n % mesh.shape[axis] == 0 and mesh.shape[axis] > 1:
-        nsh = mesh.shape[axis]
-
-        def body(x_loc):
-            shard = syrk_1d_local(x_loc, axis, nsh)
-            full = jax.lax.all_gather(shard, axis, axis=0, tiled=True)
-            return full[:tril_size(d)]
-
-        packed = jax.shard_map(body, mesh=mesh, in_specs=P(None, axis),
-                               out_specs=P(), check_vma=False)(x)
-    else:
-        packed = pack_tril(x @ x.T)
+    _, n = x.shape
+    if mesh is not None and axis not in mesh.shape:
+        mesh = None          # documented fallback: compute locally
+    packed = blas.syrk(x, fill="packed", mesh=mesh,
+                       axis=axis if mesh is not None else None)
     return packed / n
 
 

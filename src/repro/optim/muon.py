@@ -31,6 +31,8 @@ import numpy as np
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from .. import blas
+from ..compat import shard_map
 from ..core.onedim import syrk_1d_local
 from ..core.packing import tril_size, unpack_tril
 
@@ -47,11 +49,14 @@ class MuonState(NamedTuple):
 # Newton–Schulz cores
 # ---------------------------------------------------------------------------
 def ns_iteration_reference(x: jax.Array) -> jax.Array:
-    """One NS step, plain jnp (the paper-agnostic baseline)."""
+    """One NS step on the unified symmetric-BLAS surface: the Gram is a
+    SYRK and both symmetric products are SYMMs, so `repro.blas` routes
+    each to the best path (fused jnp off-accelerator, the triangular
+    flat-grid Pallas kernels on TPU)."""
     a, b, c = NS_COEFFS
-    s = x @ x.T
-    y = b * s + c * (s @ s)
-    return a * x + y @ x
+    s = blas.syrk(x, fill="full")              # S = X·Xᵀ, f32 accumulate
+    y = b * s + c * blas.symm(s, s)            # S² (symmetric · dense)
+    return a * x + blas.symm(y, x)             # sym(Y)·X
 
 
 def orthogonalize_reference(g: jax.Array, steps: int = 5) -> jax.Array:
@@ -142,7 +147,7 @@ def orthogonalize_1d(g: jax.Array, mesh: Mesh, axis: str = "model",
         return one(x_loc)
 
     spec = P(*([None] * (g.ndim - 1) + [axis]))
-    fn = jax.shard_map(body, mesh=mesh, in_specs=spec, out_specs=spec)
+    fn = shard_map(body, mesh=mesh, in_specs=spec, out_specs=spec)
     return fn(g)
 
 

@@ -130,6 +130,7 @@ def check_3d(c: int, p2: int, nsteps: int) -> None:
         print(f"OK 3d c={c} p2={p2}")
     else:
         # limited-memory variants
+        from repro.compat import shard_map
         from repro.core.threedim import (symm_3d_limited_local,
                                          syrk_3d_limited_local)
         a_dist = jnp.asarray(distribute_rows_3d(A, plan, p2, nsteps=nsteps))
@@ -137,7 +138,7 @@ def check_3d(c: int, p2: int, nsteps: int) -> None:
 
         f = functools.partial(syrk_3d_limited_local, plan=bchunk_plan,
                               tb_axis="tb", rep_axis="rep", p2=p2)
-        out = jax.jit(jax.shard_map(
+        out = jax.jit(shard_map(
             lambda a: f(a[0, 0])[None, None], mesh=mesh,
             in_specs=P_("tb", "rep"), out_specs=P_("tb", "rep")))(a_dist)
         got = gather_3d_sym(np.asarray(out), bchunk_plan)
@@ -150,7 +151,7 @@ def check_3d(c: int, p2: int, nsteps: int) -> None:
         b_dist = jnp.asarray(distribute_rows_3d(B, plan, p2, nsteps=nsteps))
         g = functools.partial(symm_3d_limited_local, plan=bchunk_plan,
                               tb_axis="tb", rep_axis="rep")
-        c_out = jax.jit(jax.shard_map(
+        c_out = jax.jit(shard_map(
             lambda a, b: g(a[0, 0], b[0, 0])[None, None], mesh=mesh,
             in_specs=(P_("tb", "rep"),) * 2,
             out_specs=P_("tb", "rep")))(s_flat, b_dist)
@@ -165,10 +166,90 @@ def check_3d(c: int, p2: int, nsteps: int) -> None:
         print(f"OK 3d-limited c={c} p2={p2} nsteps={nsteps}")
 
 
+def check_blas() -> None:
+    """repro.blas mesh routing: each regime picks its comm-optimal path
+    and matches the dense oracle (12 fake devices)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro import blas
+    rng = np.random.default_rng(7)
+
+    def tri(x):
+        return np.tril(np.asarray(x, np.float64)).astype(np.float32)
+
+    # --- 1D: n2 >> n1, small P (Thm 9 case 1)
+    mesh4 = _mesh((4,), ("x",))
+    A = jnp.asarray(rng.standard_normal((16, 1024)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((16, 1024)), jnp.float32)
+    r = blas.plan_route("syrk", 16, 1024, mesh=mesh4)
+    assert r.path == "1d", r
+    got = np.asarray(blas.syrk(A, mesh=mesh4))
+    np.testing.assert_allclose(got, tri(np.asarray(A) @ np.asarray(A).T),
+                               rtol=3e-4, atol=3e-4)
+    got = np.asarray(blas.syr2k(A, B, mesh=mesh4))
+    want = np.asarray(A) @ np.asarray(B).T
+    np.testing.assert_allclose(got, np.tril(want + want.T), rtol=3e-4,
+                               atol=3e-4)
+    S = rng.standard_normal((16, 16)).astype(np.float32)
+    sym = np.tril(S) + np.tril(S, -1).T
+    got = np.asarray(blas.symm(jnp.asarray(S), B, mesh=mesh4))
+    np.testing.assert_allclose(got, sym @ np.asarray(B), rtol=3e-4,
+                               atol=3e-4)
+
+    # --- 2D: n1 >> n2, P = c(c+1) = 6 (case 2)
+    mesh6 = _mesh((6,), ("x",))
+    A2 = jnp.asarray(rng.standard_normal((36, 6)), jnp.float32)
+    r = blas.plan_route("syrk", 36, 6, mesh=mesh6)
+    assert r.path == "2d" and r.choice.c == 2, r
+    got = np.asarray(blas.syrk(A2, mesh=mesh6))
+    np.testing.assert_allclose(got, tri(np.asarray(A2) @ np.asarray(A2).T),
+                               rtol=3e-4, atol=3e-4)
+    S2 = rng.standard_normal((36, 36)).astype(np.float32)
+    sym2 = np.tril(S2) + np.tril(S2, -1).T
+    B2 = jnp.asarray(rng.standard_normal((36, 6)), jnp.float32)
+    got = np.asarray(blas.symm(jnp.asarray(S2), B2, mesh=mesh6))
+    np.testing.assert_allclose(got, sym2 @ np.asarray(B2), rtol=3e-4,
+                               atol=3e-4)
+
+    # --- 3D: square-ish, P = 12 = 6 * 2 (case 3)
+    mesh12 = _mesh((12,), ("x",))
+    A3 = jnp.asarray(rng.standard_normal((16, 8)), jnp.float32)
+    B3 = jnp.asarray(rng.standard_normal((16, 8)), jnp.float32)
+    r = blas.plan_route("syrk", 16, 8, mesh=mesh12)
+    assert r.path == "3d" and (r.choice.p1, r.choice.p2) == (6, 2), r
+    got = np.asarray(blas.syrk(A3, mesh=mesh12))
+    np.testing.assert_allclose(got, tri(np.asarray(A3) @ np.asarray(A3).T),
+                               rtol=3e-4, atol=3e-4)
+    got = np.asarray(blas.syr2k(A3, B3, mesh=mesh12))
+    want = np.asarray(A3) @ np.asarray(B3).T
+    np.testing.assert_allclose(got, np.tril(want + want.T), rtol=3e-4,
+                               atol=3e-4)
+    S3 = rng.standard_normal((16, 16)).astype(np.float32)
+    sym3 = np.tril(S3) + np.tril(S3, -1).T
+    got = np.asarray(blas.symm(jnp.asarray(S3), B3, mesh=mesh12))
+    np.testing.assert_allclose(got, sym3 @ np.asarray(B3), rtol=3e-4,
+                               atol=3e-4)
+
+    # --- infeasible grids fall back without wrong answers
+    mesh5 = _mesh((5,), ("x",))        # prime, no c(c+1) fit for 2d data
+    A4 = jnp.asarray(rng.standard_normal((16, 10)), jnp.float32)
+    got = np.asarray(blas.syrk(A4, mesh=mesh5))
+    np.testing.assert_allclose(got, tri(np.asarray(A4) @ np.asarray(A4).T),
+                               rtol=3e-4, atol=3e-4)
+
+    # --- multi-axis mesh routes over the named axis (gram/muon pattern)
+    mesh_dm = _mesh((3, 4), ("data", "model"))
+    got = np.asarray(blas.syrk(A, mesh=mesh_dm, axis="model"))
+    np.testing.assert_allclose(got, tri(np.asarray(A) @ np.asarray(A).T),
+                               rtol=3e-4, atol=3e-4)
+    print("OK blas")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite", required=True,
-                    choices=["1d", "2d", "3d", "3d-limited"])
+                    choices=["1d", "2d", "3d", "3d-limited", "blas"])
     ap.add_argument("--P", type=int, default=4)
     ap.add_argument("--c", type=int, default=2)
     ap.add_argument("--p2", type=int, default=2)
@@ -180,6 +261,8 @@ def main():
         check_2d(args.c)
     elif args.suite == "3d":
         check_3d(args.c, args.p2, 1)
+    elif args.suite == "blas":
+        check_blas()
     else:
         check_3d(args.c, args.p2, args.nsteps)
 

@@ -1,0 +1,101 @@
+"""Dispatch edge cases (§VIII-D small-P / degenerate regimes).
+
+Regression tests for the grid-clamping bugs: `largest_c_grid(1)` implies
+p1 = 2 > P, and case 3 could pick p1 from an uncapped target with
+p1 · p2 > P.  The invariants checked here are the acceptance contract of
+`choose_algorithm`: p1 · p2 ≤ P and idle ≥ 0 for every P ≥ 1, with a 1D
+fallback when no c(c+1) grid fits.
+"""
+import pytest
+
+from repro.core.dispatch import (choose_algorithm, fit_c_grid,
+                                 largest_c_grid)
+from repro.core.lower_bounds import memory_independent_lower_bound
+
+PS = list(range(1, 34)) + [37, 41, 97, 101, 240, 241, 256, 1000, 4093,
+                           4096]
+SHAPES = [
+    (1024, 65536, 1),     # n2 >> n1 (case 1 territory)
+    (65536, 128, 1),      # n1 >> n2 (case 2 territory)
+    (4096, 4096, 1),      # square (case 3 at large P)
+    (32768, 1024, 2),     # SYR2K/SYMM operand count
+    (16, 8, 1),           # tiny
+    (2, 2, 1),            # degenerate-but-legal
+    (1, 100, 2),          # n1 == 1: no symmetric interactions at all
+    (100, 1, 1),          # single column
+]
+
+
+def _grid_ok(ch, P):
+    p1, p2 = max(ch.p1, 1), max(ch.p2, 1)
+    assert p1 * p2 <= P, (ch, P)
+    assert ch.idle >= 0, (ch, P)
+    assert ch.kind in ("1d", "2d", "3d", "3d-limited")
+    if ch.kind in ("2d", "3d", "3d-limited"):
+        assert ch.p1 == ch.c * (ch.c + 1)
+
+
+@pytest.mark.parametrize("P", PS)
+def test_grid_invariants_all_regimes(P):
+    for n1, n2, m in SHAPES:
+        for M in (None, 1 << 14, 1 << 22):
+            ch = choose_algorithm(n1, n2, P, m, M)
+            _grid_ok(ch, P)
+            if ch.kind == "3d-limited":
+                assert ch.b >= 1
+
+
+def test_p1_no_grid_fits_falls_back_to_1d():
+    # P = 1: c(c+1) >= 2 can never fit -> 1D regardless of regime
+    for n1, n2, m in SHAPES:
+        ch = choose_algorithm(n1, n2, 1, m)
+        assert ch.kind == "1d"
+        assert ch.predicted_words == 0.0      # P = 1 moves nothing
+
+
+def test_p2_smallest_grid():
+    # P = 2 fits exactly c = 1 (p1 = 2) with zero idle
+    ch = choose_algorithm(65536, 128, 2, 1)
+    assert ch.kind == "2d" and ch.c == 1 and ch.idle == 0
+
+
+def test_prime_p_idles_remainder():
+    # P = 7: largest grid is 2*3 = 6, one processor idles
+    ch = choose_algorithm(65536, 128, 7, 1)
+    assert ch.kind == "2d" and ch.c == 2 and ch.idle == 1
+
+
+def test_case3_p1_target_capped_at_P():
+    # n1 >> m*n2 makes the uncapped p1 target enormous; the grid must
+    # still embed in P (this used to return p1*p2 = 90 > P = 5)
+    ch = choose_algorithm(1 << 20, 2, 5, 1)
+    _grid_ok(ch, 5)
+
+
+def test_memory_constrained_grid_fits():
+    for P in (12, 240, 1000):
+        ch = choose_algorithm(32768, 1024, P, 1, M=1 << 22)
+        _grid_ok(ch, P)
+        if ch.kind == "3d-limited":
+            assert ch.b >= 1
+
+
+def test_fit_c_grid():
+    assert fit_c_grid(0) == 0
+    assert fit_c_grid(1) == 0
+    assert fit_c_grid(2) == 1
+    assert fit_c_grid(5) == 1
+    assert fit_c_grid(6) == 2
+    assert fit_c_grid(12) == 3
+    # clamped legacy helper still reports c >= 1
+    assert largest_c_grid(1) == 1
+
+
+def test_optimality_ratio_bounded_in_native_regimes():
+    # in each regime's home territory the chosen algorithm tracks the
+    # memory-independent W within a modest constant
+    for n1, n2, P, m in [(512, 1 << 16, 8, 1), (1 << 16, 256, 12, 1),
+                         (8192, 8192, 1980, 1), (1 << 16, 256, 2, 1)]:
+        ch = choose_algorithm(n1, n2, P, m)
+        W = memory_independent_lower_bound(n1, n2, P, m).W
+        assert 0 < ch.predicted_words <= 3.0 * W, (ch, W)

@@ -51,8 +51,8 @@ import jax, jax.numpy as jnp, numpy as np, sys
 sys.path.insert(0, %r)
 from repro.optim.gram import packed_gram
 from repro.core.packing import unpack_tril
-mesh = jax.make_mesh((4,), ("model",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.compat import make_mesh
+mesh = make_mesh((4,), ("model",), axis_types="auto")
 x = jax.random.normal(jax.random.key(0), (16, 128))
 g = packed_gram(x, mesh)
 dense = unpack_tril(g, 16, diag=True, symmetric=True)

@@ -3,6 +3,11 @@ capacity-windowed MoE reconstruction, streamed softmax, data seek."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property-based tests need the hypothesis "
+                           "dev dependency (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.models import attention as attn

@@ -2,6 +2,10 @@
 counters vs the paper's cost formulas (Algs 4–6, §VII)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property-based tests need the hypothesis "
+                           "dev dependency (requirements-dev.txt)")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
