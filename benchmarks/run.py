@@ -24,6 +24,64 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 SUITES = ("seq", "parallel", "memdep", "kernels", "roofline")
 
+#: fixed fwd+bwd shape grid for the BENCH_blas.json trajectory —
+#: keep stable across PRs so wall-clock rows stay comparable
+_BLAS_GRID = (("syrk", 128, 256), ("syrk", 256, 128),
+              ("syr2k", 128, 256), ("symm", 128, 128))
+
+
+def bench_blas_fwd_bwd(repeats: int = 3):
+    """Wall-clock of blas forward and value_and_grad over a small fixed
+    shape grid; rows land in repo-root BENCH_blas.json so the bench
+    trajectory accumulates across PRs."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import blas
+
+    rng = np.random.default_rng(0)
+    rows = []
+    for op, n1, n2 in _BLAS_GRID:
+        a = jnp.asarray(rng.standard_normal((n1, n2)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((n1, n2)), jnp.float32)
+        s = jnp.asarray(rng.standard_normal((n1, n1)), jnp.float32)
+        if op == "syrk":
+            fwd = jax.jit(lambda x: blas.syrk(x))
+            loss = jax.jit(jax.value_and_grad(
+                lambda x: blas.syrk(x).sum()))
+            args = (a,)
+        elif op == "syr2k":
+            fwd = jax.jit(lambda x, y: blas.syr2k(x, y))
+            loss = jax.jit(jax.value_and_grad(
+                lambda x, y: blas.syr2k(x, y).sum(), argnums=(0, 1)))
+            args = (a, b)
+        else:
+            fwd = jax.jit(lambda x, y: blas.symm(x, y))
+            loss = jax.jit(jax.value_and_grad(
+                lambda x, y: blas.symm(x, y).sum(), argnums=(0, 1)))
+            args = (s, b)
+
+        def timed(fn):
+            jax.block_until_ready(fn(*args))          # compile + warm
+            best = float("inf")
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(*args))
+                best = min(best, time.perf_counter() - t0)
+            return best
+
+        rows.append({
+            "op": op, "n1": n1, "n2": n2,
+            "backend": jax.default_backend(),
+            "fwd_s": timed(fwd), "fwd_bwd_s": timed(loss),
+        })
+    out = os.path.join(ROOT, "BENCH_blas.json")
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"[blas fwd+bwd] {len(rows)} rows -> {out}")
+    return rows
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -34,6 +92,13 @@ def main() -> None:
 
     os.makedirs(os.path.join(ROOT, "artifacts"), exist_ok=True)
     failures = 0
+    try:
+        bench_blas_fwd_bwd()        # always: feeds the BENCH trajectory
+    except Exception as e:  # noqa: BLE001
+        import traceback
+        traceback.print_exc()
+        print(f"[blas fwd+bwd] FAILED: {e}")
+        failures += 1
     for name in chosen:
         mod = __import__(f"benchmarks.bench_{'seq_bounds' if name == 'seq' else 'parallel_comm' if name == 'parallel' else name}",  # noqa: E501
                          fromlist=["main"])

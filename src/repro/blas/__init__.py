@@ -13,10 +13,14 @@ mesh.  See api.py for the dtype/fill/batching contracts.
 """
 from .api import explain, symm, syr2k, syrk
 from .autotune import clear_cache, heuristic_tiles, pick_tiles
-from .routing import PALLAS_MIN_N1, Route, plan_route
+from .grad import COTANGENT_OPS, sym_cotangent
+from .routing import (PALLAS_MIN_N1, Route, capture_routes, pinned,
+                      plan_route)
 
 __all__ = [
     "syrk", "syr2k", "symm", "explain",
     "plan_route", "Route", "PALLAS_MIN_N1",
+    "pinned", "capture_routes",
+    "COTANGENT_OPS", "sym_cotangent",
     "pick_tiles", "heuristic_tiles", "clear_cache",
 ]

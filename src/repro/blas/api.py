@@ -34,8 +34,8 @@ from ..core.packing import (pack_tril, pack_tril_tiles, pad2d, unpack_tril,
 from ..kernels.symm import symm_tiles
 from ..kernels.syr2k import syr2k_tiles
 from ..kernels.syrk import syrk_tiles
-from . import meshpath
-from .routing import Route, plan_route
+from . import grad, meshpath
+from .routing import Route, pinned, plan_route
 
 _FILLS = ("tril", "full", "packed")
 
@@ -142,6 +142,68 @@ def _apply_batched(fn, *arrays):
 
 
 # --------------------------------------------------------------------------
+# per-route executors (primal bodies; grad.py wraps these in custom_vjp)
+# --------------------------------------------------------------------------
+def _execute_syrk(a32: jax.Array, *, fill: str, route: Route, mesh,
+                  interpret: Optional[bool]) -> jax.Array:
+    n1 = a32.shape[-2]
+    if route.path == "1d":
+        packed = meshpath.syrk_1d_packed(a32, mesh, route.axis)
+        return _packed_to_fill(packed, n1, fill)
+    if route.path == "2d":
+        tril = meshpath.syrk_2d_dense(a32, route.choice.c, mesh, route.axis)
+        return _tril_to_fill(tril, fill)
+    if route.path == "3d":
+        tril = meshpath.syrk_3d_dense(a32, route.choice.c, route.choice.p2,
+                                      mesh)
+        return _tril_to_fill(tril, fill)
+    if route.path == "pallas":
+        fn = functools.partial(_syrk_pallas, fill=fill, tiles=route.tiles,
+                               interpret=interpret)
+        return _apply_batched(fn, a32)
+    return _syrk_dense(a32, fill)
+
+
+def _execute_syr2k(a32: jax.Array, b32: jax.Array, *, fill: str,
+                   route: Route, mesh, interpret: Optional[bool]
+                   ) -> jax.Array:
+    n1 = a32.shape[-2]
+    if route.path == "1d":
+        packed = meshpath.syr2k_1d_packed(a32, b32, mesh, route.axis)
+        return _packed_to_fill(packed, n1, fill)
+    if route.path == "2d":
+        tril = meshpath.syr2k_2d_dense(a32, b32, route.choice.c, mesh,
+                                       route.axis)
+        return _tril_to_fill(tril, fill)
+    if route.path == "3d":
+        tril = meshpath.syr2k_3d_dense(a32, b32, route.choice.c,
+                                       route.choice.p2, mesh)
+        return _tril_to_fill(tril, fill)
+    if route.path == "pallas":
+        fn = functools.partial(_syr2k_pallas, fill=fill, tiles=route.tiles,
+                               interpret=interpret)
+        return _apply_batched(fn, a32, b32)
+    return _syr2k_dense(a32, b32, fill)
+
+
+def _execute_symm(a32: jax.Array, b32: jax.Array, *, route: Route, mesh,
+                  interpret: Optional[bool]) -> jax.Array:
+    if route.path == "1d":
+        return meshpath.symm_1d_dense(a32, b32, mesh, route.axis)
+    if route.path == "2d":
+        return meshpath.symm_2d_dense(a32, b32, route.choice.c, mesh,
+                                      route.axis)
+    if route.path == "3d":
+        return meshpath.symm_3d_dense(a32, b32, route.choice.c,
+                                      route.choice.p2, mesh)
+    if route.path == "pallas":
+        fn = functools.partial(_symm_pallas, tiles=route.tiles,
+                               interpret=interpret)
+        return _apply_batched(fn, a32, b32)
+    return _apply_batched(_symm_dense, a32, b32)
+
+
+# --------------------------------------------------------------------------
 # public API
 # --------------------------------------------------------------------------
 def syrk(a, *, out_dtype=None, fill: str = "tril", mesh=None,
@@ -150,7 +212,9 @@ def syrk(a, *, out_dtype=None, fill: str = "tril", mesh=None,
     """C = A·Aᵀ for A (..., n1, n2), routed per regime.
 
     ``fill``: "tril" (default), "full", or "packed".  Accumulates in
-    f32; ``out_dtype=None`` returns f32.
+    f32; ``out_dtype=None`` returns f32.  Reverse-differentiable on
+    every route: the VJP is a SYMM executed through the same router
+    (see :mod:`repro.blas.grad`).
     """
     _check_fill(fill)
     a = jnp.asarray(a)
@@ -158,27 +222,17 @@ def syrk(a, *, out_dtype=None, fill: str = "tril", mesh=None,
     route = plan_route("syrk", n1, n2, dtype=a.dtype, batch=a.ndim > 2,
                        mesh=mesh, axis=axis, tile=tile, interpret=interpret)
     a32 = a.astype(jnp.float32)
-    if route.path == "1d":
-        packed = meshpath.syrk_1d_packed(a32, mesh, route.axis)
-        return _out(_packed_to_fill(packed, n1, fill), out_dtype)
-    if route.path == "2d":
-        tril = meshpath.syrk_2d_dense(a32, route.choice.c, mesh, route.axis)
-        return _out(_tril_to_fill(tril, fill), out_dtype)
-    if route.path == "3d":
-        tril = meshpath.syrk_3d_dense(a32, route.choice.c, route.choice.p2,
-                                      mesh)
-        return _out(_tril_to_fill(tril, fill), out_dtype)
-    if route.path == "pallas":
-        fn = functools.partial(_syrk_pallas, fill=fill, tiles=route.tiles,
-                               interpret=interpret)
-        return _out(_apply_batched(fn, a32), out_dtype)
-    return _out(_syrk_dense(a32, fill), out_dtype)
+    return _out(grad.syrk_call(a32, fill=fill, route=route, mesh=mesh,
+                               interpret=interpret), out_dtype)
 
 
 def syr2k(a, b, *, out_dtype=None, fill: str = "tril", mesh=None,
           axis: Optional[str] = None, tile=None,
           interpret: Optional[bool] = None) -> jax.Array:
-    """C = A·Bᵀ + B·Aᵀ for A, B (..., n1, n2), routed per regime."""
+    """C = A·Bᵀ + B·Aᵀ for A, B (..., n1, n2), routed per regime.
+
+    Reverse-differentiable on every route: the VJP is two SYMMs through
+    the same router (see :mod:`repro.blas.grad`)."""
     _check_fill(fill)
     a, b = jnp.asarray(a), jnp.asarray(b)
     if a.shape != b.shape:
@@ -188,22 +242,8 @@ def syr2k(a, b, *, out_dtype=None, fill: str = "tril", mesh=None,
     route = plan_route("syr2k", n1, n2, dtype=a.dtype, batch=a.ndim > 2,
                        mesh=mesh, axis=axis, tile=tile, interpret=interpret)
     a32, b32 = a.astype(jnp.float32), b.astype(jnp.float32)
-    if route.path == "1d":
-        packed = meshpath.syr2k_1d_packed(a32, b32, mesh, route.axis)
-        return _out(_packed_to_fill(packed, n1, fill), out_dtype)
-    if route.path == "2d":
-        tril = meshpath.syr2k_2d_dense(a32, b32, route.choice.c, mesh,
-                                       route.axis)
-        return _out(_tril_to_fill(tril, fill), out_dtype)
-    if route.path == "3d":
-        tril = meshpath.syr2k_3d_dense(a32, b32, route.choice.c,
-                                       route.choice.p2, mesh)
-        return _out(_tril_to_fill(tril, fill), out_dtype)
-    if route.path == "pallas":
-        fn = functools.partial(_syr2k_pallas, fill=fill, tiles=route.tiles,
-                               interpret=interpret)
-        return _out(_apply_batched(fn, a32, b32), out_dtype)
-    return _out(_syr2k_dense(a32, b32, fill), out_dtype)
+    return _out(grad.syr2k_call(a32, b32, fill=fill, route=route, mesh=mesh,
+                                interpret=interpret), out_dtype)
 
 
 def symm(a_sym, b, *, out_dtype=None, mesh=None,
@@ -213,7 +253,10 @@ def symm(a_sym, b, *, out_dtype=None, mesh=None,
 
     Only the lower triangle of ``a_sym`` is read (the upper half may
     hold garbage); the symmetric matrix is never materialized beyond
-    each path's working set.
+    each path's working set.  Reverse-differentiable on every route:
+    dB is a SYMM and dA a tril-projected SYR2K through the same router
+    (see :mod:`repro.blas.grad`); the dA cotangent is zero on the unread
+    upper triangle.
     """
     a_sym, b = jnp.asarray(a_sym), jnp.asarray(b)
     n1, n2 = b.shape[-2:]
@@ -222,25 +265,25 @@ def symm(a_sym, b, *, out_dtype=None, mesh=None,
     route = plan_route("symm", n1, n2, dtype=b.dtype, batch=b.ndim > 2,
                        mesh=mesh, axis=axis, tile=tile, interpret=interpret)
     a32, b32 = a_sym.astype(jnp.float32), b.astype(jnp.float32)
-    if route.path == "1d":
-        return _out(meshpath.symm_1d_dense(a32, b32, mesh, route.axis),
-                    out_dtype)
-    if route.path == "2d":
-        return _out(meshpath.symm_2d_dense(a32, b32, route.choice.c, mesh,
-                                           route.axis), out_dtype)
-    if route.path == "3d":
-        return _out(meshpath.symm_3d_dense(a32, b32, route.choice.c,
-                                           route.choice.p2, mesh),
-                    out_dtype)
-    if route.path == "pallas":
-        fn = functools.partial(_symm_pallas, tiles=route.tiles,
-                               interpret=interpret)
-        return _out(_apply_batched(fn, a32, b32), out_dtype)
-    return _out(_apply_batched(_symm_dense, a32, b32), out_dtype)
+    return _out(grad.symm_call(a32, b32, route=route, mesh=mesh,
+                               interpret=interpret), out_dtype)
 
 
 def explain(op: str, n1: int, n2: int, *, dtype=jnp.float32, mesh=None,
-            axis: Optional[str] = None) -> str:
-    """Human-readable routing decision for an (op, shape, mesh) triple."""
+            axis: Optional[str] = None, grad: bool = False) -> str:
+    """Human-readable routing decision for an (op, shape, mesh) triple.
+
+    With ``grad=True``, also shows one line per backward-pass op — the
+    route each cotangent takes when ``jax.grad`` flows through the call
+    (planned under the forward Route pin, exactly as the VJP does)."""
+    from .grad import COTANGENT_OPS
     r = plan_route(op, n1, n2, dtype=dtype, mesh=mesh, axis=axis)
-    return r.describe()
+    if not grad:
+        return r.describe()
+    lines = [r.describe()]
+    for wrt, bop in COTANGENT_OPS[op]:
+        with pinned(r):
+            br = plan_route(bop, n1, n2, dtype=jnp.float32, mesh=mesh,
+                            axis=r.axis)
+        lines.append(f"  d{wrt}: {br.describe()}")
+    return "\n".join(lines)

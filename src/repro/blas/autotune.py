@@ -29,8 +29,26 @@ _CANDIDATES: Tuple[Tiles, ...] = ((64, 64), (128, 128), (128, 256),
 _memory_cache: Dict[str, Tiles] = {}
 
 
+def _dtype_token(dtype) -> str:
+    """Canonical dtype spelling for cache keys.
+
+    Callers hand us anything dtype-like — ``jnp.float32`` (a *type*,
+    which stringifies as ``<class 'jax.numpy.float32'>``), ``np.dtype``
+    instances, or plain strings — and naive f-string interpolation
+    splits one problem class into several cache entries.  ``None``
+    (dtype unknown at planning time) gets its own stable token.
+    """
+    if dtype is None:
+        return "any"
+    try:
+        import jax.numpy as jnp
+        return jnp.dtype(dtype).name
+    except TypeError:
+        return str(dtype)
+
+
 def cache_key(op: str, n1: int, n2: int, dtype, backend: str) -> str:
-    return f"{op}:{n1}x{n2}:{dtype}:{backend}"
+    return f"{op}:{n1}x{n2}:{_dtype_token(dtype)}:{backend}"
 
 
 def _cache_dir() -> str:

@@ -1,0 +1,233 @@
+"""Custom VJPs for :mod:`repro.blas` — backward passes that are
+themselves communication-optimal symmetric ops.
+
+Without this layer, differentiability depended on which backend
+``plan_route`` picked: the dense jnp path differentiates out of the
+box, while the Pallas triangular kernels raise ``NotImplementedError``
+under ``jax.grad`` and the shard_map schedules fall back to whatever
+XLA derives for their collectives.  The paper closes the loop for us:
+the cotangents of the three kernels are again the three kernels
+(Al Daas et al. 2024; Beaumont et al., symmetric-kernel I/O analysis),
+so the backward rules below are expressed as ``repro.blas`` calls and
+re-enter ``plan_route`` — gradients get the triangular Pallas kernels
+or the 1D/2D/3D mesh schedules on their own merits, with the forward
+:class:`~repro.blas.routing.Route` pinned so both traces agree under
+``jit``.
+
+Math (f32 cotangent Ḡ; ``sym(M) = tril(M) + strict_tril(M)ᵀ`` is what
+``blas.symm`` reads):
+
+  SYRK   C = A·Aᵀ          dA = (Ḡ + Ḡᵀ)·A                — one SYMM
+  SYR2K  C = A·Bᵀ + B·Aᵀ   dA = (Ḡ + Ḡᵀ)·B, dB = (Ḡ + Ḡᵀ)·A — two SYMMs
+  SYMM   C = sym(A)·B      dB = sym(A)·Ḡ                   — one SYMM
+                           dA = tril(Ḡ·Bᵀ + B·Ḡᵀ), diag halved
+                                                — a tril-projected SYR2K
+
+Fill handling: a "tril"/"packed" primal only exposes the lower
+triangle, so its cotangent L enters the SYMM as the tril-valid operand
+L with the *diagonal doubled* (sym(L + diag L) = L + Lᵀ); a "full"
+primal exposes both mirrors and contributes tril(Ḡ) + triu(Ḡ)ᵀ.
+
+Residuals are the operands only — nothing symmetric is stored or
+recomputed, so backward memory matches forward operand memory and the
+backward communication volume obeys the same Thm 9 bounds as a forward
+call of the corresponding op.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.packing import tril_size, unpack_tril
+from . import routing
+
+#: backward ops per forward op: (cotangent name, blas op that computes it)
+COTANGENT_OPS = {
+    "syrk": (("A", "symm"),),
+    "syr2k": (("A", "symm"), ("B", "symm")),
+    "symm": (("A", "syr2k"), ("B", "symm")),
+}
+
+
+# --------------------------------------------------------------------------
+# cotangent shape algebra
+# --------------------------------------------------------------------------
+def _double_diag(lmat: jax.Array) -> jax.Array:
+    n = lmat.shape[-1]
+    return lmat * (1.0 + jnp.eye(n, dtype=lmat.dtype))
+
+
+def _halve_diag(lmat: jax.Array) -> jax.Array:
+    n = lmat.shape[-1]
+    return lmat * (1.0 - 0.5 * jnp.eye(n, dtype=lmat.dtype))
+
+
+def _packed_diag_scale(n1: int, value: float) -> np.ndarray:
+    """Packed-tril mask that is ``value`` on the diagonal slots, 1 off."""
+    scale = np.ones(tril_size(n1), np.float32)
+    i = np.arange(n1)
+    scale[i * (i + 3) // 2] = value
+    return scale
+
+
+def sym_cotangent(g: jax.Array, fill: str, n1: int) -> jax.Array:
+    """Fill-shaped cotangent -> tril-valid Lhat with
+    sym(Lhat) = dL/d(full symmetric C).
+
+    tril/packed primals never expose the upper triangle, so any
+    cotangent there belongs to structural zeros and is projected away;
+    their diagonal is doubled because C_ii depends on the operands
+    through a single exposed entry while sym() feeds it twice.
+    """
+    if fill == "full":
+        return jnp.tril(g) + jnp.triu(g).swapaxes(-1, -2)
+    if fill == "packed":
+        return _double_diag(unpack_tril(g, n1, diag=True, symmetric=False))
+    return _double_diag(jnp.tril(g))
+
+
+# --------------------------------------------------------------------------
+# backward rules (all expressed as repro.blas calls)
+# --------------------------------------------------------------------------
+def _bwd_kwargs(route: routing.Route, mesh, interpret):
+    """kwargs that let the backward blas call re-enter plan_route on the
+    forward call's terms (mesh/axis for mesh routes, interpret for the
+    single-device side; tiles come from the pin)."""
+    if mesh is not None:
+        return dict(mesh=mesh, axis=route.axis)
+    return dict(interpret=interpret)
+
+
+def _packed_1d_symm(g_packed: jax.Array, other: jax.Array, n1: int,
+                    route: routing.Route, mesh) -> jax.Array:
+    """Packed-fill cotangent × column-sharded operand on the 1D mesh
+    path: double the packed diagonal and feed the packed triangle
+    straight into the 1D SYMM — the cotangent stays in the wire format
+    end to end (no dense round-trip).  Returns None when the backward
+    SYMM does not route 1D."""
+    br = routing.plan_route("symm", n1, other.shape[-1],
+                            dtype=jnp.float32, mesh=mesh, axis=route.axis)
+    if br.path != "1d":
+        return None
+    from . import meshpath
+    lp = g_packed * jnp.asarray(_packed_diag_scale(n1, 2.0))
+    return meshpath.symm_1d_packed_a(lp, other, n1, mesh, br.axis)
+
+
+def _syrk_bwd(g: jax.Array, a: jax.Array, *, fill: str,
+              route: routing.Route, mesh, interpret) -> jax.Array:
+    from . import api
+    n1 = a.shape[-2]
+    g = g.astype(jnp.float32)
+    with routing.pinned(route):
+        if fill == "packed" and mesh is not None and a.ndim == 2:
+            da = _packed_1d_symm(g, a, n1, route, mesh)
+            if da is not None:
+                return da
+        return api.symm(sym_cotangent(g, fill, n1), a,
+                        **_bwd_kwargs(route, mesh, interpret))
+
+
+def _syr2k_bwd(g: jax.Array, a: jax.Array, b: jax.Array, *, fill: str,
+               route: routing.Route, mesh, interpret):
+    from . import api
+    n1 = a.shape[-2]
+    g = g.astype(jnp.float32)
+    kw = _bwd_kwargs(route, mesh, interpret)
+    with routing.pinned(route):
+        if fill == "packed" and mesh is not None and a.ndim == 2:
+            da = _packed_1d_symm(g, b, n1, route, mesh)
+            if da is not None:
+                db = _packed_1d_symm(g, a, n1, route, mesh)
+                return da, db
+        lhat = sym_cotangent(g, fill, n1)
+        return api.symm(lhat, b, **kw), api.symm(lhat, a, **kw)
+
+
+def _symm_bwd(g: jax.Array, a: jax.Array, b: jax.Array, *,
+              route: routing.Route, mesh, interpret):
+    from . import api
+    g = g.astype(jnp.float32)
+    kw = _bwd_kwargs(route, mesh, interpret)
+    with routing.pinned(route):
+        db = api.symm(a, g, **kw)
+        dsyr = api.syr2k(g, b, fill="tril", **kw)
+    # only tril(A) is read, so dA lives in the lower triangle; the
+    # diagonal is exposed once (vs twice for off-diag mirror pairs)
+    return _halve_diag(dsyr), db
+
+
+# --------------------------------------------------------------------------
+# custom_vjp entry points (called by api.py with the planned Route)
+# --------------------------------------------------------------------------
+def syrk_call(a32: jax.Array, *, fill: str, route: routing.Route, mesh,
+              interpret) -> jax.Array:
+    from . import api
+
+    def prim(a):
+        return api._execute_syrk(a, fill=fill, route=route, mesh=mesh,
+                                 interpret=interpret)
+
+    @jax.custom_vjp
+    def f(a):
+        return prim(a)
+
+    def fwd(a):
+        return prim(a), (a,)          # residual: operand only
+
+    def bwd(res, g):
+        (a,) = res
+        return (_syrk_bwd(g, a, fill=fill, route=route, mesh=mesh,
+                          interpret=interpret),)
+
+    f.defvjp(fwd, bwd)
+    return f(a32)
+
+
+def syr2k_call(a32: jax.Array, b32: jax.Array, *, fill: str,
+               route: routing.Route, mesh, interpret) -> jax.Array:
+    from . import api
+
+    def prim(a, b):
+        return api._execute_syr2k(a, b, fill=fill, route=route, mesh=mesh,
+                                  interpret=interpret)
+
+    @jax.custom_vjp
+    def f(a, b):
+        return prim(a, b)
+
+    def fwd(a, b):
+        return prim(a, b), (a, b)
+
+    def bwd(res, g):
+        a, b = res
+        return _syr2k_bwd(g, a, b, fill=fill, route=route, mesh=mesh,
+                          interpret=interpret)
+
+    f.defvjp(fwd, bwd)
+    return f(a32, b32)
+
+
+def symm_call(a32: jax.Array, b32: jax.Array, *, route: routing.Route,
+              mesh, interpret) -> jax.Array:
+    from . import api
+
+    def prim(a, b):
+        return api._execute_symm(a, b, route=route, mesh=mesh,
+                                 interpret=interpret)
+
+    @jax.custom_vjp
+    def f(a, b):
+        return prim(a, b)
+
+    def fwd(a, b):
+        return prim(a, b), (a, b)
+
+    def bwd(res, g):
+        a, b = res
+        return _symm_bwd(g, a, b, route=route, mesh=mesh,
+                         interpret=interpret)
+
+    f.defvjp(fwd, bwd)
+    return f(a32, b32)

@@ -194,17 +194,27 @@ def syr2k_1d_packed(a: jax.Array, b: jax.Array, mesh: Mesh, axis: str
                      out_specs=P(), check_vma=False)(a, b)
 
 
+def symm_1d_packed_a(a_packed: jax.Array, b: jax.Array, n1: int, mesh: Mesh,
+                     axis: str) -> jax.Array:
+    """f32 packed tril (tril_size(n1),) × (n1, n2), n2 % P == 0 -> (n1, n2).
+
+    SYMM whose symmetric operand arrives *already packed* — the wire
+    format of the 1D algorithms, and the shape the autodiff layer hands
+    back when a packed-fill SYRK/SYR2K cotangent flows into its
+    backward SYMM (no dense round-trip before the shard_map)."""
+    nsh = mesh.shape[axis]
+    packed = jnp.pad(a_packed,
+                     (0, _padded_tril_len(n1, nsh) - a_packed.shape[0]))
+    f = functools.partial(symm_1d_local, axis=axis, n1=n1)
+    return shard_map(f, mesh=mesh, in_specs=(P(axis), P(None, axis)),
+                     out_specs=P(None, axis), check_vma=False)(packed, b)
+
+
 def symm_1d_dense(a_sym: jax.Array, b: jax.Array, mesh: Mesh, axis: str
                   ) -> jax.Array:
     """f32 tril-valid (n1, n1) × (n1, n2), n2 % P == 0 -> (n1, n2)."""
     n1 = a_sym.shape[0]
-    nsh = mesh.shape[axis]
-    packed = pack_tril(jnp.tril(a_sym))
-    packed = jnp.pad(packed,
-                     (0, _padded_tril_len(n1, nsh) - packed.shape[0]))
-    f = functools.partial(symm_1d_local, axis=axis, n1=n1)
-    return shard_map(f, mesh=mesh, in_specs=(P(axis), P(None, axis)),
-                     out_specs=P(None, axis), check_vma=False)(packed, b)
+    return symm_1d_packed_a(pack_tril(jnp.tril(a_sym)), b, n1, mesh, axis)
 
 
 # --------------------------------------------------------------------------

@@ -11,11 +11,26 @@ backends on top and picks the fallback chain:
 
 All decisions are static functions of shapes/dtypes/mesh, so routing is
 jit/vmap-safe and free after the first trace.
+
+Two trace-time context mechanisms support the autodiff layer
+(:mod:`repro.blas.grad`):
+
+  * :func:`pinned` — while a forward :class:`Route` is pinned, the
+    backward-pass blas calls resolve onto the same path family
+    (single-device calls stay dense/pallas as the forward did; mesh
+    calls keep the forward axis), so primal and VJP agree under ``jit``
+    even when the environment (backend heuristics, autotuner cache)
+    would otherwise drift between the two traces;
+  * :func:`capture_routes` — records every planned Route, letting tests
+    assert that e.g. the backward of a mesh-routed SYRK really executes
+    a mesh-routed SYMM instead of trusting numerics alone.
 """
 from __future__ import annotations
 
+import contextlib
+import threading
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 
@@ -54,6 +69,71 @@ class Route:
                 f"{grid}{tiles} ({self.reason})")
 
 
+# --------------------------------------------------------------------------
+# trace-time context: route pinning + route capture
+# --------------------------------------------------------------------------
+_CTX = threading.local()
+
+
+def _pin_stack() -> List[Route]:
+    if not hasattr(_CTX, "pins"):
+        _CTX.pins = []
+    return _CTX.pins
+
+
+def _capture_stack() -> List[list]:
+    if not hasattr(_CTX, "captures"):
+        _CTX.captures = []
+    return _CTX.captures
+
+
+def current_pin() -> Optional[Route]:
+    stack = _pin_stack()
+    return stack[-1] if stack else None
+
+
+@contextlib.contextmanager
+def pinned(route: Optional[Route]):
+    """Pin a forward Route while planning its backward-pass ops.
+
+    Inside the context, single-device ``plan_route`` calls resolve onto
+    the pinned path family ("dense" stays dense, "pallas" stays pallas
+    with heuristic tiles for the backward op) and mesh calls inherit the
+    pinned axis when none is given.  ``route=None`` is a no-op.
+    """
+    if route is None:
+        yield
+        return
+    stack = _pin_stack()
+    stack.append(route)
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
+@contextlib.contextmanager
+def capture_routes():
+    """Collect every Route planned inside the context (trace-time).
+
+    Works under ``jit``/``grad`` because planning happens while Python
+    traces.  Yields the (live) list of Routes.
+    """
+    log: List[Route] = []
+    stack = _capture_stack()
+    stack.append(log)
+    try:
+        yield log
+    finally:
+        stack.remove(log)
+
+
+def _emit(route: Route) -> Route:
+    for log in _capture_stack():
+        log.append(route)
+    return route
+
+
 def _resolve_axis(mesh, axis: Optional[str]) -> Optional[str]:
     if mesh is None:
         return None
@@ -65,7 +145,12 @@ def _resolve_axis(mesh, axis: Optional[str]) -> Optional[str]:
         return axis
     if len(names) == 1:
         return names[0]
-    return "model" if "model" in mesh.shape else names[-1]
+    # auto-select: the largest axis (a size-1 'model' axis on a
+    # (data=4, model=1) mesh must not swallow the call into the
+    # single-device dense path); prefer 'model' then the last axis on
+    # size ties.
+    return max(names, key=lambda nm: (mesh.shape[nm], nm == "model",
+                                      names.index(nm)))
 
 
 def _grid_fits(choice: AlgoChoice, P: int, n2: int, single_axis: bool
@@ -107,39 +192,60 @@ def plan_route(op: str, n1: int, n2: int, *, dtype=None, batch: bool = False,
     if op not in M_OF:
         raise ValueError(f"unknown op {op!r}")
     m = M_OF[op]
+    pin = current_pin()
+    if pin is not None and axis is None:
+        axis = pin.axis if mesh is not None and pin.axis in mesh.shape \
+            else axis
     ax = _resolve_axis(mesh, axis)
 
     if mesh is not None and ax is not None and mesh.shape[ax] > 1:
-        if tile is not None or interpret is not None:
+        if tile is not None or interpret is True:
             import warnings
             warnings.warn("repro.blas: tile=/interpret= only affect the "
                           "single-device Pallas path and are ignored when "
                           "a mesh routes the call", stacklevel=3)
         P = mesh.shape[ax]
         if batch:
-            return Route(op, "dense", "batched inputs use the GSPMD "
-                         "dense path (collectives don't vmap)", n1, n2, m,
-                         P=P, axis=ax)
+            return _emit(Route(op, "dense", "batched inputs use the GSPMD "
+                               "dense path (collectives don't vmap)", n1, n2,
+                               m, P=P, axis=ax))
         choice = choose_algorithm(n1, n2, P, m)
         fits_1d = n2 % P == 0
         grid_path = _grid_fits(choice, P, n2, len(mesh.shape) == 1)
         if choice.kind == "1d" and fits_1d:
-            return Route(op, "1d", f"Thm 9 case {choice.case}: packed-"
-                         "triangle 1D is optimal", n1, n2, m, P=P, axis=ax,
-                         choice=choice)
+            return _emit(Route(op, "1d", f"Thm 9 case {choice.case}: packed-"
+                               "triangle 1D is optimal", n1, n2, m, P=P,
+                               axis=ax, choice=choice))
         if grid_path is not None:
-            return Route(op, grid_path, f"Thm 9 case {choice.case}: "
-                         f"{choice.kind} grid embeds exactly", n1, n2, m,
-                         P=P, axis=ax, choice=choice)
+            return _emit(Route(op, grid_path, f"Thm 9 case {choice.case}: "
+                               f"{choice.kind} grid embeds exactly", n1, n2,
+                               m, P=P, axis=ax, choice=choice))
         if fits_1d:
-            return Route(op, "1d", f"{choice.kind} grid infeasible on "
-                         f"P={P}; 1D fallback", n1, n2, m, P=P, axis=ax,
-                         choice=choice)
-        return Route(op, "dense", f"no distributed grid fits (P={P}, "
-                     f"n2%P={n2 % P}); GSPMD dense", n1, n2, m, P=P,
-                     axis=ax, choice=choice)
+            return _emit(Route(op, "1d", f"{choice.kind} grid infeasible on "
+                               f"P={P}; 1D fallback", n1, n2, m, P=P, axis=ax,
+                               choice=choice))
+        return _emit(Route(op, "dense", f"no distributed grid fits (P={P}, "
+                           f"n2%P={n2 % P}); GSPMD dense", n1, n2, m, P=P,
+                           axis=ax, choice=choice))
 
     # single device --------------------------------------------------------
+    if pin is not None and pin.P == 1:
+        # backward of a single-device call rides the forward's family so
+        # primal and VJP agree under jit regardless of backend heuristics
+        if pin.path == "pallas":
+            if isinstance(tile, tuple):
+                tiles = tile
+            elif op == pin.op and (n1, n2) == (pin.n1, pin.n2) \
+                    and pin.tiles is not None:
+                tiles = pin.tiles
+            else:
+                tiles = heuristic_tiles(op, n1, n2)
+            return _emit(Route(op, "pallas", f"pinned to forward "
+                               f"{pin.op} pallas route", n1, n2, m,
+                               tiles=tiles))
+        return _emit(Route(op, "dense", f"pinned to forward {pin.op} "
+                           "dense route", n1, n2, m))
+
     explicit = tile is not None or interpret is True
     backend = jax.default_backend()
     if explicit or (backend == "tpu" and n1 >= PALLAS_MIN_N1):
@@ -152,6 +258,6 @@ def plan_route(op: str, n1: int, n2: int, *, dtype=None, batch: bool = False,
             tiles = heuristic_tiles(op, n1, n2)
         why = "explicit tile/interpret request" if explicit else \
             f"triangular flat-grid kernel on {backend}"
-        return Route(op, "pallas", why, n1, n2, m, tiles=tiles)
-    return Route(op, "dense", f"small shape or no kernel backend "
-                 f"({backend}); fused jnp", n1, n2, m)
+        return _emit(Route(op, "pallas", why, n1, n2, m, tiles=tiles))
+    return _emit(Route(op, "dense", f"small shape or no kernel backend "
+                       f"({backend}); fused jnp", n1, n2, m))

@@ -23,11 +23,14 @@ from repro.optim import AdamW, Muon
 
 
 def describe_blas_routing(params_shape, mesh, axis: str = "model",
-                          limit: int = 12):
+                          limit: int = 12, grad: bool = True):
     """Routing table for the optimizer's symmetric kernels: one line per
     distinct trailing-2D parameter shape, showing which `repro.blas`
     path (dense / pallas / 1d / 2d / 3d) the NS Gram SYRK takes on this
-    mesh.  Printed at startup by launch/train.py for muon runs."""
+    mesh — and, with ``grad=True``, which route its cotangent SYMM takes
+    when the step is differentiated (the backward obeys the same Thm 9
+    bounds; see blas/grad.py).  Printed at startup by launch/train.py
+    for muon runs."""
     from repro import blas
     if axis not in mesh.shape:
         return [f"  (mesh has no {axis!r} axis: all shapes route dense)"]
@@ -36,8 +39,9 @@ def describe_blas_routing(params_shape, mesh, axis: str = "model",
                      if len(x.shape) >= 2})
     lines = []
     for n1, n2 in shapes[:limit]:
-        lines.append("  " + blas.explain("syrk", n1, n2, mesh=mesh,
-                                         axis=axis))
+        text = blas.explain("syrk", n1, n2, mesh=mesh, axis=axis,
+                            grad=grad)
+        lines.extend("  " + ln for ln in text.splitlines())
     if len(shapes) > limit:
         lines.append(f"  ... ({len(shapes) - limit} more shapes)")
     return lines

@@ -1,7 +1,10 @@
 """Optimizers: AdamW (w/ 8-bit moments) and Muon built on the paper's
-communication-optimal SYRK/SYMM (see muon.py)."""
+communication-optimal SYRK/SYMM (see muon.py), plus Gram-statistic
+tooling (gram.py) including a differentiable decorrelation penalty."""
 from .adamw import AdamW, AdamWState
+from .gram import GramMonitor, decorrelation_penalty, packed_gram
 from .muon import Muon, MuonState, orthogonalize_1d, orthogonalize_reference
 
 __all__ = ["AdamW", "AdamWState", "Muon", "MuonState", "orthogonalize_1d",
-           "orthogonalize_reference"]
+           "orthogonalize_reference", "GramMonitor", "packed_gram",
+           "decorrelation_penalty"]

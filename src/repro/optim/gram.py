@@ -26,6 +26,8 @@ from .. import blas
 from ..core.dispatch import choose_algorithm
 from ..core.packing import tril_size, unpack_tril
 
+import numpy as np
+
 
 def packed_gram(x: jax.Array, mesh: Optional[Mesh] = None,
                 axis: str = "model") -> jax.Array:
@@ -42,6 +44,30 @@ def packed_gram(x: jax.Array, mesh: Optional[Mesh] = None,
     packed = blas.syrk(x, fill="packed", mesh=mesh,
                        axis=axis if mesh is not None else None)
     return packed / n
+
+
+def decorrelation_penalty(x: jax.Array, mesh: Optional[Mesh] = None,
+                          axis: str = "model") -> jax.Array:
+    """½·Σ_{i>j} G_ij² for G = X·Xᵀ/n (each off-diagonal pair counted
+    once) — a feature-decorrelation auxiliary loss usable directly
+    inside a differentiated training objective.
+
+    Works entirely on the packed triangle: the forward is one
+    ``blas.syrk(fill="packed")`` (the 1D Alg-7 reduce-scatter on a
+    mesh) and, via :mod:`repro.blas.grad`, the backward is the routed
+    SYMM of the packed cotangent — both directions move only
+    ~d²/2 words and obey the same Thm 9 bounds.  Scalar f32 output.
+    """
+    d, n = x.shape[-2], x.shape[-1]
+    if mesh is not None and axis not in mesh.shape:
+        mesh = None          # documented fallback: compute locally
+    packed = blas.syrk(x, fill="packed", mesh=mesh,
+                       axis=axis if mesh is not None else None) / n
+    mask = np.ones(tril_size(d), np.float32)
+    i = np.arange(d)
+    mask[i * (i + 3) // 2] = 0.0          # drop the diagonal slots
+    off = packed * jnp.asarray(mask)
+    return 0.5 * jnp.sum(off * off)
 
 
 @dataclass

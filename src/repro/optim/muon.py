@@ -48,25 +48,34 @@ class MuonState(NamedTuple):
 # ---------------------------------------------------------------------------
 # Newton–Schulz cores
 # ---------------------------------------------------------------------------
-def ns_iteration_reference(x: jax.Array) -> jax.Array:
+def ns_iteration_reference(x: jax.Array, mesh: Optional[Mesh] = None,
+                           axis: Optional[str] = None) -> jax.Array:
     """One NS step on the unified symmetric-BLAS surface: the Gram is a
     SYRK and both symmetric products are SYMMs, so `repro.blas` routes
     each to the best path (fused jnp off-accelerator, the triangular
-    flat-grid Pallas kernels on TPU)."""
+    flat-grid Pallas kernels on TPU, the paper's mesh schedules when
+    ``mesh`` is given).  Since blas.grad the whole chain is also
+    reverse-differentiable on every route — the SYRK/SYMM cotangents are
+    routed SYMMs/SYR2Ks — so NS can sit inside a differentiated loss
+    (meta-learning through the optimizer) without densification
+    workarounds."""
     a, b, c = NS_COEFFS
-    s = blas.syrk(x, fill="full")              # S = X·Xᵀ, f32 accumulate
-    y = b * s + c * blas.symm(s, s)            # S² (symmetric · dense)
-    return a * x + blas.symm(y, x)             # sym(Y)·X
+    s = blas.syrk(x, fill="full", mesh=mesh, axis=axis)   # S = X·Xᵀ, f32
+    y = b * s + c * blas.symm(s, s, mesh=mesh, axis=axis)  # S² (sym · dense)
+    return a * x + blas.symm(y, x, mesh=mesh, axis=axis)   # sym(Y)·X
 
 
-def orthogonalize_reference(g: jax.Array, steps: int = 5) -> jax.Array:
+def orthogonalize_reference(g: jax.Array, steps: int = 5,
+                            mesh: Optional[Mesh] = None,
+                            axis: Optional[str] = None) -> jax.Array:
     """NS orthogonalization of a (m, n) matrix, operating on the short
     side; returns an approximately semi-orthogonal matrix."""
     transpose = g.shape[0] > g.shape[1]
     x = g.T if transpose else g
     x = x.astype(jnp.float32)
     x = x / (jnp.linalg.norm(x) + 1e-7)
-    x = jax.lax.fori_loop(0, steps, lambda _, v: ns_iteration_reference(v), x)
+    x = jax.lax.fori_loop(
+        0, steps, lambda _, v: ns_iteration_reference(v, mesh, axis), x)
     return (x.T if transpose else x).astype(g.dtype)
 
 
@@ -206,11 +215,19 @@ class Muon:
                                        self.ns_steps)
                 return out.swapaxes(-1, -2) if transpose else out
         if m2.ndim > 2:
+            # stacked params vmap the NS chain: collectives don't vmap,
+            # so no mesh here (blas routes dense/pallas per merits)
             flat = m2.reshape((-1,) + m2.shape[-2:])
             o = jax.vmap(lambda t: orthogonalize_reference(
                 t, self.ns_steps))(flat)
             return o.reshape(m2.shape)
-        return orthogonalize_reference(m2, self.ns_steps)
+        mesh, axis = None, None
+        if self.mesh is not None and self.axis in self.mesh.shape:
+            # reference mode on a mesh: let the blas router pick the
+            # comm-optimal schedule per (shape, P) instead of a manual
+            # shard_map — forward and (custom-VJP) backward both routed
+            mesh, axis = self.mesh, self.axis
+        return orthogonalize_reference(m2, self.ns_steps, mesh, axis)
 
     def update(self, grads: Any, state: MuonState, params: Any,
                lr_scale: jax.Array = 1.0) -> Tuple[Any, MuonState]:

@@ -1,0 +1,292 @@
+"""Autodiff contract of repro.blas (blas/grad.py): custom VJPs whose
+backward passes are themselves routed symmetric ops.
+
+Single-process coverage: the former NotImplementedError repro, gradient
+parity dense vs pallas-interpret for every op/fill (incl. batched), VJP
+math vs pure-jnp oracles, route pinning/capture, and the satellite
+fixes (axis resolution, autotune key stability, spurious warning).
+Mesh-path gradients (1D/2D, 8 fake devices) run in a subprocess via
+``dist_checks.py --suite blas_grad`` so XLA flags never leak.
+"""
+import os
+import subprocess
+import sys
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import blas
+from repro.blas.autotune import cache_key
+from repro.blas.routing import _resolve_axis
+from repro.core.packing import tril_size
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TOL = dict(rtol=1e-4, atol=3e-5)
+
+
+def _rand(shape, seed):
+    x = np.random.default_rng(seed).standard_normal(shape)
+    return jnp.asarray(x.astype(np.float32))
+
+
+A = _rand((48, 32), 0)
+B = _rand((48, 32), 1)
+S = _rand((48, 48), 2)
+
+def _syrk_ref(x, fill):
+    g = x @ x.T
+    if fill == "full":
+        return g
+    if fill == "packed":
+        return g[jnp.tril_indices(g.shape[-1])]
+    return jnp.tril(g)
+
+
+def _syr2k_ref(x, y, fill):
+    g = x @ y.T
+    g = g + g.T
+    if fill == "full":
+        return g
+    if fill == "packed":
+        return g[jnp.tril_indices(g.shape[-1])]
+    return jnp.tril(g)
+
+
+def _symm_ref(s, y):
+    return (jnp.tril(s) + jnp.tril(s, -1).T) @ y
+
+
+# ---------------------------------------------------------------------------
+# the regression that motivated the layer
+# ---------------------------------------------------------------------------
+def test_regression_pallas_syrk_grad_no_notimplementederror():
+    """jax.grad through blas.syrk(tile=(8,8), interpret=True) used to
+    raise NotImplementedError (Pallas kernels have no AD rule) while the
+    dense route differentiated fine — training worked or broke depending
+    on which backend plan_route picked."""
+    g = jax.grad(lambda x: blas.syrk(x, tile=(8, 8),
+                                     interpret=True).sum())(A)
+    assert g.shape == A.shape
+    want = jax.grad(lambda x: blas.syrk(x).sum())(A)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(want), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# grad parity across routes (dense vs pallas-interpret), all fills
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fill", ["tril", "full", "packed"])
+def test_syrk_grad_parity_and_oracle(fill):
+    gd = jax.grad(lambda x: jnp.sum(jnp.sin(blas.syrk(x, fill=fill))))(A)
+    gp = jax.grad(lambda x: jnp.sum(jnp.sin(
+        blas.syrk(x, fill=fill, tile=(16, 16), interpret=True))))(A)
+    gr = jax.grad(lambda x: jnp.sum(jnp.sin(_syrk_ref(x, fill))))(A)
+    np.testing.assert_allclose(np.asarray(gd), np.asarray(gr), **TOL)
+    np.testing.assert_allclose(np.asarray(gp), np.asarray(gr), **TOL)
+
+
+@pytest.mark.parametrize("fill", ["tril", "full", "packed"])
+def test_syr2k_grad_parity_and_oracle(fill):
+    def make(kw):
+        return lambda x, y: jnp.sum(jnp.sin(blas.syr2k(x, y, fill=fill,
+                                                       **kw)))
+    gd = jax.grad(make({}), argnums=(0, 1))(A, B)
+    gp = jax.grad(make(dict(tile=(16, 16), interpret=True)),
+                  argnums=(0, 1))(A, B)
+    gr = jax.grad(lambda x, y: jnp.sum(jnp.sin(_syr2k_ref(x, y, fill))),
+                  argnums=(0, 1))(A, B)
+    for got in (gd, gp):
+        for g_, r_ in zip(got, gr):
+            np.testing.assert_allclose(np.asarray(g_), np.asarray(r_),
+                                       **TOL)
+
+
+def test_symm_grad_parity_and_oracle():
+    def make(kw):
+        return lambda s, y: jnp.sum(jnp.cos(blas.symm(s, y, **kw)))
+    gd = jax.grad(make({}), argnums=(0, 1))(S, B)
+    gp = jax.grad(make(dict(tile=(16, 16), interpret=True)),
+                  argnums=(0, 1))(S, B)
+    gr = jax.grad(lambda s, y: jnp.sum(jnp.cos(_symm_ref(s, y))),
+                  argnums=(0, 1))(S, B)
+    for got in (gd, gp):
+        for g_, r_ in zip(got, gr):
+            np.testing.assert_allclose(np.asarray(g_), np.asarray(r_),
+                                       **TOL)
+
+
+def test_symm_da_lives_in_tril_and_ignores_poisoned_upper():
+    """Only tril(A) is read, so dA must be exactly zero above the
+    diagonal and unaffected by garbage planted there."""
+    poisoned = S + jnp.triu(jnp.full((48, 48), 1e6, jnp.float32), 1)
+    da_clean = jax.grad(lambda s: jnp.sum(jnp.cos(blas.symm(s, B))))(S)
+    da_poison = jax.grad(
+        lambda s: jnp.sum(jnp.cos(blas.symm(s, B))))(poisoned)
+    assert np.array_equal(np.asarray(jnp.triu(da_clean, 1)),
+                          np.zeros((48, 48), np.float32))
+    np.testing.assert_allclose(np.asarray(da_clean), np.asarray(da_poison),
+                               **TOL)
+
+
+# ---------------------------------------------------------------------------
+# batching / jit / vmap compositions
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("pallas", [False, True])
+def test_batched_grads(pallas):
+    kw = dict(tile=(16, 16), interpret=True) if pallas else {}
+    x = _rand((3, 32, 16), 3)
+    got = jax.grad(lambda t: jnp.sum(jnp.sin(
+        blas.syrk(t, fill="full", **kw))))(x)
+    want = jax.grad(lambda t: jnp.sum(jnp.sin(
+        jnp.einsum("bij,bkj->bik", t, t))))(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+def test_grad_of_vmap_and_jit():
+    x = _rand((3, 32, 16), 4)
+    f = jax.jit(jax.grad(lambda t: jnp.sum(jnp.sin(
+        jax.vmap(lambda u: blas.syrk(u, fill="full"))(t)))))
+    want = jax.grad(lambda t: jnp.sum(jnp.sin(
+        jnp.einsum("bij,bkj->bik", t, t))))(x)
+    np.testing.assert_allclose(np.asarray(f(x)), np.asarray(want), **TOL)
+
+
+def test_jit_grad_parity_pallas_vs_dense():
+    f = jax.jit(jax.grad(lambda x: jnp.sum(jnp.sin(
+        blas.syrk(x, tile=(16, 16), interpret=True)))))
+    want = jax.grad(lambda x: jnp.sum(jnp.sin(blas.syrk(x))))(A)
+    np.testing.assert_allclose(np.asarray(f(A)), np.asarray(want), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# routing: the backward is a routed symmetric op, pinned to the forward
+# ---------------------------------------------------------------------------
+def test_backward_of_pallas_syrk_is_pinned_pallas_symm():
+    with blas.capture_routes() as log:
+        jax.grad(lambda x: blas.syrk(x, tile=(16, 16),
+                                     interpret=True).sum())(A)
+    planned = [(r.op, r.path) for r in log]
+    assert ("syrk", "pallas") in planned
+    assert ("symm", "pallas") in planned, planned
+    bwd = [r for r in log if r.op == "symm"][0]
+    assert "pinned" in bwd.reason
+
+
+def test_backward_of_dense_syrk_stays_dense():
+    with blas.capture_routes() as log:
+        jax.grad(lambda x: blas.syrk(x).sum())(A)
+    assert [(r.op, r.path) for r in log] == [("syrk", "dense"),
+                                             ("symm", "dense")]
+
+
+def test_symm_backward_plans_symm_and_syr2k():
+    with blas.capture_routes() as log:
+        jax.grad(lambda s: blas.symm(s, B).sum())(S)
+    ops = sorted((r.op, r.path) for r in log)
+    assert ("syr2k", "dense") in ops and ("symm", "dense") in ops
+
+
+def test_explain_grad_lines():
+    text = blas.explain("syrk", 512, 256, grad=True)
+    assert "dA:" in text and "symm[512x256]" in text
+    text = blas.explain("symm", 64, 64, grad=True)
+    assert "dA:" in text and "dB:" in text and "syr2k" in text
+
+
+# ---------------------------------------------------------------------------
+# integration: optimizer chains differentiate end-to-end
+# ---------------------------------------------------------------------------
+def test_ns_iteration_differentiable_on_pallas_route():
+    from repro.optim.muon import ns_iteration_reference
+    x = _rand((16, 24), 5)
+
+    def loss(t, kw):
+        a, b, c = 3.4445, -4.7750, 2.0315
+        s = blas.syrk(t, fill="full", **kw)
+        y = b * s + c * blas.symm(s, s, **kw)
+        return jnp.sum((a * t + blas.symm(y, t, **kw)) ** 2)
+
+    gd = jax.grad(lambda t: jnp.sum(ns_iteration_reference(t) ** 2))(x)
+    gp = jax.grad(lambda t: loss(t, dict(tile=(8, 8), interpret=True)))(x)
+    np.testing.assert_allclose(np.asarray(gd), np.asarray(gp),
+                               rtol=2e-3, atol=2e-4)
+
+
+def test_decorrelation_penalty_grad_matches_reference():
+    from repro.optim.gram import decorrelation_penalty
+    x = _rand((12, 40), 6)
+
+    def ref(t):
+        g = (t @ t.T) / t.shape[-1]
+        off = g - jnp.diag(jnp.diag(g))
+        return 0.25 * jnp.sum(off * off)   # tril half == 1/2 of both
+
+    got = jax.grad(decorrelation_penalty)(x)
+    want = jax.grad(ref)(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# satellite fixes
+# ---------------------------------------------------------------------------
+class _FakeMesh:
+    """Stands in for jax.sharding.Mesh in routing decisions (plan_route
+    only reads .shape), so multi-axis meshes are testable on 1 device."""
+
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def test_resolve_axis_prefers_largest_not_size1_model():
+    assert _resolve_axis(_FakeMesh({"data": 4, "model": 1}), None) == "data"
+    assert _resolve_axis(_FakeMesh({"data": 4, "model": 4}), None) == "model"
+    assert _resolve_axis(_FakeMesh({"a": 2, "b": 8}), None) == "b"
+    assert _resolve_axis(_FakeMesh({"data": 4, "model": 1}),
+                         "model") == "model"
+    with pytest.raises(ValueError):
+        _resolve_axis(_FakeMesh({"data": 4}), "model")
+
+
+def test_plan_route_multiaxis_mesh_with_size1_model_routes_distributed():
+    mesh = _FakeMesh({"data": 4, "model": 1})
+    r = blas.plan_route("syrk", 16, 64, mesh=mesh)
+    assert r.path != "dense" and r.axis == "data" and r.P == 4
+
+
+def test_no_spurious_warning_for_interpret_false_on_mesh():
+    mesh = _FakeMesh({"x": 4})
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        blas.plan_route("syrk", 16, 64, mesh=mesh, interpret=False)
+    with pytest.warns(UserWarning, match="ignored when"):
+        blas.plan_route("syrk", 16, 64, mesh=mesh, interpret=True)
+    with pytest.warns(UserWarning, match="ignored when"):
+        blas.plan_route("syrk", 16, 64, mesh=mesh, tile=(8, 8))
+
+
+def test_cache_key_dtype_stability():
+    keys = {cache_key("syrk", 32, 32, d, "cpu")
+            for d in (jnp.float32, np.dtype("float32"), "float32",
+                      np.float32)}
+    assert keys == {"syrk:32x32:float32:cpu"}
+    assert cache_key("syrk", 32, 32, None, "cpu") == "syrk:32x32:any:cpu"
+    assert cache_key("syrk", 32, 32, jnp.bfloat16, "cpu") \
+        == "syrk:32x32:bfloat16:cpu"
+
+
+# ---------------------------------------------------------------------------
+# mesh-path gradients (subprocess: fake devices must not leak)
+# ---------------------------------------------------------------------------
+def test_mesh_grad_parity_subprocess():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", "dist_checks.py"),
+         "--suite", "blas_grad"],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, f"blas_grad suite failed:\n{out.stdout}\n" \
+                                f"{out.stderr}"
+    assert "OK blas_grad" in out.stdout
