@@ -24,16 +24,68 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 SUITES = ("seq", "parallel", "memdep", "kernels", "roofline")
 
-#: fixed fwd+bwd shape grid for the BENCH_blas.json trajectory —
-#: keep stable across PRs so wall-clock rows stay comparable
-_BLAS_GRID = (("syrk", 128, 256), ("syrk", 256, 128),
-              ("syr2k", 128, 256), ("symm", 128, 128))
+#: fixed fwd+bwd shape grid for the BENCH_blas.json trajectory — the
+#: original four rows stay byte-identical in (op, n1, n2, fill) so
+#: wall-clock rows remain comparable across PRs; the added rows cover
+#: the packed fill, the beta-accumulate epilogue, and >=1024 shapes
+#: where the ~2x storage win is visible in the movement columns.
+#: Each entry: (op, n1, n2, fill, accumulate).
+_BLAS_GRID = (
+    ("syrk", 128, 256, "tril", False),
+    ("syrk", 256, 128, "tril", False),
+    ("syr2k", 128, 256, "tril", False),
+    ("symm", 128, 128, None, False),
+    # packed + accumulate epilogues
+    ("syrk", 128, 256, "packed", False),
+    ("syrk", 128, 256, "packed", True),
+    ("syr2k", 128, 256, "packed", False),
+    # large points (>=1024): storage-bound regime
+    ("syrk", 1024, 1024, "tril", False),
+    ("syrk", 1024, 1024, "packed", False),
+    ("syrk", 1024, 1024, "packed", True),
+    ("syr2k", 1024, 512, "packed", False),
+    ("symm", 1024, 512, None, False),
+)
+
+_LARGE_N1 = 1024
 
 
-def bench_blas_fwd_bwd(repeats: int = 3):
-    """Wall-clock of blas forward and value_and_grad over a small fixed
-    shape grid; rows land in repo-root BENCH_blas.json so the bench
-    trajectory accumulates across PRs."""
+def _tril_words(n: int) -> int:
+    return n * (n + 1) // 2
+
+
+def _movement_estimate(op, n1, n2, fill, accumulate):
+    """Analytic words-moved / peak-live estimate for one call (f32
+    words; x4 for bytes).  Output words follow the storage format:
+    packed moves ~n²/2 — the paper's symmetric-storage bound — while
+    tril/full move the dense n².  The packed Pallas path has no dense
+    intermediate, so peak-live is inputs + packed output."""
+    if op == "symm":
+        in_w = _tril_words(n1) + n1 * n2      # packed A tiles + dense B
+        out_w = n1 * n2
+        dense_out = n1 * n2
+    else:
+        m = 1 if op == "syrk" else 2
+        in_w = m * n1 * n2
+        out_w = _tril_words(n1) if fill == "packed" else n1 * n1
+        dense_out = n1 * n1
+    if accumulate:
+        in_w += out_w                          # the streamed C0
+    return {
+        "moved_words": in_w + out_w,
+        "out_words": out_w,
+        "dense_out_words": dense_out,
+        "peak_live_words": in_w + out_w,
+        "storage_saving": round(dense_out / out_w, 3),
+    }
+
+
+def bench_blas_fwd_bwd(repeats: int = 3, grid: str = "full"):
+    """Wall-clock of blas forward and value_and_grad over a fixed shape
+    grid, plus analytic bytes-moved / peak-live columns; rows land in
+    repo-root BENCH_blas.json so the bench trajectory accumulates
+    across PRs.  ``grid="small"`` keeps only the sub-1024 rows (the CI
+    smoke configuration)."""
     import jax
     import jax.numpy as jnp
     import numpy as np
@@ -42,19 +94,31 @@ def bench_blas_fwd_bwd(repeats: int = 3):
 
     rng = np.random.default_rng(0)
     rows = []
-    for op, n1, n2 in _BLAS_GRID:
+    for op, n1, n2, fill, accumulate in _BLAS_GRID:
+        if grid == "small" and n1 >= _LARGE_N1:
+            continue
         a = jnp.asarray(rng.standard_normal((n1, n2)), jnp.float32)
         b = jnp.asarray(rng.standard_normal((n1, n2)), jnp.float32)
         s = jnp.asarray(rng.standard_normal((n1, n1)), jnp.float32)
+        kw = {} if fill is None else dict(fill=fill)
         if op == "syrk":
-            fwd = jax.jit(lambda x: blas.syrk(x))
-            loss = jax.jit(jax.value_and_grad(
-                lambda x: blas.syrk(x).sum()))
-            args = (a,)
+            if accumulate:
+                c0 = blas.syrk(b, **kw)
+                fwd = jax.jit(lambda x, c: blas.syrk(x, c=c, **kw))
+                loss = jax.jit(jax.value_and_grad(
+                    lambda x, c: blas.syrk(x, c=c, **kw).sum(),
+                    argnums=(0, 1)))
+                args = (a, c0)
+            else:
+                fwd = jax.jit(lambda x: blas.syrk(x, **kw))
+                loss = jax.jit(jax.value_and_grad(
+                    lambda x: blas.syrk(x, **kw).sum()))
+                args = (a,)
         elif op == "syr2k":
-            fwd = jax.jit(lambda x, y: blas.syr2k(x, y))
+            fwd = jax.jit(lambda x, y: blas.syr2k(x, y, **kw))
             loss = jax.jit(jax.value_and_grad(
-                lambda x, y: blas.syr2k(x, y).sum(), argnums=(0, 1)))
+                lambda x, y: blas.syr2k(x, y, **kw).sum(),
+                argnums=(0, 1)))
             args = (a, b)
         else:
             fwd = jax.jit(lambda x, y: blas.symm(x, y))
@@ -71,29 +135,44 @@ def bench_blas_fwd_bwd(repeats: int = 3):
                 best = min(best, time.perf_counter() - t0)
             return best
 
-        rows.append({
+        row = {
             "op": op, "n1": n1, "n2": n2,
+            "fill": fill or "n/a", "accumulate": accumulate,
             "backend": jax.default_backend(),
             "fwd_s": timed(fwd), "fwd_bwd_s": timed(loss),
-        })
-    out = os.path.join(ROOT, "BENCH_blas.json")
+        }
+        row.update(_movement_estimate(op, n1, n2, fill, accumulate))
+        rows.append(row)
+    if grid == "full":
+        out = os.path.join(ROOT, "BENCH_blas.json")
+    else:
+        # the committed repo-root file is the full-grid cross-PR
+        # trajectory; a small-grid (CI smoke) run must not truncate it
+        os.makedirs(os.path.join(ROOT, "artifacts"), exist_ok=True)
+        out = os.path.join(ROOT, "artifacts", "BENCH_blas_small.json")
     with open(out, "w") as f:
         json.dump(rows, f, indent=1)
-    print(f"[blas fwd+bwd] {len(rows)} rows -> {out}")
+    print(f"[blas fwd+bwd] {len(rows)} rows ({grid} grid) -> {out}")
     return rows
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset of: " + ",".join(SUITES))
+                    help="comma-separated subset of: "
+                         + ",".join(SUITES) + ",blas ('blas' = only the "
+                         "BENCH_blas.json fwd+bwd grid)")
+    ap.add_argument("--grid", default="full", choices=("full", "small"),
+                    help="blas grid size: 'small' drops the >=1024 rows "
+                         "(CI smoke)")
     args = ap.parse_args()
     chosen = args.only.split(",") if args.only else list(SUITES)
+    chosen = [c for c in chosen if c != "blas"]
 
     os.makedirs(os.path.join(ROOT, "artifacts"), exist_ok=True)
     failures = 0
     try:
-        bench_blas_fwd_bwd()        # always: feeds the BENCH trajectory
+        bench_blas_fwd_bwd(grid=args.grid)  # always: feeds the trajectory
     except Exception as e:  # noqa: BLE001
         import traceback
         traceback.print_exc()

@@ -19,18 +19,33 @@ Contracts shared by all paths:
   * SYRK/SYR2K ``fill``: "tril" (dense lower-triangular, default),
     "full" (symmetrized dense), or "packed" (row-major packed lower
     triangle, the wire format of the 1D algorithms);
-  * SYMM reads only the lower triangle of its symmetric operand.
+  * SYMM reads only the lower triangle of its symmetric operand, which
+    may arrive dense *or* as a pre-packed
+    :class:`~repro.core.packing.TriTiles` — the packed layout then flows
+    straight into the kernel with no densification;
+  * SYRK/SYR2K accept ``c``/``beta``/``alpha`` for chunked accumulation:
+    ``C_out = alpha·op(A[,B]) + beta·C`` with ``c`` in the same fill
+    format as the output (only its lower triangle is read).  On the
+    Pallas route the scale-and-accumulate runs inside the kernel
+    epilogue; elsewhere it is a fused jnp combine.
+
+Packed-layout discipline (the paper's ~n²/2 storage bound): on the
+Pallas route, ``fill="packed"`` and ``fill="tril"`` never materialize an
+n×n dense intermediate — the kernels emit diagonal-masked packed tiles
+(epilogue in-kernel) and the fill conversion is a cached-index gather
+(packed) or the output assembly itself (tril).
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
-from ..core.packing import (pack_tril, pack_tril_tiles, pad2d, unpack_tril,
-                            unpack_tril_tiles)
+from ..core.packing import (TriTiles, pack_tril, pack_tril_tiles,
+                            packed_to_tiles, pad2d, tiles_to_packed,
+                            tril_size, unpack_tril, unpack_tril_tiles)
 from ..kernels.symm import symm_tiles
 from ..kernels.syr2k import syr2k_tiles
 from ..kernels.syrk import syrk_tiles
@@ -66,6 +81,45 @@ def _packed_to_fill(packed: jax.Array, n1: int, fill: str) -> jax.Array:
     return unpack_tril(packed, n1, diag=True, symmetric=(fill == "full"))
 
 
+def _tiles_to_fill(tiles: jax.Array, n1: int, bm: int, fill: str
+                   ) -> jax.Array:
+    """Kernel-emitted packed tiles (T, bm, bm), diagonal already masked
+    in-epilogue, to the requested fill.  "packed" is a cached-index
+    gather — no n×n dense intermediate; "tril"/"full" scatter straight
+    into the output buffer (no re-tril / re-pack fixups)."""
+    if fill == "packed":
+        return tiles_to_packed(tiles, n1)
+    npad = -(-n1 // bm) * bm
+    dense = unpack_tril_tiles(tiles, npad, bm, symmetric=(fill == "full"))
+    return dense[..., :n1, :n1]
+
+
+def _fill_to_tiles(c: jax.Array, n1: int, bm: int, fill: str) -> jax.Array:
+    """Fill-format C -> packed (T, bm, bm) tiles for the in-kernel
+    beta-accumulate.  Only the lower triangle is consumed: strictly-upper
+    grid tiles are never gathered, and the epilogue's diagonal mask runs
+    *after* the accumulate, so intra-tile upper garbage cannot leak."""
+    if fill == "packed":
+        return packed_to_tiles(c, n1, bm)
+    return pack_tril_tiles(pad2d(c, bm, bm), bm)
+
+
+def _combine_fill(base: jax.Array, c: Optional[jax.Array], alpha: float,
+                  beta: float, fill: str) -> jax.Array:
+    """Fused jnp epilogue for the non-Pallas routes:
+    ``alpha·base + beta·tril-projection(c)`` in the fill's own layout."""
+    if alpha != 1.0:
+        base = alpha * base
+    if c is None or beta == 0.0:
+        return base
+    if fill == "packed":
+        return base + beta * c
+    if fill == "tril":
+        return base + beta * jnp.tril(c)
+    return base + beta * (jnp.tril(c)
+                          + jnp.tril(c, -1).swapaxes(-1, -2))
+
+
 # --------------------------------------------------------------------------
 # single-matrix executors
 # --------------------------------------------------------------------------
@@ -85,58 +139,81 @@ def _symm_dense(a32: jax.Array, b32: jax.Array) -> jax.Array:
     return sym @ b32
 
 
-def _syrk_pallas(a32: jax.Array, fill: str, tiles: Tuple[int, int],
-                 interpret: Optional[bool]) -> jax.Array:
+def _syrk_pallas(a32: jax.Array, c32: Optional[jax.Array], fill: str,
+                 tiles: Tuple[int, int], interpret: Optional[bool],
+                 alpha: float = 1.0, beta: float = 0.0,
+                 out_dtype=jnp.float32) -> jax.Array:
     bm, bk = tiles
     n1 = a32.shape[0]
     ap = pad2d(a32, bm, bk)
-    packed_tiles = syrk_tiles(ap, bm=bm, bk=bk, interpret=interpret)
-    dense = unpack_tril_tiles(packed_tiles, ap.shape[0], bm,
-                              symmetric=(fill == "full"))[:n1, :n1]
-    if fill == "full":
-        return dense
-    return _tril_to_fill(jnp.tril(dense), fill)
+    # same predicate the kernel epilogue uses — don't build tiles it drops
+    c0 = _fill_to_tiles(c32, n1, bm, fill) \
+        if c32 is not None and beta != 0.0 else None
+    packed_tiles = syrk_tiles(ap, bm=bm, bk=bk, interpret=interpret,
+                              c0=c0, alpha=alpha, beta=beta,
+                              out_dtype=out_dtype)
+    return _tiles_to_fill(packed_tiles, n1, bm, fill)
 
 
-def _syr2k_pallas(a32: jax.Array, b32: jax.Array, fill: str,
-                  tiles: Tuple[int, int], interpret: Optional[bool]
-                  ) -> jax.Array:
+def _syr2k_pallas(a32: jax.Array, b32: jax.Array,
+                  c32: Optional[jax.Array], fill: str,
+                  tiles: Tuple[int, int], interpret: Optional[bool],
+                  alpha: float = 1.0, beta: float = 0.0,
+                  out_dtype=jnp.float32) -> jax.Array:
     bm, bk = tiles
     n1 = a32.shape[0]
     ap, bp = pad2d(a32, bm, bk), pad2d(b32, bm, bk)
-    packed_tiles = syr2k_tiles(ap, bp, bm=bm, bk=bk, interpret=interpret)
-    dense = unpack_tril_tiles(packed_tiles, ap.shape[0], bm,
-                              symmetric=(fill == "full"))[:n1, :n1]
-    if fill == "full":
-        return dense
-    return _tril_to_fill(jnp.tril(dense), fill)
+    c0 = _fill_to_tiles(c32, n1, bm, fill) \
+        if c32 is not None and beta != 0.0 else None
+    packed_tiles = syr2k_tiles(ap, bp, bm=bm, bk=bk, interpret=interpret,
+                               c0=c0, alpha=alpha, beta=beta,
+                               out_dtype=out_dtype)
+    return _tiles_to_fill(packed_tiles, n1, bm, fill)
 
 
 def _symm_pallas(a32: jax.Array, b32: jax.Array, tiles: Tuple[int, int],
-                 interpret: Optional[bool]) -> jax.Array:
+                 interpret: Optional[bool],
+                 out_dtype=jnp.float32) -> jax.Array:
+    """Dense tril-valid A: tile-pack the lower triangle (the upper half
+    never reaches kernel HBM — strictly-upper grid tiles are not
+    gathered and diagonal tiles are symmetrized from tril in VMEM)."""
     bm, bn = tiles
     n1, n2 = b32.shape
-    ap = pad2d(jnp.tril(a32), bm, bm)
+    ap = pad2d(a32, bm, bm)
     bp = pad2d(b32, bm, bn)
     packed = pack_tril_tiles(ap, bm)
-    return symm_tiles(packed, bp, bm=bm, bn=bn,
-                      interpret=interpret)[:n1, :n2]
+    return symm_tiles(packed, bp, bm=bm, bn=bn, interpret=interpret,
+                      out_dtype=out_dtype)[:n1, :n2]
+
+
+def _symm_pallas_tiles(a_tiles: jax.Array, b32: jax.Array, n1: int,
+                       bm: int, bn: int, interpret: Optional[bool],
+                       out_dtype=jnp.float32) -> jax.Array:
+    """Pre-packed TriTiles A: the packed tiles flow straight into the
+    kernel — no dense rebuild anywhere on the path."""
+    n2 = b32.shape[-1]
+    bp = pad2d(b32, bm, bn)
+    return symm_tiles(a_tiles, bp, bm=bm, bn=bn, interpret=interpret,
+                      out_dtype=out_dtype)[:n1, :n2]
 
 
 # --------------------------------------------------------------------------
 # batching helper
 # --------------------------------------------------------------------------
-def _apply_batched(fn, *arrays):
+def _apply_batched(fn, *arrays, trailing=None):
     """vmap ``fn`` over flattened leading batch dims (shared by all
-    operands), or call directly for 2-D operands."""
-    lead = arrays[0].shape[:-2]
-    for x in arrays[1:]:
-        if x.shape[:-2] != lead:
+    operands), or call directly for unbatched operands.  ``trailing``
+    gives per-operand core ranks (default 2 each)."""
+    ranks = trailing or (2,) * len(arrays)
+    lead = arrays[0].shape[:arrays[0].ndim - ranks[0]]
+    for x, r in zip(arrays[1:], ranks[1:]):
+        if x.shape[:x.ndim - r] != lead:
             raise ValueError("operands must share leading batch dims: "
                              f"{[x.shape for x in arrays]}")
     if not lead:
         return fn(*arrays)
-    flat = [x.reshape((-1,) + x.shape[-2:]) for x in arrays]
+    flat = [x.reshape((-1,) + x.shape[x.ndim - r:])
+            for x, r in zip(arrays, ranks)]
     out = jax.vmap(fn)(*flat)
     return out.reshape(lead + out.shape[1:])
 
@@ -144,50 +221,74 @@ def _apply_batched(fn, *arrays):
 # --------------------------------------------------------------------------
 # per-route executors (primal bodies; grad.py wraps these in custom_vjp)
 # --------------------------------------------------------------------------
-def _execute_syrk(a32: jax.Array, *, fill: str, route: Route, mesh,
-                  interpret: Optional[bool]) -> jax.Array:
+def _execute_syrk(a32: jax.Array, c32: Optional[jax.Array], *, fill: str,
+                  alpha: float, beta: float, route: Route, mesh,
+                  interpret: Optional[bool],
+                  out_dtype=None) -> jax.Array:
     n1 = a32.shape[-2]
     if route.path == "1d":
         packed = meshpath.syrk_1d_packed(a32, mesh, route.axis)
-        return _packed_to_fill(packed, n1, fill)
+        base = _packed_to_fill(packed, n1, fill)
+        return _combine_fill(base, c32, alpha, beta, fill)
     if route.path == "2d":
         tril = meshpath.syrk_2d_dense(a32, route.choice.c, mesh, route.axis)
-        return _tril_to_fill(tril, fill)
+        return _combine_fill(_tril_to_fill(tril, fill), c32, alpha, beta,
+                             fill)
     if route.path == "3d":
         tril = meshpath.syrk_3d_dense(a32, route.choice.c, route.choice.p2,
                                       mesh)
-        return _tril_to_fill(tril, fill)
+        return _combine_fill(_tril_to_fill(tril, fill), c32, alpha, beta,
+                             fill)
     if route.path == "pallas":
         fn = functools.partial(_syrk_pallas, fill=fill, tiles=route.tiles,
-                               interpret=interpret)
-        return _apply_batched(fn, a32)
-    return _syrk_dense(a32, fill)
+                               interpret=interpret, alpha=alpha, beta=beta,
+                               out_dtype=out_dtype or jnp.float32)
+        if c32 is None:
+            return _apply_batched(lambda a: fn(a, None), a32)
+        crank = 1 if fill == "packed" else 2
+        return _apply_batched(fn, a32, c32, trailing=(2, crank))
+    return _combine_fill(_syrk_dense(a32, fill), c32, alpha, beta, fill)
 
 
-def _execute_syr2k(a32: jax.Array, b32: jax.Array, *, fill: str,
-                   route: Route, mesh, interpret: Optional[bool]
-                   ) -> jax.Array:
+def _execute_syr2k(a32: jax.Array, b32: jax.Array,
+                   c32: Optional[jax.Array], *, fill: str, alpha: float,
+                   beta: float, route: Route, mesh,
+                   interpret: Optional[bool],
+                   out_dtype=None) -> jax.Array:
     n1 = a32.shape[-2]
     if route.path == "1d":
         packed = meshpath.syr2k_1d_packed(a32, b32, mesh, route.axis)
-        return _packed_to_fill(packed, n1, fill)
+        base = _packed_to_fill(packed, n1, fill)
+        return _combine_fill(base, c32, alpha, beta, fill)
     if route.path == "2d":
         tril = meshpath.syr2k_2d_dense(a32, b32, route.choice.c, mesh,
                                        route.axis)
-        return _tril_to_fill(tril, fill)
+        return _combine_fill(_tril_to_fill(tril, fill), c32, alpha, beta,
+                             fill)
     if route.path == "3d":
         tril = meshpath.syr2k_3d_dense(a32, b32, route.choice.c,
                                        route.choice.p2, mesh)
-        return _tril_to_fill(tril, fill)
+        return _combine_fill(_tril_to_fill(tril, fill), c32, alpha, beta,
+                             fill)
     if route.path == "pallas":
         fn = functools.partial(_syr2k_pallas, fill=fill, tiles=route.tiles,
-                               interpret=interpret)
-        return _apply_batched(fn, a32, b32)
-    return _syr2k_dense(a32, b32, fill)
+                               interpret=interpret, alpha=alpha, beta=beta,
+                               out_dtype=out_dtype or jnp.float32)
+        if c32 is None:
+            return _apply_batched(lambda a, b: fn(a, b, None), a32, b32)
+        crank = 1 if fill == "packed" else 2
+        return _apply_batched(fn, a32, b32, c32, trailing=(2, 2, crank))
+    return _combine_fill(_syr2k_dense(a32, b32, fill), c32, alpha, beta,
+                         fill)
 
 
-def _execute_symm(a32: jax.Array, b32: jax.Array, *, route: Route, mesh,
-                  interpret: Optional[bool]) -> jax.Array:
+def _execute_symm(a32: Union[jax.Array, TriTiles], b32: jax.Array, *,
+                  route: Route, mesh, interpret: Optional[bool],
+                  out_dtype=None) -> jax.Array:
+    if isinstance(a32, TriTiles):
+        return _execute_symm_tiles(a32, b32, route=route, mesh=mesh,
+                                   interpret=interpret,
+                                   out_dtype=out_dtype)
     if route.path == "1d":
         return meshpath.symm_1d_dense(a32, b32, mesh, route.axis)
     if route.path == "2d":
@@ -198,38 +299,99 @@ def _execute_symm(a32: jax.Array, b32: jax.Array, *, route: Route, mesh,
                                       route.choice.p2, mesh)
     if route.path == "pallas":
         fn = functools.partial(_symm_pallas, tiles=route.tiles,
-                               interpret=interpret)
+                               interpret=interpret,
+                               out_dtype=out_dtype or jnp.float32)
         return _apply_batched(fn, a32, b32)
     return _apply_batched(_symm_dense, a32, b32)
+
+
+def _execute_symm_tiles(a: TriTiles, b32: jax.Array, *, route: Route,
+                        mesh, interpret: Optional[bool],
+                        out_dtype=None) -> jax.Array:
+    """SYMM with a pre-packed symmetric operand.  The packed layout
+    survives as far as each path allows: straight into the kernel on
+    the Pallas route, onto the packed 1D wire on a mesh; only the
+    2d/3d/dense fallbacks rebuild a dense triangle."""
+    n1 = a.n
+    if route.path == "1d":
+        return meshpath.symm_1d_packed_a(a.to_packed(), b32, n1, mesh,
+                                         route.axis)
+    if route.path == "2d":
+        return meshpath.symm_2d_dense(a.to_tril(), b32, route.choice.c,
+                                      mesh, route.axis)
+    if route.path == "3d":
+        return meshpath.symm_3d_dense(a.to_tril(), b32, route.choice.c,
+                                      route.choice.p2, mesh)
+    if route.path == "pallas":
+        bm = a.bm                      # the layout fixes the row tile
+        bn = route.tiles[1]
+        fn = functools.partial(_symm_pallas_tiles, n1=n1, bm=bm, bn=bn,
+                               interpret=interpret,
+                               out_dtype=out_dtype or jnp.float32)
+        return _apply_batched(fn, a.tiles, b32, trailing=(3, 2))
+    return a.to_full() @ b32
 
 
 # --------------------------------------------------------------------------
 # public API
 # --------------------------------------------------------------------------
+def _resolve_beta(c, beta) -> float:
+    """``beta=None`` means 1.0 when an accumulator is given, else 0.0."""
+    if beta is None:
+        return 1.0 if c is not None else 0.0
+    beta = float(beta)
+    if beta != 0.0 and c is None:
+        raise ValueError("beta != 0 requires an accumulator c")
+    return beta
+
+
+def _check_c(c, fill: str, n1: int, lead: Tuple[int, ...]) -> None:
+    if c is None:
+        return
+    want = lead + ((tril_size(n1),) if fill == "packed" else (n1, n1))
+    if tuple(c.shape) != want:
+        raise ValueError(f"accumulator c for fill={fill!r} must have "
+                         f"shape {want}, got {tuple(c.shape)}")
+
+
 def syrk(a, *, out_dtype=None, fill: str = "tril", mesh=None,
          axis: Optional[str] = None, tile=None,
-         interpret: Optional[bool] = None) -> jax.Array:
-    """C = A·Aᵀ for A (..., n1, n2), routed per regime.
+         interpret: Optional[bool] = None, c=None, alpha: float = 1.0,
+         beta: Optional[float] = None) -> jax.Array:
+    """C = alpha·A·Aᵀ + beta·C₀ for A (..., n1, n2), routed per regime.
 
     ``fill``: "tril" (default), "full", or "packed".  Accumulates in
-    f32; ``out_dtype=None`` returns f32.  Reverse-differentiable on
-    every route: the VJP is a SYMM executed through the same router
+    f32; ``out_dtype=None`` returns f32.  ``c`` is an optional
+    accumulator in the *same fill format* as the output (only its lower
+    triangle is read); ``beta`` defaults to 1.0 when ``c`` is given —
+    chunked Gram updates are ``g = syrk(x_chunk, fill="packed", c=g)``.
+    On the Pallas route the epilogue (diag mask, scale-accumulate,
+    out_dtype) runs inside the kernel.  Reverse-differentiable on every
+    route: the VJP is a SYMM executed through the same router
     (see :mod:`repro.blas.grad`).
     """
     _check_fill(fill)
     a = jnp.asarray(a)
     n1, n2 = a.shape[-2:]
+    beta = _resolve_beta(c, beta)
+    c = None if c is None else jnp.asarray(c)
+    _check_c(c, fill, n1, a.shape[:-2])
     route = plan_route("syrk", n1, n2, dtype=a.dtype, batch=a.ndim > 2,
-                       mesh=mesh, axis=axis, tile=tile, interpret=interpret)
+                       mesh=mesh, axis=axis, tile=tile, interpret=interpret,
+                       fill=fill, accumulate=c is not None)
     a32 = a.astype(jnp.float32)
-    return _out(grad.syrk_call(a32, fill=fill, route=route, mesh=mesh,
-                               interpret=interpret), out_dtype)
+    c32 = None if c is None else c.astype(jnp.float32)
+    return _out(grad.syrk_call(a32, c32, fill=fill, alpha=alpha, beta=beta,
+                               route=route, mesh=mesh, interpret=interpret,
+                               out_dtype=out_dtype), out_dtype)
 
 
 def syr2k(a, b, *, out_dtype=None, fill: str = "tril", mesh=None,
           axis: Optional[str] = None, tile=None,
-          interpret: Optional[bool] = None) -> jax.Array:
-    """C = A·Bᵀ + B·Aᵀ for A, B (..., n1, n2), routed per regime.
+          interpret: Optional[bool] = None, c=None, alpha: float = 1.0,
+          beta: Optional[float] = None) -> jax.Array:
+    """C = alpha·(A·Bᵀ + B·Aᵀ) + beta·C₀ for A, B (..., n1, n2), routed
+    per regime.  Accumulator contract as :func:`syrk`.
 
     Reverse-differentiable on every route: the VJP is two SYMMs through
     the same router (see :mod:`repro.blas.grad`)."""
@@ -239,11 +401,18 @@ def syr2k(a, b, *, out_dtype=None, fill: str = "tril", mesh=None,
         raise ValueError(f"syr2k operands must match: {a.shape} vs "
                          f"{b.shape}")
     n1, n2 = a.shape[-2:]
+    beta = _resolve_beta(c, beta)
+    c = None if c is None else jnp.asarray(c)
+    _check_c(c, fill, n1, a.shape[:-2])
     route = plan_route("syr2k", n1, n2, dtype=a.dtype, batch=a.ndim > 2,
-                       mesh=mesh, axis=axis, tile=tile, interpret=interpret)
+                       mesh=mesh, axis=axis, tile=tile, interpret=interpret,
+                       fill=fill, accumulate=c is not None)
     a32, b32 = a.astype(jnp.float32), b.astype(jnp.float32)
-    return _out(grad.syr2k_call(a32, b32, fill=fill, route=route, mesh=mesh,
-                                interpret=interpret), out_dtype)
+    c32 = None if c is None else c.astype(jnp.float32)
+    return _out(grad.syr2k_call(a32, b32, c32, fill=fill, alpha=alpha,
+                                beta=beta, route=route, mesh=mesh,
+                                interpret=interpret,
+                                out_dtype=out_dtype), out_dtype)
 
 
 def symm(a_sym, b, *, out_dtype=None, mesh=None,
@@ -251,22 +420,38 @@ def symm(a_sym, b, *, out_dtype=None, mesh=None,
          interpret: Optional[bool] = None) -> jax.Array:
     """C = sym(A)·B for tril-valid A (..., n1, n1) and B (..., n1, n2).
 
-    Only the lower triangle of ``a_sym`` is read (the upper half may
-    hold garbage); the symmetric matrix is never materialized beyond
-    each path's working set.  Reverse-differentiable on every route:
-    dB is a SYMM and dA a tril-projected SYR2K through the same router
-    (see :mod:`repro.blas.grad`); the dA cotangent is zero on the unread
-    upper triangle.
+    ``a_sym`` may be a dense array — only its lower triangle is read
+    (the upper half may hold garbage) — or a pre-packed
+    :class:`~repro.core.packing.TriTiles`, in which case the packed
+    layout feeds the Pallas kernel / 1D packed wire directly and the
+    symmetric matrix is never densified beyond each path's working set.
+    Reverse-differentiable on every route: dB is a SYMM and dA a
+    tril-projected SYR2K through the same router (see
+    :mod:`repro.blas.grad`); the dA cotangent is zero on the unread
+    upper triangle (and arrives as TriTiles when A did).
     """
-    a_sym, b = jnp.asarray(a_sym), jnp.asarray(b)
+    b = jnp.asarray(b)
     n1, n2 = b.shape[-2:]
-    if a_sym.shape[-2:] != (n1, n1):
-        raise ValueError(f"symm shapes: a {a_sym.shape} vs b {b.shape}")
-    route = plan_route("symm", n1, n2, dtype=b.dtype, batch=b.ndim > 2,
-                       mesh=mesh, axis=axis, tile=tile, interpret=interpret)
-    a32, b32 = a_sym.astype(jnp.float32), b.astype(jnp.float32)
+    if isinstance(a_sym, TriTiles):
+        if a_sym.n != n1 or a_sym.batch_shape != b.shape[:-2]:
+            raise ValueError(f"symm shapes: TriTiles(n={a_sym.n}, "
+                             f"batch={a_sym.batch_shape}) vs b {b.shape}")
+        route = plan_route("symm", n1, n2, dtype=b.dtype, batch=b.ndim > 2,
+                           mesh=mesh, axis=axis, tile=tile,
+                           interpret=interpret, fill="tritiles")
+        a32 = a_sym.astype(jnp.float32)
+    else:
+        a_sym = jnp.asarray(a_sym)
+        if a_sym.shape[-2:] != (n1, n1):
+            raise ValueError(f"symm shapes: a {a_sym.shape} vs b {b.shape}")
+        route = plan_route("symm", n1, n2, dtype=b.dtype, batch=b.ndim > 2,
+                           mesh=mesh, axis=axis, tile=tile,
+                           interpret=interpret)
+        a32 = a_sym.astype(jnp.float32)
+    b32 = b.astype(jnp.float32)
     return _out(grad.symm_call(a32, b32, route=route, mesh=mesh,
-                               interpret=interpret), out_dtype)
+                               interpret=interpret,
+                               out_dtype=out_dtype), out_dtype)
 
 
 def explain(op: str, n1: int, n2: int, *, dtype=jnp.float32, mesh=None,

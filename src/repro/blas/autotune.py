@@ -47,8 +47,15 @@ def _dtype_token(dtype) -> str:
         return str(dtype)
 
 
-def cache_key(op: str, n1: int, n2: int, dtype, backend: str) -> str:
-    return f"{op}:{n1}x{n2}:{_dtype_token(dtype)}:{backend}"
+def cache_key(op: str, n1: int, n2: int, dtype, backend: str,
+              fill: str = "tril", accumulate: bool = False) -> str:
+    """One cache slot per *epilogue*, not just per problem shape: the
+    output layout (fill) and a beta-accumulate C0 input change a
+    candidate's VMEM footprint and traffic, so tiles measured for one
+    epilogue must not be reused for another."""
+    acc = "acc" if accumulate else "noacc"
+    return (f"{op}:{n1}x{n2}:{_dtype_token(dtype)}:{backend}"
+            f":{fill}:{acc}")
 
 
 def _cache_dir() -> str:
@@ -115,18 +122,19 @@ def heuristic_tiles(op: str, n1: int, n2: int) -> Tiles:
 def pick_tiles(op: str, n1: int, n2: int, dtype, backend: str, *,
                mode: str = "heuristic",
                runner: Optional[Callable[[int, int], float]] = None,
-               repeats: int = 2) -> Tiles:
-    """Tiles for (op, n1, n2, dtype, backend).
+               repeats: int = 2, fill: str = "tril",
+               accumulate: bool = False) -> Tiles:
+    """Tiles for (op, n1, n2, dtype, backend, fill, accumulate).
 
     ``mode="heuristic"``: shape-derived, not cached on disk.
     ``mode="auto"``: consult the in-process then on-disk cache; on a
     miss, time ``runner(bm, bk)`` (seconds; the caller provides a
     blocking executor of the real kernel) over the candidate set and
-    persist the winner.
+    persist the winner — keyed per epilogue (fill/accumulate).
     """
     if mode != "auto":
         return heuristic_tiles(op, n1, n2)
-    key = cache_key(op, n1, n2, dtype, backend)
+    key = cache_key(op, n1, n2, dtype, backend, fill, accumulate)
     if key in _memory_cache:
         return _memory_cache[key]
     disk = _load_disk()

@@ -15,18 +15,29 @@ or the 1D/2D/3D mesh schedules on their own merits, with the forward
 ``jit``.
 
 Math (f32 cotangent Ḡ; ``sym(M) = tril(M) + strict_tril(M)ᵀ`` is what
-``blas.symm`` reads):
+``blas.symm`` reads; with the alpha/beta epilogue
+``C = α·op(A[,B]) + β·C₀``):
 
-  SYRK   C = A·Aᵀ          dA = (Ḡ + Ḡᵀ)·A                — one SYMM
-  SYR2K  C = A·Bᵀ + B·Aᵀ   dA = (Ḡ + Ḡᵀ)·B, dB = (Ḡ + Ḡᵀ)·A — two SYMMs
-  SYMM   C = sym(A)·B      dB = sym(A)·Ḡ                   — one SYMM
-                           dA = tril(Ḡ·Bᵀ + B·Ḡᵀ), diag halved
-                                                — a tril-projected SYR2K
+  SYRK   C = α·A·Aᵀ + β·C₀        dA = α·(Ḡ + Ḡᵀ)·A        — one SYMM
+  SYR2K  C = α·(A·Bᵀ + B·Aᵀ)+β·C₀ dA = α·(Ḡ + Ḡᵀ)·B,
+                                  dB = α·(Ḡ + Ḡᵀ)·A        — two SYMMs
+  SYMM   C = sym(A)·B             dB = sym(A)·Ḡ             — one SYMM
+                                  dA = tril(Ḡ·Bᵀ + B·Ḡᵀ), diag halved
+                                                 — a tril-projected SYR2K
+  and dC₀ = β·(fill-projection of Ḡ) — elementwise, no extra movement.
 
 Fill handling: a "tril"/"packed" primal only exposes the lower
 triangle, so its cotangent L enters the SYMM as the tril-valid operand
 L with the *diagonal doubled* (sym(L + diag L) = L + Lᵀ); a "full"
 primal exposes both mirrors and contributes tril(Ḡ) + triu(Ḡ)ᵀ.
+
+Packed cotangents stay packed: on the 1D mesh route the packed
+triangle feeds :func:`~repro.blas.meshpath.symm_1d_packed_a` (the wire
+format), and on the Pallas route it is scattered into a
+:class:`~repro.core.packing.TriTiles` that flows straight into the
+packed-operand SYMM kernel — neither direction densifies an n×n
+intermediate.  A SYMM whose primal A was TriTiles also gets its dA
+back as TriTiles (via a packed-fill SYR2K).
 
 Residuals are the operands only — nothing symmetric is stored or
 recomputed, so backward memory matches forward operand memory and the
@@ -39,7 +50,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.packing import tril_size, unpack_tril
+from ..core.packing import TriTiles, tril_size, unpack_tril
 from . import routing
 
 #: backward ops per forward op: (cotangent name, blas op that computes it)
@@ -56,7 +67,6 @@ COTANGENT_OPS = {
 def _double_diag(lmat: jax.Array) -> jax.Array:
     n = lmat.shape[-1]
     return lmat * (1.0 + jnp.eye(n, dtype=lmat.dtype))
-
 
 def _halve_diag(lmat: jax.Array) -> jax.Array:
     n = lmat.shape[-1]
@@ -87,6 +97,23 @@ def sym_cotangent(g: jax.Array, fill: str, n1: int) -> jax.Array:
     return _double_diag(jnp.tril(g))
 
 
+def _c_cotangent(g: jax.Array, fill: str, beta: float) -> jax.Array:
+    """dC₀ for ``C = α·op(...) + β·C₀``: beta times the fill-projection
+    of Ḡ.  Only tril(C₀) is read, so the upper triangle gets zero; a
+    "full" primal exposes each off-diagonal C₀ entry through both
+    mirrors."""
+    g = g.astype(jnp.float32)
+    if fill == "packed":
+        return beta * g
+    if fill == "tril":
+        return beta * jnp.tril(g)
+    return beta * (jnp.tril(g) + jnp.tril(g.swapaxes(-1, -2), -1))
+
+
+def _scale(x, alpha: float):
+    return x if alpha == 1.0 else alpha * x
+
+
 # --------------------------------------------------------------------------
 # backward rules (all expressed as repro.blas calls)
 # --------------------------------------------------------------------------
@@ -115,7 +142,18 @@ def _packed_1d_symm(g_packed: jax.Array, other: jax.Array, n1: int,
     return meshpath.symm_1d_packed_a(lp, other, n1, mesh, br.axis)
 
 
-def _syrk_bwd(g: jax.Array, a: jax.Array, *, fill: str,
+def _packed_cotangent_tiles(g_packed: jax.Array, n1: int,
+                            route: routing.Route) -> TriTiles:
+    """Packed-fill cotangent on the Pallas route: scatter the (diagonal
+    doubled) packed triangle into TriTiles once; it then feeds the
+    packed-operand SYMM kernel(s) — the cotangent never becomes an n×n
+    dense array."""
+    lp = g_packed * jnp.asarray(_packed_diag_scale(n1, 2.0))
+    bm = route.tiles[0] if route.tiles else 128
+    return TriTiles.from_packed(lp, n1, bm)
+
+
+def _syrk_bwd(g: jax.Array, a: jax.Array, *, fill: str, alpha: float,
               route: routing.Route, mesh, interpret) -> jax.Array:
     from . import api
     n1 = a.shape[-2]
@@ -124,13 +162,17 @@ def _syrk_bwd(g: jax.Array, a: jax.Array, *, fill: str,
         if fill == "packed" and mesh is not None and a.ndim == 2:
             da = _packed_1d_symm(g, a, n1, route, mesh)
             if da is not None:
-                return da
-        return api.symm(sym_cotangent(g, fill, n1), a,
-                        **_bwd_kwargs(route, mesh, interpret))
+                return _scale(da, alpha)
+        if fill == "packed" and route.path == "pallas":
+            at = _packed_cotangent_tiles(g, n1, route)
+            return _scale(api.symm(at, a, interpret=interpret), alpha)
+        return _scale(api.symm(sym_cotangent(g, fill, n1), a,
+                               **_bwd_kwargs(route, mesh, interpret)),
+                      alpha)
 
 
 def _syr2k_bwd(g: jax.Array, a: jax.Array, b: jax.Array, *, fill: str,
-               route: routing.Route, mesh, interpret):
+               alpha: float, route: routing.Route, mesh, interpret):
     from . import api
     n1 = a.shape[-2]
     g = g.astype(jnp.float32)
@@ -140,18 +182,30 @@ def _syr2k_bwd(g: jax.Array, a: jax.Array, b: jax.Array, *, fill: str,
             da = _packed_1d_symm(g, b, n1, route, mesh)
             if da is not None:
                 db = _packed_1d_symm(g, a, n1, route, mesh)
-                return da, db
+                return _scale(da, alpha), _scale(db, alpha)
+        if fill == "packed" and route.path == "pallas":
+            at = _packed_cotangent_tiles(g, n1, route)   # one scatter
+            da = api.symm(at, b, interpret=interpret)
+            db = api.symm(at, a, interpret=interpret)
+            return _scale(da, alpha), _scale(db, alpha)
         lhat = sym_cotangent(g, fill, n1)
-        return api.symm(lhat, b, **kw), api.symm(lhat, a, **kw)
+        return (_scale(api.symm(lhat, b, **kw), alpha),
+                _scale(api.symm(lhat, a, **kw), alpha))
 
 
-def _symm_bwd(g: jax.Array, a: jax.Array, b: jax.Array, *,
+def _symm_bwd(g: jax.Array, a, b: jax.Array, *,
               route: routing.Route, mesh, interpret):
     from . import api
     g = g.astype(jnp.float32)
     kw = _bwd_kwargs(route, mesh, interpret)
     with routing.pinned(route):
         db = api.symm(a, g, **kw)
+        if isinstance(a, TriTiles):
+            # dA stays packed: tril-projected SYR2K in packed fill,
+            # halved diagonal, scattered back into the TriTiles layout
+            dp = api.syr2k(g, b, fill="packed", **kw)
+            dp = dp * jnp.asarray(_packed_diag_scale(a.n, 0.5))
+            return TriTiles.from_packed(dp, a.n, a.bm), db
         dsyr = api.syr2k(g, b, fill="tril", **kw)
     # only tril(A) is read, so dA lives in the lower triangle; the
     # diagonal is exposed once (vs twice for off-diag mirror pairs)
@@ -161,61 +215,74 @@ def _symm_bwd(g: jax.Array, a: jax.Array, b: jax.Array, *,
 # --------------------------------------------------------------------------
 # custom_vjp entry points (called by api.py with the planned Route)
 # --------------------------------------------------------------------------
-def syrk_call(a32: jax.Array, *, fill: str, route: routing.Route, mesh,
-              interpret) -> jax.Array:
-    from . import api
+def _rank_update_call(execute, bwd_rule, n_ops: int, operands, c32, *,
+                      fill: str, alpha: float, beta: float,
+                      route: routing.Route, mesh, interpret, out_dtype
+                      ) -> jax.Array:
+    """One custom_vjp factory for both SYRK (n_ops=1) and SYR2K
+    (n_ops=2), with or without the C0 accumulator: the primal is
+    ``execute(*operands, c)``, residuals are always the operands only,
+    and the C0 branch just appends the elementwise dC tail."""
+    has_c = c32 is not None
 
-    def prim(a):
-        return api._execute_syrk(a, fill=fill, route=route, mesh=mesh,
-                                 interpret=interpret)
-
-    @jax.custom_vjp
-    def f(a):
-        return prim(a)
-
-    def fwd(a):
-        return prim(a), (a,)          # residual: operand only
-
-    def bwd(res, g):
-        (a,) = res
-        return (_syrk_bwd(g, a, fill=fill, route=route, mesh=mesh,
-                          interpret=interpret),)
-
-    f.defvjp(fwd, bwd)
-    return f(a32)
-
-
-def syr2k_call(a32: jax.Array, b32: jax.Array, *, fill: str,
-               route: routing.Route, mesh, interpret) -> jax.Array:
-    from . import api
-
-    def prim(a, b):
-        return api._execute_syr2k(a, b, fill=fill, route=route, mesh=mesh,
-                                  interpret=interpret)
+    def prim(*ops):
+        c = ops[n_ops] if has_c else None
+        return execute(*ops[:n_ops], c, fill=fill, alpha=alpha,
+                       beta=beta if has_c else 0.0, route=route, mesh=mesh,
+                       interpret=interpret, out_dtype=out_dtype)
 
     @jax.custom_vjp
-    def f(a, b):
-        return prim(a, b)
+    def f(*ops):
+        return prim(*ops)
 
-    def fwd(a, b):
-        return prim(a, b), (a, b)
+    def fwd(*ops):
+        return prim(*ops), ops[:n_ops]   # dC needs no residual at all
 
     def bwd(res, g):
-        a, b = res
-        return _syr2k_bwd(g, a, b, fill=fill, route=route, mesh=mesh,
-                          interpret=interpret)
+        d_ops = bwd_rule(g, *res, fill=fill, alpha=alpha, route=route,
+                         mesh=mesh, interpret=interpret)
+        if has_c:
+            return d_ops + (_c_cotangent(g, fill, beta),)
+        return d_ops
 
     f.defvjp(fwd, bwd)
-    return f(a32, b32)
+    return f(*operands, c32) if has_c else f(*operands)
 
 
-def symm_call(a32: jax.Array, b32: jax.Array, *, route: routing.Route,
-              mesh, interpret) -> jax.Array:
+def syrk_call(a32: jax.Array, c32, *, fill: str, alpha: float, beta: float,
+              route: routing.Route, mesh, interpret,
+              out_dtype=None) -> jax.Array:
+    from . import api
+
+    def bwd_rule(g, a, **kw):
+        return (_syrk_bwd(g, a, **kw),)
+
+    return _rank_update_call(api._execute_syrk, bwd_rule, 1, (a32,), c32,
+                             fill=fill, alpha=alpha, beta=beta, route=route,
+                             mesh=mesh, interpret=interpret,
+                             out_dtype=out_dtype)
+
+
+def syr2k_call(a32: jax.Array, b32: jax.Array, c32, *, fill: str,
+               alpha: float, beta: float, route: routing.Route, mesh,
+               interpret, out_dtype=None) -> jax.Array:
+    from . import api
+    return _rank_update_call(api._execute_syr2k, _syr2k_bwd, 2,
+                             (a32, b32), c32, fill=fill, alpha=alpha,
+                             beta=beta, route=route, mesh=mesh,
+                             interpret=interpret, out_dtype=out_dtype)
+
+
+def symm_call(a32, b32: jax.Array, *, route: routing.Route,
+              mesh, interpret, out_dtype=None) -> jax.Array:
+    """``a32`` is a dense tril-valid array or a TriTiles — both are
+    pytrees, so one custom_vjp covers them; a TriTiles primal gets its
+    dA back as TriTiles (packed end to end)."""
     from . import api
 
     def prim(a, b):
         return api._execute_symm(a, b, route=route, mesh=mesh,
-                                 interpret=interpret)
+                                 interpret=interpret, out_dtype=out_dtype)
 
     @jax.custom_vjp
     def f(a, b):

@@ -182,12 +182,16 @@ def _is_prime_power(c: int) -> bool:
 def plan_route(op: str, n1: int, n2: int, *, dtype=None, batch: bool = False,
                mesh=None, axis: Optional[str] = None,
                tile=None, interpret: Optional[bool] = None,
-               autotune_runner=None) -> Route:
+               autotune_runner=None, fill: str = "tril",
+               accumulate: bool = False) -> Route:
     """Pick the execution path for one blas call.
 
     ``tile``: None (heuristic), "auto" (measured + cached), or an
     explicit (bm, bk) pair — an explicit pair also forces the Pallas
-    path off-mesh.
+    path off-mesh.  ``fill``/``accumulate`` describe the epilogue
+    (output layout and beta-accumulate) so measured tiles are tuned —
+    and cached — per epilogue: a packed-gather exit and an extra
+    streamed C0 input change the VMEM footprint of a (bm, bk) choice.
     """
     if op not in M_OF:
         raise ValueError(f"unknown op {op!r}")
@@ -253,7 +257,8 @@ def plan_route(op: str, n1: int, n2: int, *, dtype=None, batch: bool = False,
             tiles = tile
         elif tile == "auto":
             tiles = pick_tiles(op, n1, n2, dtype, backend, mode="auto",
-                               runner=autotune_runner)
+                               runner=autotune_runner, fill=fill,
+                               accumulate=accumulate)
         else:
             tiles = heuristic_tiles(op, n1, n2)
         why = "explicit tile/interpret request" if explicit else \

@@ -8,8 +8,11 @@ parallel algorithms use to keep loads MXU-aligned (DESIGN §3).
 """
 from __future__ import annotations
 
+import dataclasses
+import functools
 from typing import Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -63,10 +66,16 @@ def tile_tril_count(nt: int) -> int:
     return nt * (nt + 1) // 2
 
 
+@functools.lru_cache(maxsize=None)
 def tile_tril_coords(nt: int) -> np.ndarray:
-    """(T, 2) array of (i, j) tile coords, row-major lower triangle."""
+    """(T, 2) array of (i, j) tile coords, row-major lower triangle.
+
+    Cached: the O(nt²) Python loop runs once per grid size, not once per
+    trace of every kernel call."""
     out = [(i, j) for i in range(nt) for j in range(i + 1)]
-    return np.array(out, dtype=np.int64)
+    arr = np.array(out, dtype=np.int64).reshape(-1, 2)
+    arr.setflags(write=False)
+    return arr
 
 
 def tile_flat_index(i: int, j: int) -> int:
@@ -85,6 +94,53 @@ def pack_tril_tiles(x, tile: int):
     xt = x.reshape(x.shape[:-2] + (nt, tile, nt, tile))
     xt = jnp.moveaxis(xt, -2, -3)  # (…, nt, nt, tile, tile)
     return xt[..., coords[:, 0], coords[:, 1], :, :]
+
+
+@functools.lru_cache(maxsize=None)
+def packed_tile_indices(n: int, bm: int
+                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Static gather/scatter tables between the element-packed lower
+    triangle of an n×n matrix and its (T, bm, bm) tile-packed layout
+    (tile grid of ceil(n/bm), as produced by the Pallas kernels on
+    padded operands).
+
+    Returns (tidx, ridx, cidx) int32 arrays of length tril_size(n):
+    element l of the row-major packed triangle lives at
+    ``tiles[tidx[l], ridx[l], cidx[l]]``.  Cached per (n, bm) — the
+    conversion never materializes an n×n dense intermediate.
+    """
+    i, j = np.tril_indices(n)
+    ti, tj = i // bm, j // bm
+    tidx = (ti * (ti + 1) // 2 + tj).astype(np.int32)
+    ridx = (i % bm).astype(np.int32)
+    cidx = (j % bm).astype(np.int32)
+    for arr in (tidx, ridx, cidx):
+        arr.setflags(write=False)
+    return tidx, ridx, cidx
+
+
+def tiles_to_packed(tiles, n: int):
+    """Tile-packed (…, T, bm, bm) -> element-packed (…, tril_size(n)).
+
+    ``T`` must cover the ceil(n/bm) tile grid (padding tiles allowed);
+    a pure gather — no dense n×n intermediate."""
+    T = tiles.shape[-3]
+    bm = tiles.shape[-1]
+    nt = -(-n // bm)
+    assert T == nt * (nt + 1) // 2, (T, n, bm)
+    tidx, ridx, cidx = packed_tile_indices(n, bm)
+    return tiles[..., tidx, ridx, cidx]
+
+
+def packed_to_tiles(p, n: int, bm: int):
+    """Element-packed (…, tril_size(n)) -> tile-packed (…, T, bm, bm)
+    over the ceil(n/bm) grid (padding slots zero); a pure scatter."""
+    assert p.shape[-1] == tril_size(n), (p.shape, n)
+    nt = -(-n // bm)
+    T = nt * (nt + 1) // 2
+    tidx, ridx, cidx = packed_tile_indices(n, bm)
+    out = jnp.zeros(p.shape[:-1] + (T, bm, bm), dtype=p.dtype)
+    return out.at[..., tidx, ridx, cidx].set(p)
 
 
 def unpack_tril_tiles(p, n: int, tile: int, symmetric: bool = True):
@@ -106,3 +162,120 @@ def unpack_tril_tiles(p, n: int, tile: int, symmetric: bool = True):
         full = full.at[..., ii, ii, :, :].set(sym_diag)
     out = jnp.moveaxis(full, -3, -2)
     return out.reshape(p.shape[:-3] + (n, n))
+
+
+# ---- TriTiles: the first-class packed-triangular interchange format -------
+@dataclasses.dataclass(frozen=True)
+class TriTiles:
+    """Tile-packed lower-triangular storage: the end-to-end interchange
+    format of the symmetric BLAS stack (~n²/2 words instead of n²).
+
+    ``tiles`` is (…, T, bm, bm) — the dense (bm, bm) tiles of the lower
+    triangle of a ceil(n/bm)² tile grid, row-major, T = nt(nt+1)/2, with
+    leading batch dims vmapped straight through.  ``n`` is the logical
+    matrix dimension (the grid may be padded when n % bm != 0; padding
+    slots are zero/ignored).  Diagonal tiles are lower-triangular by
+    convention (their upper halves are structural zeros — the only
+    intra-format redundancy, a 1/nt fraction).
+
+    Registered as a jax pytree: ``tiles`` is the only leaf, (n, bm) are
+    static metadata, so TriTiles flows through jit/vmap/grad unchanged.
+    All converters route through the cached index tables above and never
+    build an n×n dense intermediate except the explicitly-dense
+    ``to_tril``/``to_full`` exits.
+    """
+    tiles: jax.Array
+    n: int
+    bm: int
+
+    # -- structure ---------------------------------------------------------
+    @property
+    def nt(self) -> int:
+        return -(-self.n // self.bm)
+
+    @property
+    def num_tiles(self) -> int:
+        return self.nt * (self.nt + 1) // 2
+
+    @property
+    def batch_shape(self) -> Tuple[int, ...]:
+        return self.tiles.shape[:-3]
+
+    @property
+    def dtype(self):
+        return self.tiles.dtype
+
+    def __post_init__(self):
+        # tolerate non-array leaves (pytree unflatten passes sentinels
+        # through during some jax transforms)
+        shape = getattr(self.tiles, "shape", None)
+        if shape is None or len(shape) < 3:
+            return
+        want = (self.num_tiles, self.bm, self.bm)
+        if tuple(shape[-3:]) != want:
+            raise ValueError(f"TriTiles(n={self.n}, bm={self.bm}) needs "
+                             f"trailing tile shape {want}, got "
+                             f"{tuple(shape[-3:])}")
+
+    def astype(self, dtype) -> "TriTiles":
+        return TriTiles(self.tiles.astype(dtype), self.n, self.bm)
+
+    # -- constructors (cached index tables, no dense round-trips) ----------
+    @classmethod
+    def from_tril(cls, x, bm: int) -> "TriTiles":
+        """Dense tril-valid (…, n, n) -> TriTiles.  Only the lower
+        triangle is read: strictly-upper grid tiles are never gathered
+        and diagonal tiles are masked to their lower halves."""
+        n = x.shape[-1]
+        lead = x.shape[:-2]
+        xp = x
+        pad = -n % bm
+        if pad:
+            cfg = [(0, 0)] * len(lead) + [(0, pad), (0, pad)]
+            xp = jnp.pad(x, cfg)
+        tiles = pack_tril_tiles(xp, bm)
+        ii = jnp.arange(-(-n // bm))
+        rows = jnp.arange(bm)
+        tril_mask = rows[:, None] >= rows[None, :]
+        diag_slots = ii * (ii + 3) // 2
+        # where, not multiply: the unread upper halves may hold NaN/inf
+        # garbage ("tril-valid" contract) and 0·NaN would propagate it
+        diag = tiles[..., diag_slots, :, :]
+        tiles = tiles.at[..., diag_slots, :, :].set(
+            jnp.where(tril_mask, diag, jnp.zeros_like(diag)))
+        return cls(tiles, n, bm)
+
+    @classmethod
+    def from_full(cls, x, bm: int) -> "TriTiles":
+        """Dense symmetric (…, n, n) -> TriTiles (reads tril only)."""
+        return cls.from_tril(x, bm)
+
+    @classmethod
+    def from_packed(cls, p, n: int, bm: int) -> "TriTiles":
+        """Element-packed (…, tril_size(n)) -> TriTiles (pure scatter)."""
+        return cls(packed_to_tiles(p, n, bm), n, bm)
+
+    # -- exits --------------------------------------------------------------
+    def to_packed(self) -> jax.Array:
+        """(…, tril_size(n)) element-packed triangle (pure gather)."""
+        return tiles_to_packed(self.tiles, self.n)
+
+    def to_tril(self) -> jax.Array:
+        """Dense (…, n, n) with zeros above the diagonal."""
+        npad = self.nt * self.bm
+        dense = unpack_tril_tiles(self.tiles, npad, self.bm,
+                                  symmetric=False)
+        return dense[..., :self.n, :self.n]
+
+    def to_full(self) -> jax.Array:
+        """Dense symmetric (…, n, n) (mirrors the stored triangle)."""
+        npad = self.nt * self.bm
+        dense = unpack_tril_tiles(self.tiles, npad, self.bm,
+                                  symmetric=True)
+        return dense[..., :self.n, :self.n]
+
+
+jax.tree_util.register_pytree_node(
+    TriTiles,
+    lambda t: ((t.tiles,), (t.n, t.bm)),
+    lambda aux, children: TriTiles(children[0], *aux))

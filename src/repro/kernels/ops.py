@@ -27,8 +27,10 @@ from .syrk import syrk_tiles
 
 def _unpack_dense(tiles: jax.Array, n1_pad: int, bm: int, n1: int
                   ) -> jax.Array:
+    # diagonal tiles arrive lower-masked from the in-kernel epilogue, so
+    # the scatter into the dense output needs no re-tril fixup
     dense = unpack_tril_tiles(tiles, n1_pad, bm, symmetric=False)
-    return jnp.tril(dense)[:n1, :n1]
+    return dense[:n1, :n1]
 
 
 def _cast_out(x: jax.Array, out_dtype) -> jax.Array:
@@ -64,10 +66,13 @@ def syr2k(a: jax.Array, b: jax.Array, *, bm: int = 128, bk: int = 128,
 def symm(a_tril: jax.Array, b: jax.Array, *, bm: int = 128, bn: int = 128,
          out_dtype=None, interpret: Optional[bool] = None) -> jax.Array:
     """C = sym(A)·B; A passed dense but only tril(A) is read (packed into
-    lower-triangle tiles before the kernel — the dense upper half never
-    reaches kernel HBM).  f32 accumulation, f32 out by default."""
+    lower-triangle tiles before the kernel — strictly-upper grid tiles
+    are never gathered and diagonal tiles are symmetrized from their
+    lower halves in VMEM, so the dense upper half never reaches kernel
+    HBM and needs no pre-masking).  f32 accumulation, f32 out by
+    default."""
     n1, n2 = b.shape
-    ap = _pad2(jnp.tril(a_tril), bm, bm)
+    ap = _pad2(a_tril, bm, bm)
     bp = _pad2(b, bm, bn)
     packed = pack_tril_tiles(ap, bm)
     out = symm_tiles(packed, bp, bm=bm, bn=bn, interpret=interpret)

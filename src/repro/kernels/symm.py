@@ -6,73 +6,42 @@ upper half in HBM — the kernel reads tile (i,k) of sym(A) from the packed
 tile array at flat index tri(max(i,k)) + min(i,k) via a scalar-prefetched
 lookup, transposing on the fly when k > i and symmetrizing diagonal tiles
 in VMEM.  This halves HBM traffic and capacity for A versus a dense GEMM
-while keeping every load a dense, MXU-aligned (bm × bm) tile."""
+while keeping every load a dense, MXU-aligned (bm × bm) tile.
+
+Scheduling (cached lookup tables, grid spec, interpret default) and the
+in-kernel out_dtype cast live in :mod:`repro.kernels.trigrid`; this file
+is only the per-step symmetrize-and-matmul body."""
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from . import trigrid
 
 
-def _symm_kernel(flat_ref, trans_ref, a_ref, b_ref, o_ref, *, nk: int,
-                 bm: int):
-    i = pl.program_id(0)
-    k = pl.program_id(2)
-
-    @pl.when(k == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
-
-    a = a_ref[0].astype(jnp.float32)            # (bm, bm) packed tile
-    mode = trans_ref[i * nk + k]                # 0: as-is, 1: transpose, 2: diag
+def _symm_body(a: jax.Array, mode, b: jax.Array) -> jax.Array:
+    """a: (bm, bm) packed tile; mode 0: as-is, 1: transpose, 2: diagonal
+    (symmetrize from the lower half — the tile's upper half, structural
+    zeros or garbage, is never read)."""
+    a = a.astype(jnp.float32)
+    bm = a.shape[0]
     a_t = a.T
     rows = jax.lax.broadcasted_iota(jnp.int32, (bm, bm), 0)
     cols = jax.lax.broadcasted_iota(jnp.int32, (bm, bm), 1)
     tril = jnp.where(rows >= cols, a, 0.0)
     a_diag = tril + jnp.where(rows > cols, a, 0.0).T
     a_eff = jnp.where(mode == 0, a, jnp.where(mode == 1, a_t, a_diag))
-    o_ref[...] += jnp.dot(a_eff, b_ref[...].astype(jnp.float32),
-                          preferred_element_type=jnp.float32)
+    return jnp.dot(a_eff, b.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
 
 
 def symm_tiles(a_packed: jax.Array, b: jax.Array, *, bm: int = 128,
-               bn: int = 128, interpret: Optional[bool] = None) -> jax.Array:
+               bn: int = 128, interpret: Optional[bool] = None,
+               out_dtype=jnp.float32) -> jax.Array:
     """a_packed: (T, bm, bm) packed lower-triangle tiles of symmetric A
-    (T = nt(nt+1)/2, row-major; diagonal tiles lower-triangular);
-    b: (n1, n2).  Returns C = sym(A)·B (n1, n2) in f32."""
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
-    n1, n2 = b.shape
-    assert n1 % bm == 0 and n2 % bn == 0
-    nt = n1 // bm
-    assert a_packed.shape[0] == nt * (nt + 1) // 2
-    nk = nt
-    # lookup tables: flat packed index + access mode for (i, k)
-    flat = np.zeros((nt, nk), np.int32)
-    mode = np.zeros((nt, nk), np.int32)
-    for i in range(nt):
-        for k in range(nk):
-            hi, lo = max(i, k), min(i, k)
-            flat[i, k] = hi * (hi + 1) // 2 + lo
-            mode[i, k] = 2 if i == k else (1 if k > i else 0)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(nt, n2 // bn, nk),
-        in_specs=[
-            pl.BlockSpec((1, bm, bm),
-                         lambda i, j, k, fl, md: (fl[i * nk + k], 0, 0)),
-            pl.BlockSpec((bm, bn), lambda i, j, k, fl, md: (k, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k, fl, md: (i, j)),
-    )
-    kernel = functools.partial(_symm_kernel, nk=nk, bm=bm)
-    return pl.pallas_call(
-        kernel, grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((n1, n2), jnp.float32),
-        interpret=interpret,
-    )(jnp.asarray(flat.ravel()), jnp.asarray(mode.ravel()), a_packed, b)
+    (T = nt(nt+1)/2, row-major; diagonal tiles tril-valid); b: (n1, n2).
+    Returns C = sym(A)·B (n1, n2) in ``out_dtype`` (f32 accumulation)."""
+    return trigrid.sym_stream(_symm_body, a_packed, b, bm=bm, bn=bn,
+                              interpret=interpret, out_dtype=out_dtype)

@@ -1,73 +1,40 @@
 """Pallas TPU SYR2K kernel: C = tril(A·Bᵀ + B·Aᵀ), triangular flat grid.
 
-Same scheduling structure as the SYRK kernel (see syrk.py); each grid step
-issues two MXU matmuls and fuses the mirrored accumulation — the two
-products per tile share the streamed A/B panels, so HBM traffic per output
-tile equals SYRK's with m=2 panels (the paper's m-scaling)."""
+Same scheduling structure as the SYRK kernel (shared via
+:mod:`repro.kernels.trigrid`); each grid step issues two MXU matmuls and
+fuses the mirrored accumulation — the two products per tile share the
+streamed A/B panels, so HBM traffic per output tile equals SYRK's with
+m=2 panels (the paper's m-scaling).  The epilogue (diagonal masking,
+alpha/beta accumulate, out_dtype cast) runs in-kernel."""
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from .syrk import _tri_coords
+from . import trigrid
 
 
-def _syr2k_kernel(im_ref, jm_ref, ai_ref, bj_ref, bi_ref, aj_ref, o_ref, *,
-                  nk: int, bm: int):
-    t = pl.program_id(0)
-    k = pl.program_id(1)
-
-    @pl.when(k == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
-
-    ai = ai_ref[...].astype(jnp.float32)
-    bj = bj_ref[...].astype(jnp.float32)
-    bi = bi_ref[...].astype(jnp.float32)
-    aj = aj_ref[...].astype(jnp.float32)
-    acc = jnp.dot(ai, bj.T, preferred_element_type=jnp.float32)
-    acc += jnp.dot(bi, aj.T, preferred_element_type=jnp.float32)
-    o_ref[...] += acc[None]
-
-    @pl.when(k == nk - 1)
-    def _mask_diag():
-        is_diag = im_ref[t] == jm_ref[t]
-        rows = jax.lax.broadcasted_iota(jnp.int32, (1, bm, bm), 1)
-        cols = jax.lax.broadcasted_iota(jnp.int32, (1, bm, bm), 2)
-        keep = jnp.logical_or(jnp.logical_not(is_diag), rows >= cols)
-        o_ref[...] = jnp.where(keep, o_ref[...], 0.0)
+def _syr2k_body(ai: jax.Array, bj: jax.Array, bi: jax.Array,
+                aj: jax.Array) -> jax.Array:
+    acc = jnp.dot(ai.astype(jnp.float32), bj.astype(jnp.float32).T,
+                  preferred_element_type=jnp.float32)
+    acc += jnp.dot(bi.astype(jnp.float32), aj.astype(jnp.float32).T,
+                   preferred_element_type=jnp.float32)
+    return acc
 
 
-def syr2k_tiles(a: jax.Array, b: jax.Array, *, bm: int = 128, bk: int = 128,
-                interpret: Optional[bool] = None) -> jax.Array:
+def syr2k_tiles(a: jax.Array, b: jax.Array, *, bm: int = 128,
+                bk: int = 128, interpret: Optional[bool] = None,
+                c0: Optional[jax.Array] = None, alpha: float = 1.0,
+                beta: float = 0.0, out_dtype=jnp.float32) -> jax.Array:
     """A, B (n1, n2) -> packed lower-triangle tiles (T, bm, bm) of
-    A·Bᵀ + B·Aᵀ in f32."""
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
-    n1, n2 = a.shape
-    assert a.shape == b.shape
-    assert n1 % bm == 0 and n2 % bk == 0
-    nt, nk = n1 // bm, n2 // bk
-    coords = _tri_coords(nt)
-    T = len(coords)
-    imap = jnp.asarray(coords[:, 0])
-    jmap = jnp.asarray(coords[:, 1])
-    row_spec_i = pl.BlockSpec((bm, bk), lambda t, k, im, jm: (im[t], k))
-    row_spec_j = pl.BlockSpec((bm, bk), lambda t, k, im, jm: (jm[t], k))
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(T, nk),
-        in_specs=[row_spec_i, row_spec_j, row_spec_i, row_spec_j],
-        out_specs=pl.BlockSpec((1, bm, bm), lambda t, k, im, jm: (t, 0, 0)),
-    )
-    kernel = functools.partial(_syr2k_kernel, nk=nk, bm=bm)
-    return pl.pallas_call(
-        kernel, grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((T, bm, bm), jnp.float32),
-        interpret=interpret,
-    )(imap, jmap, a, b, b, a)
+    ``alpha·(A·Bᵀ + B·Aᵀ) + beta·C0`` in ``out_dtype``."""
+    ep = trigrid.Epilogue(alpha=alpha, beta=beta,
+                          accumulate=c0 is not None and beta != 0.0,
+                          out_dtype=out_dtype)
+    return trigrid.rank_update(_syr2k_body, (a, b, b, a), "ijij",
+                               bm=bm, bk=bk, interpret=interpret,
+                               epilogue=ep,
+                               c0=c0 if ep.accumulate else None)

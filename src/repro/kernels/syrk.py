@@ -5,83 +5,47 @@ TPU adaptation of the paper's sequential Alg 4 (DESIGN §3):
     grid of T = nt(nt+1)/2 steps driven by scalar-prefetched (i,j) lookup
     tables — no grid step is wasted on the empty upper triangle (a
     rectangular grid + mask would waste ~2× steps and ~2× MXU issue);
-  * "fast memory" = VMEM: one (bm × bm) accumulator tile is resident per
-    output block while (bm × bk) panels of A stream through — exactly the
-    resident-triangle/streamed-panel structure of the paper's algorithm;
-  * output is *tile-packed* (T, bm, bm): only the lower triangle of tiles is
-    ever written to HBM (the symmetric-storage savings), tiles dense and
-    MXU-aligned.
+  * "fast memory" = VMEM: one (bm × bm) f32 accumulator tile is resident
+    per output block while (bm × bk) panels of A stream through — exactly
+    the resident-triangle/streamed-panel structure of the paper's
+    algorithm;
+  * output is *tile-packed* (T, bm, bm): only the lower triangle of tiles
+    is ever written to HBM (the symmetric-storage savings), tiles dense
+    and MXU-aligned.
 
-The k (contraction) axis is innermost so each output tile is initialized
-once and revisited consecutively (Pallas revisiting rule).
+Scheduling (cached coord tables, grid specs, interpret default) and the
+fused epilogue (diagonal masking, alpha/beta accumulate into an existing
+packed C, out_dtype cast — all in-kernel, nothing post-hoc in XLA) live
+in :mod:`repro.kernels.trigrid`; this file is only the MXU body.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from . import trigrid
 
 
-def _tri_coords(nt: int) -> np.ndarray:
-    return np.array([(i, j) for i in range(nt) for j in range(i + 1)],
-                    dtype=np.int32)
-
-
-def _syrk_kernel(im_ref, jm_ref, a_ref, aj_ref, o_ref, *, nk: int,
-                 bm: int):
-    t = pl.program_id(0)
-    k = pl.program_id(1)
-
-    @pl.when(k == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
-
-    a = a_ref[...].astype(jnp.float32)
-    b = aj_ref[...].astype(jnp.float32)
-    o_ref[...] += jnp.dot(a, b.T,
-                          preferred_element_type=jnp.float32)[None]
-
-    @pl.when(k == nk - 1)
-    def _mask_diag():
-        # diagonal tiles keep only their lower triangle
-        is_diag = im_ref[t] == jm_ref[t]
-        rows = jax.lax.broadcasted_iota(jnp.int32, (1, bm, bm), 1)
-        cols = jax.lax.broadcasted_iota(jnp.int32, (1, bm, bm), 2)
-        keep = jnp.logical_or(jnp.logical_not(is_diag), rows >= cols)
-        o_ref[...] = jnp.where(keep, o_ref[...], 0.0)
+def _syrk_body(ai: jax.Array, aj: jax.Array) -> jax.Array:
+    return jnp.dot(ai.astype(jnp.float32), aj.astype(jnp.float32).T,
+                   preferred_element_type=jnp.float32)
 
 
 def syrk_tiles(a: jax.Array, *, bm: int = 128, bk: int = 128,
-               interpret: Optional[bool] = None) -> jax.Array:
-    """A (n1, n2) -> packed lower-triangle tiles (T, bm, bm) of A·Aᵀ in f32.
+               interpret: Optional[bool] = None,
+               c0: Optional[jax.Array] = None, alpha: float = 1.0,
+               beta: float = 0.0, out_dtype=jnp.float32) -> jax.Array:
+    """A (n1, n2) -> packed lower-triangle tiles (T, bm, bm) of
+    ``alpha·A·Aᵀ + beta·C0`` in ``out_dtype`` (f32 accumulation).
 
-    n1 % bm == 0 and n2 % bk == 0 required (ops.py pads)."""
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
-    n1, n2 = a.shape
-    assert n1 % bm == 0 and n2 % bk == 0, (n1, n2, bm, bk)
-    nt, nk = n1 // bm, n2 // bk
-    coords = _tri_coords(nt)
-    T = len(coords)
-    imap = jnp.asarray(coords[:, 0])
-    jmap = jnp.asarray(coords[:, 1])
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(T, nk),
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda t, k, im, jm: (im[t], k)),
-            pl.BlockSpec((bm, bk), lambda t, k, im, jm: (jm[t], k)),
-        ],
-        out_specs=pl.BlockSpec((1, bm, bm), lambda t, k, im, jm: (t, 0, 0)),
-    )
-    kernel = functools.partial(_syrk_kernel, nk=nk, bm=bm)
-    return pl.pallas_call(
-        kernel, grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((T, bm, bm), jnp.float32),
-        interpret=interpret,
-    )(imap, jmap, a, a)
+    n1 % bm == 0 and n2 % bk == 0 required (blas/api.py pads).  ``c0``
+    is an optional packed-tile (T, bm, bm) accumulator consumed by the
+    in-kernel epilogue when ``beta != 0``."""
+    ep = trigrid.Epilogue(alpha=alpha, beta=beta,
+                          accumulate=c0 is not None and beta != 0.0,
+                          out_dtype=out_dtype)
+    return trigrid.rank_update(_syrk_body, (a, a), "ij", bm=bm, bk=bk,
+                               interpret=interpret, epilogue=ep,
+                               c0=c0 if ep.accumulate else None)

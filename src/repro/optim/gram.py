@@ -30,19 +30,32 @@ import numpy as np
 
 
 def packed_gram(x: jax.Array, mesh: Optional[Mesh] = None,
-                axis: str = "model") -> jax.Array:
+                axis: str = "model", chunk: Optional[int] = None
+                ) -> jax.Array:
     """Packed lower triangle of X·Xᵀ / n for X (d, n).
 
-    One :func:`repro.blas.syrk` call: on a mesh whose ``axis`` divides n
-    the router picks the paper's packed-triangle 1D SYRK (Alg 7, the
-    case-1 regime these Grams live in); off-mesh it computes locally.
-    Returns (d(d+1)/2,) f32.
+    On a mesh whose ``axis`` divides n the router picks the paper's
+    packed-triangle 1D SYRK (Alg 7, the case-1 regime these Grams live
+    in); off-mesh it computes locally.  Returns (d(d+1)/2,) f32.
+
+    ``chunk``: accumulate over column chunks of that many tokens via
+    the beta=1 epilogue (``syrk(x_chunk, fill="packed", c=g)``) — the
+    Gram stays packed across chunks and live operand memory is bounded
+    by (d, chunk) instead of (d, n), the streaming regime of the
+    paper's limited-memory algorithms (Algs 16–18).  On the Pallas
+    route the scale-and-accumulate runs inside the kernel epilogue.
     """
     _, n = x.shape
     if mesh is not None and axis not in mesh.shape:
         mesh = None          # documented fallback: compute locally
-    packed = blas.syrk(x, fill="packed", mesh=mesh,
-                       axis=axis if mesh is not None else None)
+    kw = dict(mesh=mesh, axis=axis if mesh is not None else None)
+    if chunk is None or chunk >= n:
+        packed = blas.syrk(x, fill="packed", **kw)
+    else:
+        packed = None
+        for lo in range(0, n, chunk):
+            packed = blas.syrk(x[:, lo:lo + chunk], fill="packed",
+                               c=packed, **kw)
     return packed / n
 
 
@@ -72,17 +85,23 @@ def decorrelation_penalty(x: jax.Array, mesh: Optional[Mesh] = None,
 
 @dataclass
 class GramMonitor:
-    """EMA'd packed Grams + scalar summaries per tracked layer."""
+    """EMA'd packed Grams + scalar summaries per tracked layer.
+
+    ``chunk``: optional token-chunk size — Gram updates then stream
+    column blocks through the beta-accumulate epilogue instead of
+    holding the full (d, n) activation slab live (see
+    :func:`packed_gram`)."""
     decay: float = 0.99
     mesh: Optional[Mesh] = None
     axis: str = "model"
+    chunk: Optional[int] = None
     _state: Dict[str, jax.Array] = field(default_factory=dict)
     _dims: Dict[str, int] = field(default_factory=dict)
 
     def update(self, name: str, x: jax.Array) -> None:
         """x: (d, n) activations/gradients (n = tokens in the batch)."""
         d = x.shape[0]
-        g = packed_gram(x, self.mesh, self.axis)
+        g = packed_gram(x, self.mesh, self.axis, chunk=self.chunk)
         if name not in self._state:
             self._state[name] = g
             self._dims[name] = d

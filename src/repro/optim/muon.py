@@ -49,7 +49,8 @@ class MuonState(NamedTuple):
 # Newton–Schulz cores
 # ---------------------------------------------------------------------------
 def ns_iteration_reference(x: jax.Array, mesh: Optional[Mesh] = None,
-                           axis: Optional[str] = None) -> jax.Array:
+                           axis: Optional[str] = None,
+                           gram_chunk: Optional[int] = None) -> jax.Array:
     """One NS step on the unified symmetric-BLAS surface: the Gram is a
     SYRK and both symmetric products are SYMMs, so `repro.blas` routes
     each to the best path (fused jnp off-accelerator, the triangular
@@ -58,16 +59,28 @@ def ns_iteration_reference(x: jax.Array, mesh: Optional[Mesh] = None,
     reverse-differentiable on every route — the SYRK/SYMM cotangents are
     routed SYMMs/SYR2Ks — so NS can sit inside a differentiated loss
     (meta-learning through the optimizer) without densification
-    workarounds."""
+    workarounds.
+
+    ``gram_chunk``: stream the Gram over column chunks of that size
+    through the SYRK beta-accumulate epilogue (``c=s, beta=1``) — for
+    wide X the (m, n) slab never needs to be live all at once."""
     a, b, c = NS_COEFFS
-    s = blas.syrk(x, fill="full", mesh=mesh, axis=axis)   # S = X·Xᵀ, f32
+    n = x.shape[-1]
+    if gram_chunk is None or gram_chunk >= n:
+        s = blas.syrk(x, fill="full", mesh=mesh, axis=axis)  # S = X·Xᵀ
+    else:
+        s = None
+        for lo in range(0, n, gram_chunk):
+            s = blas.syrk(x[..., lo:lo + gram_chunk], fill="full", c=s,
+                          mesh=mesh, axis=axis)
     y = b * s + c * blas.symm(s, s, mesh=mesh, axis=axis)  # S² (sym · dense)
     return a * x + blas.symm(y, x, mesh=mesh, axis=axis)   # sym(Y)·X
 
 
 def orthogonalize_reference(g: jax.Array, steps: int = 5,
                             mesh: Optional[Mesh] = None,
-                            axis: Optional[str] = None) -> jax.Array:
+                            axis: Optional[str] = None,
+                            gram_chunk: Optional[int] = None) -> jax.Array:
     """NS orthogonalization of a (m, n) matrix, operating on the short
     side; returns an approximately semi-orthogonal matrix."""
     transpose = g.shape[0] > g.shape[1]
@@ -75,7 +88,8 @@ def orthogonalize_reference(g: jax.Array, steps: int = 5,
     x = x.astype(jnp.float32)
     x = x / (jnp.linalg.norm(x) + 1e-7)
     x = jax.lax.fori_loop(
-        0, steps, lambda _, v: ns_iteration_reference(v, mesh, axis), x)
+        0, steps,
+        lambda _, v: ns_iteration_reference(v, mesh, axis, gram_chunk), x)
     return (x.T if transpose else x).astype(g.dtype)
 
 
@@ -185,6 +199,9 @@ class Muon:
     mesh: Optional[Mesh] = None
     axis: str = "model"
     fallback_lr: float = 3e-4
+    #: stream NS Grams over column chunks of this size via the SYRK
+    #: beta-accumulate epilogue (None = one-shot)
+    gram_chunk: Optional[int] = None
 
     def init(self, params: Any) -> MuonState:
         return MuonState(
@@ -219,7 +236,7 @@ class Muon:
             # so no mesh here (blas routes dense/pallas per merits)
             flat = m2.reshape((-1,) + m2.shape[-2:])
             o = jax.vmap(lambda t: orthogonalize_reference(
-                t, self.ns_steps))(flat)
+                t, self.ns_steps, gram_chunk=self.gram_chunk))(flat)
             return o.reshape(m2.shape)
         mesh, axis = None, None
         if self.mesh is not None and self.axis in self.mesh.shape:
@@ -227,7 +244,8 @@ class Muon:
             # comm-optimal schedule per (shape, P) instead of a manual
             # shard_map — forward and (custom-VJP) backward both routed
             mesh, axis = self.mesh, self.axis
-        return orthogonalize_reference(m2, self.ns_steps, mesh, axis)
+        return orthogonalize_reference(m2, self.ns_steps, mesh, axis,
+                                       gram_chunk=self.gram_chunk)
 
     def update(self, grads: Any, state: MuonState, params: Any,
                lr_scale: jax.Array = 1.0) -> Tuple[Any, MuonState]:

@@ -270,10 +270,22 @@ def test_cache_key_dtype_stability():
     keys = {cache_key("syrk", 32, 32, d, "cpu")
             for d in (jnp.float32, np.dtype("float32"), "float32",
                       np.float32)}
-    assert keys == {"syrk:32x32:float32:cpu"}
-    assert cache_key("syrk", 32, 32, None, "cpu") == "syrk:32x32:any:cpu"
+    assert keys == {"syrk:32x32:float32:cpu:tril:noacc"}
+    assert cache_key("syrk", 32, 32, None, "cpu") \
+        == "syrk:32x32:any:cpu:tril:noacc"
     assert cache_key("syrk", 32, 32, jnp.bfloat16, "cpu") \
-        == "syrk:32x32:bfloat16:cpu"
+        == "syrk:32x32:bfloat16:cpu:tril:noacc"
+
+
+def test_cache_key_distinguishes_epilogues():
+    """Identical tiles must not be reused across epilogues: the output
+    layout and a beta-accumulate C0 input change the VMEM footprint."""
+    base = cache_key("syrk", 32, 32, jnp.float32, "cpu")
+    packed = cache_key("syrk", 32, 32, jnp.float32, "cpu", fill="packed")
+    acc = cache_key("syrk", 32, 32, jnp.float32, "cpu", accumulate=True)
+    packed_acc = cache_key("syrk", 32, 32, jnp.float32, "cpu",
+                           fill="packed", accumulate=True)
+    assert len({base, packed, acc, packed_acc}) == 4
 
 
 # ---------------------------------------------------------------------------
