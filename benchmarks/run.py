@@ -49,6 +49,20 @@ _BLAS_GRID = (
 
 _LARGE_N1 = 1024
 
+#: mesh-route grid: (op, n1, n2, fill, expected_route, devices).  The
+#: 1d/2d rows are the CI smoke set (12 fake devices cover them); the 3d
+#: row needs the full 12-device p1×p2 embed and only runs on the full
+#: grid.  Shapes are chosen so plan_route really picks the named
+#: schedule (asserted into the row, not assumed).
+_BLAS_MESH_GRID = (
+    ("syrk", 64, 256, "packed", "1d", 4),
+    ("syr2k", 64, 256, "packed", "1d", 4),
+    ("symm", 64, 256, None, "1d", 4),
+    ("syrk", 96, 12, "packed", "2d", 6),
+    ("symm", 96, 12, None, "2d", 6),
+    ("syrk", 24, 8, "packed", "3d", 12),
+)
+
 
 def _tril_words(n: int) -> int:
     return n * (n + 1) // 2
@@ -156,6 +170,126 @@ def bench_blas_fwd_bwd(repeats: int = 3, grid: str = "full"):
     return rows
 
 
+def _mesh_movement_estimate(op, n1, n2, fill, path, P):
+    """Analytic wire words (collective traffic) and per-device peak-live
+    words for one mesh-routed call (f32 words; ×4 for bytes).
+
+    ``wire_out_words`` is what the symmetric result/operand moves across
+    the mesh boundary: the packed triangle (~n²/2) on every packed
+    route, versus the n² a dense gather (the pre-packed-wire
+    ``assemble_sym``) used to move.  ``per_device_words`` is the owned
+    share: operand column/row shards plus the ~n²/(2P) extended
+    triangle block — the paper's per-processor memory bound."""
+    m = 1 if op == "syrk" else 2
+    L = _tril_words(n1)
+    packed_out = L if (fill == "packed" or op == "symm") else n1 * n1
+    if path == "1d":
+        wire = int((1 - 1 / P) * L) * (2 if op == "symm" else 1)
+        per_dev = m * n1 * n2 // P + L
+    elif path == "2d":
+        import math
+        c = int((math.isqrt(4 * P + 1) - 1) // 2)      # P = c(c+1)
+        nb = -(-n1 // (c * c))
+        T = c * (c - 1) // 2
+        wire = int(m * (n1 * n2 / c) * (1 - 1 / P)) + L
+        per_dev = (T + 1) * nb * nb + m * c * nb * (-(-n2 // (c + 1)))
+    else:                                              # 3d
+        wire = int(m * n1 * n2 / (P ** 0.5)) + L
+        per_dev = _tril_words(n1) // P + m * n1 * n2 // P
+    return {
+        "wire_out_words": packed_out,
+        "dense_wire_words": n1 * n1,
+        "collective_words": wire,
+        "per_device_peak_live_words": per_dev,
+        "wire_saving": round(n1 * n1 / packed_out, 3),
+    }
+
+
+def bench_blas_mesh(repeats: int = 3, grid: str = "full"):
+    """Wall-clock + wire-traffic rows for the packed mesh routes.
+
+    Needs fake (or real) devices: rows whose mesh does not fit the
+    available device count are skipped with a note.  ``grid="small"``
+    keeps the 1d/2d rows (the CI smoke set, 12 fake devices via
+    XLA_FLAGS=--xla_force_host_platform_device_count).  Rows land in
+    BENCH_blas_mesh.json (repo root, full grid) or
+    artifacts/BENCH_blas_mesh_small.json (small grid)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import blas
+
+    ndev = jax.device_count()
+    rng = np.random.default_rng(1)
+    rows = []
+    for op, n1, n2, fill, path, need in _BLAS_MESH_GRID:
+        if grid == "small" and path == "3d":
+            continue
+        if ndev < need:
+            print(f"[blas mesh] skip {op}[{n1}x{n2}] {path}: needs "
+                  f"{need} devices, have {ndev}")
+            continue
+        mesh = jax.make_mesh((need,), ("x",))
+        a = jnp.asarray(rng.standard_normal((n1, n2)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((n1, n2)), jnp.float32)
+        kw = {} if fill is None else dict(fill=fill)
+        if op == "syrk":
+            fwd = jax.jit(lambda x: blas.syrk(x, mesh=mesh, **kw))
+            loss = jax.jit(jax.value_and_grad(
+                lambda x: blas.syrk(x, mesh=mesh, **kw).sum()))
+            args = (a,)
+        elif op == "syr2k":
+            fwd = jax.jit(lambda x, y: blas.syr2k(x, y, mesh=mesh, **kw))
+            loss = jax.jit(jax.value_and_grad(
+                lambda x, y: blas.syr2k(x, y, mesh=mesh, **kw).sum(),
+                argnums=(0, 1)))
+            args = (a, b)
+        else:
+            tt = blas.TriTiles.from_tril(
+                jnp.tril(jnp.asarray(rng.standard_normal((n1, n1)),
+                                     jnp.float32)), 16)
+            fwd = jax.jit(lambda t, y: blas.symm(
+                blas.TriTiles(t, n1, 16), y, mesh=mesh))
+            loss = jax.jit(jax.value_and_grad(
+                lambda t, y: blas.symm(blas.TriTiles(t, n1, 16), y,
+                                       mesh=mesh).sum(), argnums=(0, 1)))
+            args = (tt.tiles, b)
+        planned = blas.plan_route(op, n1, n2, mesh=mesh)
+
+        def timed(fn):
+            jax.block_until_ready(fn(*args))          # compile + warm
+            best = float("inf")
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(*args))
+                best = min(best, time.perf_counter() - t0)
+            return best
+
+        row = {
+            "op": op, "n1": n1, "n2": n2, "fill": fill or "tritiles",
+            "devices": need, "route": planned.path,
+            "route_expected": path,
+            "backend": jax.default_backend(),
+            "fwd_s": timed(fwd), "fwd_bwd_s": timed(loss),
+        }
+        row.update(_mesh_movement_estimate(op, n1, n2, fill,
+                                           planned.path, need))
+        rows.append(row)
+    if not rows:
+        print("[blas mesh] no rows (single device?) — nothing written")
+        return rows
+    if grid == "full":
+        out = os.path.join(ROOT, "BENCH_blas_mesh.json")
+    else:
+        os.makedirs(os.path.join(ROOT, "artifacts"), exist_ok=True)
+        out = os.path.join(ROOT, "artifacts", "BENCH_blas_mesh_small.json")
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"[blas mesh] {len(rows)} rows ({grid} grid) -> {out}")
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
@@ -165,19 +299,38 @@ def main() -> None:
     ap.add_argument("--grid", default="full", choices=("full", "small"),
                     help="blas grid size: 'small' drops the >=1024 rows "
                          "(CI smoke)")
+    ap.add_argument("--mesh", default="on", choices=("on", "off", "only"),
+                    help="mesh-route rows need fake devices "
+                         "(XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=12), which contaminates single-device "
+                         "timings — run the two grids in SEPARATE "
+                         "processes: '--mesh off' (no flags) for the "
+                         "single-device grid, '--mesh only' (with flags) "
+                         "for the mesh rows")
     args = ap.parse_args()
     chosen = args.only.split(",") if args.only else list(SUITES)
     chosen = [c for c in chosen if c != "blas"]
+    if args.mesh == "only":
+        chosen = []
 
     os.makedirs(os.path.join(ROOT, "artifacts"), exist_ok=True)
     failures = 0
-    try:
-        bench_blas_fwd_bwd(grid=args.grid)  # always: feeds the trajectory
-    except Exception as e:  # noqa: BLE001
-        import traceback
-        traceback.print_exc()
-        print(f"[blas fwd+bwd] FAILED: {e}")
-        failures += 1
+    if args.mesh != "only":
+        try:
+            bench_blas_fwd_bwd(grid=args.grid)  # feeds the trajectory
+        except Exception as e:  # noqa: BLE001
+            import traceback
+            traceback.print_exc()
+            print(f"[blas fwd+bwd] FAILED: {e}")
+            failures += 1
+    if args.mesh != "off":
+        try:
+            bench_blas_mesh(grid=args.grid)     # packed mesh wire rows
+        except Exception as e:  # noqa: BLE001
+            import traceback
+            traceback.print_exc()
+            print(f"[blas mesh] FAILED: {e}")
+            failures += 1
     for name in chosen:
         mod = __import__(f"benchmarks.bench_{'seq_bounds' if name == 'seq' else 'parallel_comm' if name == 'parallel' else name}",  # noqa: E501
                          fromlist=["main"])

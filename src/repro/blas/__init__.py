@@ -11,7 +11,7 @@ shapes and GSPMD fallback, triangular flat-grid Pallas kernels on a
 single accelerator, and the paper's 1D/2D/3D shard_map schedules on a
 mesh.  See api.py for the dtype/fill/batching contracts.
 """
-from ..core.packing import TriTiles
+from ..core.packing import ShardedTriTiles, TriTiles
 from .api import explain, symm, syr2k, syrk
 from .autotune import clear_cache, heuristic_tiles, pick_tiles
 from .grad import COTANGENT_OPS, sym_cotangent
@@ -19,7 +19,7 @@ from .routing import (PALLAS_MIN_N1, Route, capture_routes, pinned,
                       plan_route)
 
 __all__ = [
-    "syrk", "syr2k", "symm", "explain", "TriTiles",
+    "syrk", "syr2k", "symm", "explain", "TriTiles", "ShardedTriTiles",
     "plan_route", "Route", "PALLAS_MIN_N1",
     "pinned", "capture_routes",
     "COTANGENT_OPS", "sym_cotangent",

@@ -14,8 +14,8 @@ Contracts shared by all paths:
   * accumulation is always f32; ``out_dtype=None`` (default) returns the
     f32 accumulation instead of silently downcasting to the input dtype;
   * leading batch dimensions are supported (vmapped over the packed-tile
-    kernels / dense path; mesh paths apply to unbatched operands and
-    batched mesh calls fall back to GSPMD dense);
+    kernels / dense path; batched mesh calls stack packed triangles on
+    the 1D wire when n2 % P == 0, else GSPMD dense);
   * SYRK/SYR2K ``fill``: "tril" (dense lower-triangular, default),
     "full" (symmetrized dense), or "packed" (row-major packed lower
     triangle, the wire format of the 1D algorithms);
@@ -33,11 +33,19 @@ Packed-layout discipline (the paper's ~n²/2 storage bound): on the
 Pallas route, ``fill="packed"`` and ``fill="tril"`` never materialize an
 n×n dense intermediate — the kernels emit diagonal-masked packed tiles
 (epilogue in-kernel) and the fill conversion is a cached-index gather
-(packed) or the output assembly itself (tril).
+(packed) or the output assembly itself (tril).  The same discipline
+holds on the mesh routes: 2D/3D schedules emit
+:class:`~repro.core.packing.ShardedTriTiles` extended triangle-block
+shards and only the ~n²/2 packed words are ever gathered
+(``fill="tril"/"full"`` unpacks once, at the exit); SYMM scatters a
+pre-packed operand straight into the per-device shards; batched calls
+stack packed triangles on the 1D wire instead of falling back to GSPMD
+dense.
 """
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Optional, Tuple, Union
 
 import jax
@@ -198,8 +206,34 @@ def _symm_pallas_tiles(a_tiles: jax.Array, b32: jax.Array, n1: int,
 
 
 # --------------------------------------------------------------------------
-# batching helper
+# densify telemetry: the packed wire should make these unreachable
 # --------------------------------------------------------------------------
+_DENSIFY_WARNED = set()
+
+
+def _warn_densify(op: str, path: str) -> None:
+    """One-time warning (per op/route) when a packed TriTiles operand has
+    to be rebuilt dense.  After the mesh packed wire this only fires on
+    the GSPMD/jnp dense fallback — anywhere else it is a regression."""
+    key = (op, path)
+    if key in _DENSIFY_WARNED:
+        return
+    _DENSIFY_WARNED.add(key)
+    warnings.warn(f"repro.blas: packed TriTiles operand of {op} densified "
+                  f"on the {path!r} route — the packed wire does not cover "
+                  "this path", stacklevel=3)
+
+
+# --------------------------------------------------------------------------
+# batching helpers
+# --------------------------------------------------------------------------
+def _flatten_lead(x: jax.Array, core_rank: int):
+    """Collapse leading batch dims to one stack axis: (…, *core) ->
+    ((k, *core), lead_shape)."""
+    lead = x.shape[:x.ndim - core_rank]
+    return x.reshape((-1,) + x.shape[x.ndim - core_rank:]), lead
+
+
 def _apply_batched(fn, *arrays, trailing=None):
     """vmap ``fn`` over flattened leading batch dims (shared by all
     operands), or call directly for unbatched operands.  ``trailing``
@@ -227,18 +261,25 @@ def _execute_syrk(a32: jax.Array, c32: Optional[jax.Array], *, fill: str,
                   out_dtype=None) -> jax.Array:
     n1 = a32.shape[-2]
     if route.path == "1d":
-        packed = meshpath.syrk_1d_packed(a32, mesh, route.axis)
+        if a32.ndim > 2:
+            af, lead = _flatten_lead(a32, 2)
+            packed = meshpath.syrk_1d_packed_stacked(af, mesh, route.axis)
+            packed = packed.reshape(lead + packed.shape[-1:])
+        else:
+            packed = meshpath.syrk_1d_packed(a32, mesh, route.axis)
         base = _packed_to_fill(packed, n1, fill)
         return _combine_fill(base, c32, alpha, beta, fill)
     if route.path == "2d":
-        tril = meshpath.syrk_2d_dense(a32, route.choice.c, mesh, route.axis)
-        return _combine_fill(_tril_to_fill(tril, fill), c32, alpha, beta,
-                             fill)
+        packed = meshpath.syrk_2d_sharded(a32, route.choice.c, mesh,
+                                          route.axis).to_packed()
+        return _combine_fill(_packed_to_fill(packed, n1, fill), c32, alpha,
+                             beta, fill)
     if route.path == "3d":
-        tril = meshpath.syrk_3d_dense(a32, route.choice.c, route.choice.p2,
-                                      mesh)
-        return _combine_fill(_tril_to_fill(tril, fill), c32, alpha, beta,
-                             fill)
+        packed = meshpath.syrk_3d_sharded(a32, route.choice.c,
+                                          route.choice.p2,
+                                          mesh).to_packed()
+        return _combine_fill(_packed_to_fill(packed, n1, fill), c32, alpha,
+                             beta, fill)
     if route.path == "pallas":
         fn = functools.partial(_syrk_pallas, fill=fill, tiles=route.tiles,
                                interpret=interpret, alpha=alpha, beta=beta,
@@ -257,19 +298,27 @@ def _execute_syr2k(a32: jax.Array, b32: jax.Array,
                    out_dtype=None) -> jax.Array:
     n1 = a32.shape[-2]
     if route.path == "1d":
-        packed = meshpath.syr2k_1d_packed(a32, b32, mesh, route.axis)
+        if a32.ndim > 2:
+            af, lead = _flatten_lead(a32, 2)
+            bf, _ = _flatten_lead(b32, 2)
+            packed = meshpath.syr2k_1d_packed_stacked(af, bf, mesh,
+                                                      route.axis)
+            packed = packed.reshape(lead + packed.shape[-1:])
+        else:
+            packed = meshpath.syr2k_1d_packed(a32, b32, mesh, route.axis)
         base = _packed_to_fill(packed, n1, fill)
         return _combine_fill(base, c32, alpha, beta, fill)
     if route.path == "2d":
-        tril = meshpath.syr2k_2d_dense(a32, b32, route.choice.c, mesh,
-                                       route.axis)
-        return _combine_fill(_tril_to_fill(tril, fill), c32, alpha, beta,
-                             fill)
+        packed = meshpath.syr2k_2d_sharded(a32, b32, route.choice.c, mesh,
+                                           route.axis).to_packed()
+        return _combine_fill(_packed_to_fill(packed, n1, fill), c32, alpha,
+                             beta, fill)
     if route.path == "3d":
-        tril = meshpath.syr2k_3d_dense(a32, b32, route.choice.c,
-                                       route.choice.p2, mesh)
-        return _combine_fill(_tril_to_fill(tril, fill), c32, alpha, beta,
-                             fill)
+        packed = meshpath.syr2k_3d_sharded(a32, b32, route.choice.c,
+                                           route.choice.p2,
+                                           mesh).to_packed()
+        return _combine_fill(_packed_to_fill(packed, n1, fill), c32, alpha,
+                             beta, fill)
     if route.path == "pallas":
         fn = functools.partial(_syr2k_pallas, fill=fill, tiles=route.tiles,
                                interpret=interpret, alpha=alpha, beta=beta,
@@ -290,6 +339,13 @@ def _execute_symm(a32: Union[jax.Array, TriTiles], b32: jax.Array, *,
                                    interpret=interpret,
                                    out_dtype=out_dtype)
     if route.path == "1d":
+        if b32.ndim > 2:
+            af, lead = _flatten_lead(a32, 2)
+            bf, _ = _flatten_lead(b32, 2)
+            out = meshpath.symm_1d_packed_a_stacked(
+                pack_tril(jnp.tril(af)), bf, b32.shape[-2], mesh,
+                route.axis)
+            return out.reshape(lead + out.shape[-2:])
         return meshpath.symm_1d_dense(a32, b32, mesh, route.axis)
     if route.path == "2d":
         return meshpath.symm_2d_dense(a32, b32, route.choice.c, mesh,
@@ -309,19 +365,28 @@ def _execute_symm_tiles(a: TriTiles, b32: jax.Array, *, route: Route,
                         mesh, interpret: Optional[bool],
                         out_dtype=None) -> jax.Array:
     """SYMM with a pre-packed symmetric operand.  The packed layout
-    survives as far as each path allows: straight into the kernel on
-    the Pallas route, onto the packed 1D wire on a mesh; only the
-    2d/3d/dense fallbacks rebuild a dense triangle."""
+    survives every route: straight into the kernel on the Pallas route,
+    the packed triangle on the 1D wire (stacked when batched), a pure
+    scatter into the extended triangle-block shards on 2d/3d.  Only the
+    GSPMD/jnp dense fallback rebuilds a dense matrix — and says so once
+    via :func:`_warn_densify`."""
     n1 = a.n
     if route.path == "1d":
-        return meshpath.symm_1d_packed_a(a.to_packed(), b32, n1, mesh,
-                                         route.axis)
+        p = a.to_packed()
+        if b32.ndim > 2:
+            pf, lead = _flatten_lead(p, 1)
+            bf, _ = _flatten_lead(b32, 2)
+            out = meshpath.symm_1d_packed_a_stacked(pf, bf, n1, mesh,
+                                                    route.axis)
+            return out.reshape(lead + out.shape[-2:])
+        return meshpath.symm_1d_packed_a(p, b32, n1, mesh, route.axis)
     if route.path == "2d":
-        return meshpath.symm_2d_dense(a.to_tril(), b32, route.choice.c,
-                                      mesh, route.axis)
+        return meshpath.symm_2d_packed_a(a.to_packed(), b32,
+                                         route.choice.c, mesh, route.axis)
     if route.path == "3d":
-        return meshpath.symm_3d_dense(a.to_tril(), b32, route.choice.c,
-                                      route.choice.p2, mesh)
+        return meshpath.symm_3d_packed_a(a.to_packed(), b32,
+                                         route.choice.c, route.choice.p2,
+                                         mesh)
     if route.path == "pallas":
         bm = a.bm                      # the layout fixes the row tile
         bn = route.tiles[1]
@@ -329,6 +394,7 @@ def _execute_symm_tiles(a: TriTiles, b32: jax.Array, *, route: Route,
                                interpret=interpret,
                                out_dtype=out_dtype or jnp.float32)
         return _apply_batched(fn, a.tiles, b32, trailing=(3, 2))
+    _warn_densify("symm", route.path)
     return a.to_full() @ b32
 
 
@@ -423,8 +489,10 @@ def symm(a_sym, b, *, out_dtype=None, mesh=None,
     ``a_sym`` may be a dense array — only its lower triangle is read
     (the upper half may hold garbage) — or a pre-packed
     :class:`~repro.core.packing.TriTiles`, in which case the packed
-    layout feeds the Pallas kernel / 1D packed wire directly and the
-    symmetric matrix is never densified beyond each path's working set.
+    layout feeds the Pallas kernel or the packed mesh wire directly
+    (1d all-gather, 2d/3d extended triangle-block scatter, stacked 1d
+    when batched) and the symmetric matrix is never densified beyond
+    each path's working set.
     Reverse-differentiable on every route: dB is a SYMM and dA a
     tril-projected SYR2K through the same router (see
     :mod:`repro.blas.grad`); the dA cotangent is zero on the unread

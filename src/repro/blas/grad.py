@@ -31,13 +31,17 @@ triangle, so its cotangent L enters the SYMM as the tril-valid operand
 L with the *diagonal doubled* (sym(L + diag L) = L + Lᵀ); a "full"
 primal exposes both mirrors and contributes tril(Ḡ) + triu(Ḡ)ᵀ.
 
-Packed cotangents stay packed: on the 1D mesh route the packed
-triangle feeds :func:`~repro.blas.meshpath.symm_1d_packed_a` (the wire
-format), and on the Pallas route it is scattered into a
-:class:`~repro.core.packing.TriTiles` that flows straight into the
-packed-operand SYMM kernel — neither direction densifies an n×n
+Packed cotangents stay packed on every route: the 1D mesh wire feeds
+:func:`~repro.blas.meshpath.symm_1d_packed_a` (stacked when batched),
+the 2D/3D wires scatter the packed triangle straight into the
+extended triangle-block shards
+(:func:`~repro.blas.meshpath.symm_2d_packed_a` /
+:func:`~repro.blas.meshpath.symm_3d_packed_a`), and the Pallas route
+scatters into a :class:`~repro.core.packing.TriTiles` that flows into
+the packed-operand SYMM kernel — no direction densifies an n×n
 intermediate.  A SYMM whose primal A was TriTiles also gets its dA
-back as TriTiles (via a packed-fill SYR2K).
+back as TriTiles (via a packed-fill SYR2K, itself packed on the mesh
+wire).
 
 Residuals are the operands only — nothing symmetric is stored or
 recomputed, so backward memory matches forward operand memory and the
@@ -126,20 +130,36 @@ def _bwd_kwargs(route: routing.Route, mesh, interpret):
     return dict(interpret=interpret)
 
 
-def _packed_1d_symm(g_packed: jax.Array, other: jax.Array, n1: int,
-                    route: routing.Route, mesh) -> jax.Array:
-    """Packed-fill cotangent × column-sharded operand on the 1D mesh
-    path: double the packed diagonal and feed the packed triangle
-    straight into the 1D SYMM — the cotangent stays in the wire format
-    end to end (no dense round-trip).  Returns None when the backward
-    SYMM does not route 1D."""
+def _packed_mesh_symm(g_packed: jax.Array, other: jax.Array, n1: int,
+                      route: routing.Route, mesh) -> jax.Array:
+    """Packed-fill cotangent × operand on a mesh route: double the
+    packed diagonal and feed the packed triangle straight onto
+    whichever packed wire the backward SYMM plans — the 1D all-gather
+    wire (stacked when batched), or a pure scatter into the 2D/3D
+    extended triangle-block shards.  The cotangent stays in a packed
+    layout end to end (no dense round-trip).  Returns None when the
+    backward SYMM routes dense (GSPMD fallback)."""
     br = routing.plan_route("symm", n1, other.shape[-1],
-                            dtype=jnp.float32, mesh=mesh, axis=route.axis)
-    if br.path != "1d":
-        return None
+                            dtype=jnp.float32, batch=other.ndim > 2,
+                            mesh=mesh, axis=route.axis)
     from . import meshpath
     lp = g_packed * jnp.asarray(_packed_diag_scale(n1, 2.0))
-    return meshpath.symm_1d_packed_a(lp, other, n1, mesh, br.axis)
+    if br.path == "1d":
+        if other.ndim > 2:
+            lead = other.shape[:-2]
+            pf = lp.reshape((-1, lp.shape[-1]))
+            bf = other.reshape((-1,) + other.shape[-2:])
+            out = meshpath.symm_1d_packed_a_stacked(pf, bf, n1, mesh,
+                                                    br.axis)
+            return out.reshape(lead + out.shape[-2:])
+        return meshpath.symm_1d_packed_a(lp, other, n1, mesh, br.axis)
+    if br.path == "2d" and other.ndim == 2:
+        return meshpath.symm_2d_packed_a(lp, other, br.choice.c, mesh,
+                                         br.axis)
+    if br.path == "3d" and other.ndim == 2:
+        return meshpath.symm_3d_packed_a(lp, other, br.choice.c,
+                                         br.choice.p2, mesh)
+    return None
 
 
 def _packed_cotangent_tiles(g_packed: jax.Array, n1: int,
@@ -159,8 +179,8 @@ def _syrk_bwd(g: jax.Array, a: jax.Array, *, fill: str, alpha: float,
     n1 = a.shape[-2]
     g = g.astype(jnp.float32)
     with routing.pinned(route):
-        if fill == "packed" and mesh is not None and a.ndim == 2:
-            da = _packed_1d_symm(g, a, n1, route, mesh)
+        if fill == "packed" and mesh is not None:
+            da = _packed_mesh_symm(g, a, n1, route, mesh)
             if da is not None:
                 return _scale(da, alpha)
         if fill == "packed" and route.path == "pallas":
@@ -178,10 +198,10 @@ def _syr2k_bwd(g: jax.Array, a: jax.Array, b: jax.Array, *, fill: str,
     g = g.astype(jnp.float32)
     kw = _bwd_kwargs(route, mesh, interpret)
     with routing.pinned(route):
-        if fill == "packed" and mesh is not None and a.ndim == 2:
-            da = _packed_1d_symm(g, b, n1, route, mesh)
+        if fill == "packed" and mesh is not None:
+            da = _packed_mesh_symm(g, b, n1, route, mesh)
             if da is not None:
-                db = _packed_1d_symm(g, a, n1, route, mesh)
+                db = _packed_mesh_symm(g, a, n1, route, mesh)
                 return _scale(da, alpha), _scale(db, alpha)
         if fill == "packed" and route.path == "pallas":
             at = _packed_cotangent_tiles(g, n1, route)   # one scatter

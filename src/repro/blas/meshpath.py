@@ -7,22 +7,30 @@ already lives sharded.  The blas front-end instead takes ordinary
 distribute / assemble shims around them:
 
   1D — column-shard the non-symmetric operands, move only the packed
-       triangle (Algs 7–9);
+       triangle (Algs 7–9); batched stacks ride the same wire (one
+       reduce-scatter / all-gather covers the whole stack);
   2D — triangle-block layout on exactly P = c(c+1) devices (Algs 10–12);
   3D — p1 × p2 grid (2D in-slice + replication axis, Algs 13–15),
        reshaped from a single-axis mesh.
 
-All functions take/return f32 and produce dense results (tril for
-SYRK/SYR2K, full for SYMM); :mod:`repro.blas.api` handles fill/dtype.
+Packed wire discipline: the symmetric operand/result crosses every
+boundary here in a packed layout — the element-packed triangle on the
+1D wire, :class:`~repro.core.packing.ShardedTriTiles` extended
+triangle-block shards on the 2D/3D wire.  SYRK/SYR2K return
+``ShardedTriTiles`` (2d/3d) or the packed triangle (1d) and SYMM
+consumes a pre-packed triangle via a pure scatter into the per-device
+shards; nothing on these paths builds an n₁×n₁ dense intermediate —
+that exit exists only in the explicitly-dense ``*_dense`` wrappers.
+All functions take/return f32; :mod:`repro.blas.api` handles
+fill/dtype.
 
-The distribute/assemble helpers mirror the numpy host-side versions in
+The distribute/collect helpers mirror the numpy host-side versions in
 core/twodim.py but use static index tables with jnp gathers/scatters so
 they stay traceable under jit.
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,15 +41,16 @@ from jax.sharding import PartitionSpec as P
 from ..compat import shard_map
 from ..core.onedim import (_padded_tril_len, symm_1d_local, syr2k_1d_local,
                            syrk_1d_local)
-from ..core.packing import pack_tril, tril_size
-from ..core.twodim import TwoDPlan, make_2d_plan, symm_2d, syr2k_2d, syrk_2d
+from ..core.packing import ShardedTriTiles, pack_tril, tril_size
+from ..core.twodim import (TwoDPlan, make_2d_plan, symm_2d, syr2k_2d,
+                           syrk_2d, tb_flat_words)
 from ..core.threedim import symm_3d, syr2k_3d, syrk_3d
 
 TB_AXIS, REP_AXIS = "blas_p1", "blas_p2"
 
 
 # --------------------------------------------------------------------------
-# traced distribute / assemble (static index tables from the plan)
+# traced distribute / collect for the non-symmetric operands
 # --------------------------------------------------------------------------
 def distribute_rows_jnp(x: jax.Array, plan: TwoDPlan) -> jax.Array:
     """(n1, n2) -> (P, c, nb, w) per-device row-block column shares."""
@@ -70,53 +79,6 @@ def collect_rows_jnp(dist: jax.Array, plan: TwoDPlan) -> jax.Array:
     return out.reshape(plan.n1_pad, plan.n2_pad)[:plan.n1, :plan.n2]
 
 
-def assemble_sym_jnp(off: jax.Array, diag: jax.Array, plan: TwoDPlan
-                     ) -> jax.Array:
-    """(P, T, nb, nb) + (P, nb, nb) -> dense lower-triangular (n1, n1)."""
-    c, nb = plan.c, plan.nb
-    Pn = plan.num_devices
-    full = jnp.zeros((c * c, c * c, nb, nb), off.dtype)
-    if plan.T:
-        sel = np.array([(k, t, plan.R[k][a], plan.R[k][b])
-                        for k in range(Pn)
-                        for t, (a, b) in enumerate(plan.pairs)])
-        full = full.at[sel[:, 2], sel[:, 3]].set(off[sel[:, 0], sel[:, 1]])
-    dsel = np.array([(k, plan.R[k][plan.diag_slot[k]])
-                     for k in range(Pn) if plan.diag_slot[k] >= 0])
-    if len(dsel):
-        full = full.at[dsel[:, 1], dsel[:, 1]].set(diag[dsel[:, 0]])
-    dense = full.transpose(0, 2, 1, 3).reshape(plan.n1_pad, plan.n1_pad)
-    return jnp.tril(dense)[:plan.n1, :plan.n1]
-
-
-def distribute_sym_jnp(a: jax.Array, plan: TwoDPlan
-                       ) -> Tuple[jax.Array, jax.Array]:
-    """tril-valid (n1, n1) -> extended triangle blocks
-    ((P, T, nb, nb) off-diag, (P, nb, nb) lower-tri diag).
-
-    Only the lower triangle of ``a`` is ever read: off-diagonal blocks
-    (i > j) lie strictly below the diagonal and diagonal blocks are
-    tril'd."""
-    c, nb = plan.c, plan.nb
-    Pn = plan.num_devices
-    ap = jnp.zeros((plan.n1_pad, plan.n1_pad), a.dtype)
-    ap = ap.at[:a.shape[0], :a.shape[1]].set(jnp.tril(a))
-    At = ap.reshape(c * c, nb, c * c, nb).transpose(0, 2, 1, 3)
-    if plan.T:
-        I = np.array([[plan.R[k][a_] for (a_, b_) in plan.pairs]
-                      for k in range(Pn)])
-        J = np.array([[plan.R[k][b_] for (a_, b_) in plan.pairs]
-                      for k in range(Pn)])
-        off = At[I, J]
-    else:
-        off = jnp.zeros((Pn, 0, nb, nb), a.dtype)
-    ds = plan.diag_slot
-    D = np.array([plan.R[k][max(int(ds[k]), 0)] for k in range(Pn)])
-    diag = jnp.tril(At[D, D])
-    diag = diag * jnp.asarray(ds >= 0)[:, None, None].astype(diag.dtype)
-    return off, diag
-
-
 def distribute_rows_3d_jnp(x: jax.Array, plan: TwoDPlan, p2: int
                            ) -> jax.Array:
     """(n1, n2) -> (p1, p2, c, nb, w2): column slices over the
@@ -137,26 +99,27 @@ def collect_rows_3d_jnp(c_dist: jax.Array, plan: TwoDPlan, p2: int
 
 
 def flat_tb_size(plan: TwoDPlan) -> int:
-    return (plan.T + 1) * plan.nb * plan.nb
+    return tb_flat_words(plan.c, plan.n1)
 
 
-def gather_3d_sym_jnp(flat_shards: jax.Array, plan: TwoDPlan) -> jax.Array:
-    """(p1, p2, shard) reduce-scattered output -> dense tril (n1, n1)."""
+def _sharded_from_flat(flat_shards: jax.Array, plan: TwoDPlan, n1: int,
+                       c: int) -> ShardedTriTiles:
+    """(p1, p2, shard) reduce-scattered 3D output -> ShardedTriTiles
+    (a reshape of the ~n²/2 packed words; no dense rebuild)."""
     p1, p2, s = flat_shards.shape
     flat = flat_shards.reshape(p1, p2 * s)[:, :flat_tb_size(plan)]
     t = plan.T * plan.nb * plan.nb
     off = flat[:, :t].reshape(p1, plan.T, plan.nb, plan.nb)
     diag = flat[:, t:].reshape(p1, plan.nb, plan.nb)
-    return assemble_sym_jnp(off, diag, plan)
+    return ShardedTriTiles(off, diag, n1, c)
 
 
-def distribute_3d_sym_jnp(a: jax.Array, plan: TwoDPlan, p2: int
-                          ) -> jax.Array:
-    """tril-valid (n1, n1) -> (p1, p2, shard) flattened extended
-    triangle blocks, shard-split over the replication axis."""
-    off, diag = distribute_sym_jnp(a, plan)
-    p1 = plan.num_devices
-    flat = jnp.concatenate([off.reshape(p1, -1), diag.reshape(p1, -1)], 1)
+def _flat_from_sharded(st: ShardedTriTiles, p2: int) -> jax.Array:
+    """ShardedTriTiles -> (p1, p2, shard) flattened extended triangle
+    blocks, shard-split over the replication axis (3D SYMM input)."""
+    p1 = st.num_devices
+    flat = jnp.concatenate([st.off.reshape(p1, -1),
+                            st.diag.reshape(p1, -1)], 1)
     pad = -flat.shape[1] % p2
     flat = jnp.pad(flat, ((0, 0), (0, pad)))
     return flat.reshape(p1, p2, -1)
@@ -217,69 +180,191 @@ def symm_1d_dense(a_sym: jax.Array, b: jax.Array, mesh: Mesh, axis: str
     return symm_1d_packed_a(pack_tril(jnp.tril(a_sym)), b, n1, mesh, axis)
 
 
+# ---- batched stacks on the 1D wire ----------------------------------------
+# Collectives don't vmap under shard_map, so batched mesh calls used to
+# fall back to GSPMD dense.  Stacking the packed triangles along a
+# leading axis (the `_ns_iteration_1d_stacked` pattern in optim.muon)
+# keeps them on the comm-optimal wire: ONE reduce-scatter / all-gather
+# of (k, tril) covers the whole stack, moving k·n₁²/2 words instead of
+# the 2·k·n₁² of a dense all-reduce + broadcast.
+def _rank_update_1d_stacked(local_gram, operands, mesh: Mesh, axis: str
+                            ) -> jax.Array:
+    """Shared wire of the stacked 1D rank-updates: pack the local
+    (k, n1, n1) Grams, reduce-scatter + all-gather the (k, tril) stack
+    once, trim the padding.  ``local_gram`` maps the per-device column
+    shards to the local Gram stack."""
+    n1 = operands[0].shape[1]
+    nsh = mesh.shape[axis]
+    L = tril_size(n1)
+    ii, jj = np.tril_indices(n1)
+
+    def body(*ops):
+        g = local_gram(*ops)
+        packed = jnp.pad(g[:, ii, jj],
+                         ((0, 0), (0, _padded_tril_len(n1, nsh) - L)))
+        shard = jax.lax.psum_scatter(packed, axis, scatter_dimension=1,
+                                     tiled=True)
+        return jax.lax.all_gather(shard, axis, axis=1, tiled=True)[:, :L]
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(None, None, axis),) * len(operands),
+                     out_specs=P(), check_vma=False)(*operands)
+
+
+def syrk_1d_packed_stacked(a: jax.Array, mesh: Mesh, axis: str) -> jax.Array:
+    """f32 (k, n1, n2), n2 % P == 0 -> replicated (k, tril_size(n1))."""
+    return _rank_update_1d_stacked(
+        lambda al: jnp.einsum("kmi,kni->kmn", al, al), (a,), mesh, axis)
+
+
+def syr2k_1d_packed_stacked(a: jax.Array, b: jax.Array, mesh: Mesh,
+                            axis: str) -> jax.Array:
+    """f32 (k, n1, n2) × 2 -> replicated (k, tril_size(n1)) of ABᵀ+BAᵀ."""
+    def local_gram(al, bl):
+        g = jnp.einsum("kmi,kni->kmn", al, bl)
+        return g + g.swapaxes(-1, -2)
+
+    return _rank_update_1d_stacked(local_gram, (a, b), mesh, axis)
+
+
+def symm_1d_packed_a_stacked(a_packed: jax.Array, b: jax.Array, n1: int,
+                             mesh: Mesh, axis: str) -> jax.Array:
+    """f32 (k, tril_size(n1)) × (k, n1, n2), n2 % P == 0 -> (k, n1, n2).
+
+    The packed stack is all-gathered once (Alg 9's wire, batched along
+    the payload) and unpacked to the per-device working set — the dense
+    rebuild happens only inside the shard_map body, the 1D algorithm's
+    own local unpack."""
+    nsh = mesh.shape[axis]
+    L = tril_size(n1)
+    ii, jj = np.tril_indices(n1)
+    k = a_packed.shape[0]
+    packed = jnp.pad(a_packed,
+                     ((0, 0), (0, _padded_tril_len(n1, nsh) - L)))
+
+    def body(p_loc, b_loc):
+        full = jax.lax.all_gather(p_loc, axis, axis=1, tiled=True)[:, :L]
+        s = jnp.zeros((k, n1, n1), full.dtype).at[:, ii, jj].set(full)
+        diag = jnp.einsum("kii->ki", s)
+        sym = s + s.swapaxes(-1, -2) \
+            - jnp.einsum("ki,ij->kij", diag, jnp.eye(n1, dtype=s.dtype))
+        return jnp.einsum("kmn,knj->kmj", sym, b_loc)
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(None, axis), P(None, None, axis)),
+                     out_specs=P(None, None, axis),
+                     check_vma=False)(packed, b)
+
+
 # --------------------------------------------------------------------------
-# 2D paths (Algs 10–12): P == c(c+1) triangle-block grid
+# 2D paths (Algs 10–12): P == c(c+1) triangle-block grid, packed wire
 # --------------------------------------------------------------------------
-def syrk_2d_dense(a: jax.Array, c: int, mesh: Mesh, axis: str) -> jax.Array:
+def syrk_2d_sharded(a: jax.Array, c: int, mesh: Mesh, axis: str
+                    ) -> ShardedTriTiles:
+    """f32 (n1, n2) -> per-device extended triangle blocks of tril(A·Aᵀ)
+    — the output stays in the ~n²/(2P)-per-device wire format; callers
+    gather only the packed words (``.to_packed()``) or exit dense
+    explicitly."""
     n1, n2 = a.shape
     plan = make_2d_plan(c, n1, n2)
     off, diag = syrk_2d(distribute_rows_jnp(a, plan), plan, mesh, axis)
-    return assemble_sym_jnp(off, diag, plan)
+    return ShardedTriTiles(off, diag, n1, c)
 
 
-def syr2k_2d_dense(a: jax.Array, b: jax.Array, c: int, mesh: Mesh,
-                   axis: str) -> jax.Array:
+def syr2k_2d_sharded(a: jax.Array, b: jax.Array, c: int, mesh: Mesh,
+                     axis: str) -> ShardedTriTiles:
     n1, n2 = a.shape
     plan = make_2d_plan(c, n1, n2)
     off, diag = syr2k_2d(distribute_rows_jnp(a, plan),
                          distribute_rows_jnp(b, plan), plan, mesh, axis)
-    return assemble_sym_jnp(off, diag, plan)
+    return ShardedTriTiles(off, diag, n1, c)
 
 
-def symm_2d_dense(a_sym: jax.Array, b: jax.Array, c: int, mesh: Mesh,
-                  axis: str) -> jax.Array:
+def symm_2d_packed_a(a_packed: jax.Array, b: jax.Array, c: int, mesh: Mesh,
+                     axis: str) -> jax.Array:
+    """f32 packed tril (tril_size(n1),) × (n1, n2) -> (n1, n2).
+
+    The symmetric operand arrives element-packed and is scattered
+    straight into the extended triangle-block shards (a pure
+    index-table scatter — the distribute_sym step without the dense
+    (n1_pad, n1_pad) staging buffer)."""
     n1, n2 = b.shape
     plan = make_2d_plan(c, n1, n2)
-    a_off, a_diag = distribute_sym_jnp(a_sym, plan)
-    c_dist = symm_2d(a_off, a_diag, distribute_rows_jnp(b, plan), plan,
+    st = ShardedTriTiles.from_packed(a_packed, n1, c)
+    c_dist = symm_2d(st.off, st.diag, distribute_rows_jnp(b, plan), plan,
                      mesh, axis)
     return collect_rows_jnp(c_dist, plan)
 
 
+def syrk_2d_dense(a: jax.Array, c: int, mesh: Mesh, axis: str) -> jax.Array:
+    """Explicit dense exit: packed wire + one unpack of the result."""
+    return syrk_2d_sharded(a, c, mesh, axis).to_tril()
+
+
+def syr2k_2d_dense(a: jax.Array, b: jax.Array, c: int, mesh: Mesh,
+                   axis: str) -> jax.Array:
+    return syr2k_2d_sharded(a, b, c, mesh, axis).to_tril()
+
+
+def symm_2d_dense(a_sym: jax.Array, b: jax.Array, c: int, mesh: Mesh,
+                  axis: str) -> jax.Array:
+    """tril-valid dense A: pack the triangle (reads tril only), then the
+    packed entrance above."""
+    return symm_2d_packed_a(pack_tril(jnp.tril(a_sym)), b, c, mesh, axis)
+
+
 # --------------------------------------------------------------------------
-# 3D paths (Algs 13–15): p1 × p2 grid from a single-axis mesh
+# 3D paths (Algs 13–15): p1 × p2 grid from a single-axis mesh, packed wire
 # --------------------------------------------------------------------------
 def _mesh_3d(mesh: Mesh, p1: int, p2: int) -> Mesh:
     devs = np.asarray(mesh.devices).reshape(-1)
     return Mesh(devs[:p1 * p2].reshape(p1, p2), (TB_AXIS, REP_AXIS))
 
 
-def syrk_3d_dense(a: jax.Array, c: int, p2: int, mesh: Mesh) -> jax.Array:
+def syrk_3d_sharded(a: jax.Array, c: int, p2: int, mesh: Mesh
+                    ) -> ShardedTriTiles:
     n1, n2 = a.shape
     plan = make_2d_plan(c, n1, n2 // p2)
     mesh3 = _mesh_3d(mesh, c * (c + 1), p2)
     flat = syrk_3d(distribute_rows_3d_jnp(a, plan, p2), plan, mesh3,
                    TB_AXIS, REP_AXIS)
-    return gather_3d_sym_jnp(flat, plan)
+    return _sharded_from_flat(flat, plan, n1, c)
 
 
-def syr2k_3d_dense(a: jax.Array, b: jax.Array, c: int, p2: int, mesh: Mesh
-                   ) -> jax.Array:
+def syr2k_3d_sharded(a: jax.Array, b: jax.Array, c: int, p2: int,
+                     mesh: Mesh) -> ShardedTriTiles:
     n1, n2 = a.shape
     plan = make_2d_plan(c, n1, n2 // p2)
     mesh3 = _mesh_3d(mesh, c * (c + 1), p2)
     flat = syr2k_3d(distribute_rows_3d_jnp(a, plan, p2),
                     distribute_rows_3d_jnp(b, plan, p2), plan, mesh3,
                     TB_AXIS, REP_AXIS)
-    return gather_3d_sym_jnp(flat, plan)
+    return _sharded_from_flat(flat, plan, n1, c)
+
+
+def symm_3d_packed_a(a_packed: jax.Array, b: jax.Array, c: int, p2: int,
+                     mesh: Mesh) -> jax.Array:
+    """f32 packed tril × (n1, n2) -> (n1, n2): packed scatter into the
+    extended triangle blocks, shard-split over the replication axis."""
+    n1, n2 = b.shape
+    plan = make_2d_plan(c, n1, n2 // p2)
+    mesh3 = _mesh_3d(mesh, c * (c + 1), p2)
+    st = ShardedTriTiles.from_packed(a_packed, n1, c)
+    c_dist = symm_3d(_flat_from_sharded(st, p2),
+                     distribute_rows_3d_jnp(b, plan, p2), plan, mesh3,
+                     TB_AXIS, REP_AXIS)
+    return collect_rows_3d_jnp(c_dist, plan, p2)
+
+
+def syrk_3d_dense(a: jax.Array, c: int, p2: int, mesh: Mesh) -> jax.Array:
+    return syrk_3d_sharded(a, c, p2, mesh).to_tril()
+
+
+def syr2k_3d_dense(a: jax.Array, b: jax.Array, c: int, p2: int, mesh: Mesh
+                   ) -> jax.Array:
+    return syr2k_3d_sharded(a, b, c, p2, mesh).to_tril()
 
 
 def symm_3d_dense(a_sym: jax.Array, b: jax.Array, c: int, p2: int,
                   mesh: Mesh) -> jax.Array:
-    n1, n2 = b.shape
-    plan = make_2d_plan(c, n1, n2 // p2)
-    mesh3 = _mesh_3d(mesh, c * (c + 1), p2)
-    c_dist = symm_3d(distribute_3d_sym_jnp(a_sym, plan, p2),
-                     distribute_rows_3d_jnp(b, plan, p2), plan, mesh3,
-                     TB_AXIS, REP_AXIS)
-    return collect_rows_3d_jnp(c_dist, plan, p2)
+    return symm_3d_packed_a(pack_tril(jnp.tril(a_sym)), b, c, p2, mesh)

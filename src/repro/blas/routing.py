@@ -210,9 +210,17 @@ def plan_route(op: str, n1: int, n2: int, *, dtype=None, batch: bool = False,
                           "a mesh routes the call", stacklevel=3)
         P = mesh.shape[ax]
         if batch:
-            return _emit(Route(op, "dense", "batched inputs use the GSPMD "
-                               "dense path (collectives don't vmap)", n1, n2,
-                               m, P=P, axis=ax))
+            # collectives don't vmap under shard_map; instead of the old
+            # GSPMD dense fallback, stacks of packed triangles ride the
+            # 1D wire natively (one RS/AG covers the whole stack)
+            if n2 % P == 0:
+                return _emit(Route(op, "1d", "batched: stacked packed "
+                                   "triangles on the 1D wire", n1, n2, m,
+                                   P=P, axis=ax,
+                                   choice=choose_algorithm(n1, n2, P, m)))
+            return _emit(Route(op, "dense", f"batched with n2 % P = "
+                               f"{n2 % P} != 0; GSPMD dense", n1, n2, m,
+                               P=P, axis=ax))
         choice = choose_algorithm(n1, n2, P, m)
         fits_1d = n2 % P == 0
         grid_path = _grid_fits(choice, P, n2, len(mesh.shape) == 1)

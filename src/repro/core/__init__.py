@@ -14,8 +14,8 @@ from .lower_bounds import (memory_dependent_parallel_lower_bound,
                            sequential_reads_lower_bound)
 from .onedim import (symm_1d, symm_1d_local, syr2k_1d, syr2k_1d_local,
                      syrk_1d, syrk_1d_local)
-from .packing import (TriTiles, pack_tril, pack_tril_tiles, tril_size,
-                      unpack_tril)
+from .packing import (ShardedTriTiles, TriTiles, pack_tril,
+                      pack_tril_tiles, tril_size, unpack_tril)
 from .seq import seq_symm, seq_syr2k, seq_syrk
 from .threedim import symm_3d, syr2k_3d, syrk_3d
 from .triangle import (TrianglePartition, affine_partition, cyclic_partition,
@@ -28,8 +28,8 @@ __all__ = [
     "memory_dependent_parallel_lower_bound",
     "memory_independent_lower_bound", "sequential_reads_lower_bound",
     "symm_1d", "symm_1d_local", "syr2k_1d", "syr2k_1d_local", "syrk_1d",
-    "syrk_1d_local", "TriTiles", "pack_tril", "pack_tril_tiles",
-    "tril_size",
+    "syrk_1d_local", "ShardedTriTiles", "TriTiles", "pack_tril",
+    "pack_tril_tiles", "tril_size",
     "unpack_tril", "seq_symm", "seq_syr2k", "seq_syrk", "symm_3d",
     "syr2k_3d", "syrk_3d", "TrianglePartition", "affine_partition",
     "cyclic_partition", "optimal_partition", "projective_partition",

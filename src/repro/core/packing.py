@@ -279,3 +279,125 @@ jax.tree_util.register_pytree_node(
     TriTiles,
     lambda t: ((t.tiles,), (t.n, t.bm)),
     lambda aux, children: TriTiles(children[0], *aux))
+
+
+# ---- ShardedTriTiles: the packed mesh wire format -------------------------
+@dataclasses.dataclass(frozen=True)
+class ShardedTriTiles:
+    """Per-device extended-triangle-block shards of a symmetric matrix —
+    the wire format of the 2D/3D mesh schedules (paper Algs 10–15).
+
+    The affine-plane partition assigns every block pair of the c²-block
+    row grid to exactly one of P = c(c+1) devices: device k holds the
+    T = c(c−1)/2 off-diagonal blocks ``off[k]`` (pairs i>j ∈ R_k) plus
+    one lower-triangular diagonal block ``diag[k]`` (zeros when it owns
+    none).  Total storage is P·(T+1)·nb² ≈ n²/2 — each device owns
+    ~n²/(2P) words, the paper's per-processor memory bound.
+
+    ``off`` is (P, T, nb, nb) and ``diag`` (P, nb, nb) with the device
+    axis leading, exactly the shapes the shard_map schedules emit and
+    consume sharded over the mesh axis; (n, c) are static metadata.
+    Converters route through the cached :func:`~repro.core.twodim.
+    tb_pack_tables` bijection and never build an n×n dense array except
+    the explicitly-dense ``to_tril``/``to_full`` exits.
+    """
+    off: jax.Array                # (P, T, nb, nb)
+    diag: jax.Array               # (P, nb, nb)
+    n: int
+    c: int
+
+    # -- structure ---------------------------------------------------------
+    @property
+    def num_devices(self) -> int:
+        return self.c * (self.c + 1)
+
+    @property
+    def T(self) -> int:
+        return self.c * (self.c - 1) // 2
+
+    @property
+    def nb(self) -> int:
+        return -(-self.n // (self.c * self.c))
+
+    @property
+    def dtype(self):
+        return self.diag.dtype
+
+    def __post_init__(self):
+        shape = getattr(self.diag, "shape", None)
+        if shape is None or len(shape) < 2:
+            return                 # pytree unflatten sentinels pass through
+        want_off = (self.num_devices, self.T, self.nb, self.nb)
+        want_diag = (self.num_devices, self.nb, self.nb)
+        off_shape = tuple(getattr(self.off, "shape", ()))
+        if off_shape != want_off or tuple(shape) != want_diag:
+            raise ValueError(
+                f"ShardedTriTiles(n={self.n}, c={self.c}) needs off "
+                f"{want_off} and diag {want_diag}, got {off_shape} and "
+                f"{tuple(shape)}")
+
+    def astype(self, dtype) -> "ShardedTriTiles":
+        return ShardedTriTiles(self.off.astype(dtype),
+                               self.diag.astype(dtype), self.n, self.c)
+
+    # -- packed exits / entrances (pure gathers & scatters) ----------------
+    def to_packed(self) -> jax.Array:
+        """(tril_size(n),) element-packed triangle (pure gather over the
+        ~n²/2 owned words; no dense intermediate)."""
+        from .twodim import tb_pack_tables
+        kidx, sidx = tb_pack_tables(self.c, self.n)
+        Pn = self.num_devices
+        flat = jnp.concatenate([self.off.reshape(Pn, -1),
+                                self.diag.reshape(Pn, -1)], axis=1)
+        return flat[kidx, sidx]
+
+    @classmethod
+    def from_packed(cls, p, n: int, c: int) -> "ShardedTriTiles":
+        """Element-packed (tril_size(n),) -> per-device shards (pure
+        scatter; padding slots stay zero)."""
+        from .twodim import tb_flat_words, tb_pack_tables
+        assert p.shape[-1] == tril_size(n), (p.shape, n)
+        kidx, sidx = tb_pack_tables(c, n)
+        Pn = c * (c + 1)
+        nb = -(-n // (c * c))
+        T = c * (c - 1) // 2
+        flat = jnp.zeros((Pn, tb_flat_words(c, n)), p.dtype)
+        flat = flat.at[kidx, sidx].set(p)
+        off = flat[:, :T * nb * nb].reshape(Pn, T, nb, nb)
+        diag = flat[:, T * nb * nb:].reshape(Pn, nb, nb)
+        return cls(off, diag, n, c)
+
+    # -- TriTiles interchange ----------------------------------------------
+    def to_tritiles(self, bm: int = 128) -> TriTiles:
+        """Mesh wire -> kernel wire: gather into the element-packed
+        triangle, scatter into (T, bm, bm) tiles; never dense."""
+        return TriTiles.from_packed(self.to_packed(), self.n, bm)
+
+    @classmethod
+    def from_tritiles(cls, t: TriTiles, c: int) -> "ShardedTriTiles":
+        """Kernel wire -> mesh wire (gather + scatter, never dense)."""
+        return cls.from_packed(t.to_packed(), t.n, c)
+
+    # -- dense exits / entrances -------------------------------------------
+    @classmethod
+    def from_tril(cls, x, c: int) -> "ShardedTriTiles":
+        """Dense tril-valid (n, n) -> per-device shards (reads the lower
+        triangle only)."""
+        n = x.shape[-1]
+        return cls.from_packed(pack_tril(jnp.tril(x)), n, c)
+
+    def to_tril(self) -> jax.Array:
+        """Dense (n, n) with zeros above the diagonal."""
+        return unpack_tril(self.to_packed(), self.n, diag=True,
+                           symmetric=False)
+
+    def to_full(self) -> jax.Array:
+        """Dense symmetric (n, n)."""
+        return unpack_tril(self.to_packed(), self.n, diag=True,
+                           symmetric=True)
+
+
+jax.tree_util.register_pytree_node(
+    ShardedTriTiles,
+    lambda t: ((t.off, t.diag), (t.n, t.c)),
+    lambda aux, children: ShardedTriTiles(children[0], children[1], *aux))

@@ -23,7 +23,8 @@ from jax.sharding import PartitionSpec as P
 
 from ..compat import pvary, shard_map
 from .twodim import (TwoDPlan, _exchange_rows, _syrk_blocks, make_2d_plan,
-                     symm_2d_local, syr2k_2d_local, syrk_2d_local)
+                     symm_2d_local, syr2k_2d_local, syrk_2d_local,
+                     tb_flat_words)
 
 
 # --------------------------------------------------------------------------
@@ -197,7 +198,9 @@ def distribute_rows_3d(Xf: np.ndarray, plan: TwoDPlan, p2: int,
 
 
 def flat_tb_size(plan: TwoDPlan) -> int:
-    return plan.T * plan.nb * plan.nb + plan.nb * plan.nb
+    """Words of one flattened extended triangle block (off ‖ diag) —
+    the shared layout of the 3D flat shards and the packed mesh wire."""
+    return tb_flat_words(plan.c, plan.n1)
 
 
 def gather_3d_sym(flat_shards: np.ndarray, plan: TwoDPlan) -> np.ndarray:

@@ -112,6 +112,61 @@ def make_2d_plan(c: int, n1: int, n2: int) -> TwoDPlan:
 
 
 # --------------------------------------------------------------------------
+# packed-triangle <-> extended-triangle-block index tables (the mesh wire)
+# --------------------------------------------------------------------------
+def tb_flat_words(c: int, n1: int) -> int:
+    """Per-device words of one flattened extended triangle block:
+    (T + 1)·nb² — the ~n²/(2P) owned share of the paper's layout."""
+    nb = -(-n1 // (c * c))
+    T = c * (c - 1) // 2
+    return (T + 1) * nb * nb
+
+
+@functools.lru_cache(maxsize=64)
+def tb_pack_tables(c: int, n1: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Static gather/scatter tables between the element-packed lower
+    triangle of an n1×n1 matrix and the 2D plan's per-device extended
+    triangle blocks.
+
+    Element ``l`` of the row-major packed triangle lives at
+    ``flat[kidx[l], sidx[l]]`` where ``flat`` is the (P, (T+1)·nb²)
+    array of per-device flattened (off ‖ diag) extended triangle
+    blocks.  The affine-plane partition stores every block pair
+    exactly once (off-diagonal block (i>j) on the unique line through
+    {i, j}; diagonal block on its unique assigned device), so the map
+    is a bijection onto ~n1²/2 real slots — converting through it
+    never touches an n1×n1 dense intermediate.
+
+    Ownership only depends on (c, n1): every TwoDPlan for the same
+    pair shares these tables regardless of n2.  Cached; returned
+    arrays are read-only.
+    """
+    plan = make_2d_plan(c, n1, 1)          # n2 does not affect ownership
+    nblocks = c * c
+    nb, T, Pn = plan.nb, plan.T, plan.num_devices
+    dev_of = np.full((nblocks, nblocks), -1, dtype=np.int64)
+    slot_of = np.full((nblocks, nblocks), -1, dtype=np.int64)
+    for k in range(Pn):
+        for t, (a, b) in enumerate(plan.pairs):
+            i, j = plan.R[k][a], plan.R[k][b]
+            dev_of[i, j] = k
+            slot_of[i, j] = t
+        ds = plan.diag_slot[k]
+        if ds >= 0:
+            d = plan.R[k][ds]
+            dev_of[d, d] = k
+            slot_of[d, d] = T              # diag block rides as slot T
+    i, j = np.tril_indices(n1)
+    bi, bj = i // nb, j // nb
+    assert (dev_of[bi, bj] >= 0).all(), "partition must cover the triangle"
+    kidx = dev_of[bi, bj].astype(np.int32)
+    sidx = ((slot_of[bi, bj] * nb + i % nb) * nb + j % nb).astype(np.int32)
+    for arr in (kidx, sidx):
+        arr.setflags(write=False)
+    return kidx, sidx
+
+
+# --------------------------------------------------------------------------
 # the all-to-all row exchange (Alg 10 lines 3–14)
 # --------------------------------------------------------------------------
 def _exchange_rows(a_own: jax.Array, plan: TwoDPlan, axis: str) -> jax.Array:

@@ -24,19 +24,23 @@ from jax.sharding import Mesh
 
 from .. import blas
 from ..core.dispatch import choose_algorithm
-from ..core.packing import tril_size, unpack_tril
+from ..core.packing import TriTiles, tril_size, unpack_tril
 
 import numpy as np
 
 
 def packed_gram(x: jax.Array, mesh: Optional[Mesh] = None,
-                axis: str = "model", chunk: Optional[int] = None
-                ) -> jax.Array:
+                axis: str = "model", chunk: Optional[int] = None,
+                out_dtype=None) -> jax.Array:
     """Packed lower triangle of X·Xᵀ / n for X (d, n).
 
     On a mesh whose ``axis`` divides n the router picks the paper's
     packed-triangle 1D SYRK (Alg 7, the case-1 regime these Grams live
-    in); off-mesh it computes locally.  Returns (d(d+1)/2,) f32.
+    in); off-mesh it computes locally.  Returns (d(d+1)/2,), f32 by
+    default; ``out_dtype`` (e.g. bf16) is threaded through the SYRK's
+    ``fill="packed"`` epilogue so the accumulation stays f32 and only
+    the stored packed triangle is narrowed — half the state memory
+    again on top of the ~2× packed saving.
 
     ``chunk``: accumulate over column chunks of that many tokens via
     the beta=1 epilogue (``syrk(x_chunk, fill="packed", c=g)``) — the
@@ -44,19 +48,25 @@ def packed_gram(x: jax.Array, mesh: Optional[Mesh] = None,
     by (d, chunk) instead of (d, n), the streaming regime of the
     paper's limited-memory algorithms (Algs 16–18).  On the Pallas
     route the scale-and-accumulate runs inside the kernel epilogue.
+    Chunks accumulate in f32; only the final chunk casts to
+    ``out_dtype``.
     """
     _, n = x.shape
     if mesh is not None and axis not in mesh.shape:
         mesh = None          # documented fallback: compute locally
     kw = dict(mesh=mesh, axis=axis if mesh is not None else None)
     if chunk is None or chunk >= n:
-        packed = blas.syrk(x, fill="packed", **kw)
+        packed = blas.syrk(x, fill="packed", out_dtype=out_dtype, **kw)
     else:
         packed = None
         for lo in range(0, n, chunk):
+            last = lo + chunk >= n
             packed = blas.syrk(x[:, lo:lo + chunk], fill="packed",
-                               c=packed, **kw)
-    return packed / n
+                               c=packed,
+                               out_dtype=out_dtype if last else None,
+                               **kw)
+    scale = jnp.asarray(1.0 / n, packed.dtype)
+    return packed * scale
 
 
 def decorrelation_penalty(x: jax.Array, mesh: Optional[Mesh] = None,
@@ -90,24 +100,43 @@ class GramMonitor:
     ``chunk``: optional token-chunk size — Gram updates then stream
     column blocks through the beta-accumulate epilogue instead of
     holding the full (d, n) activation slab live (see
-    :func:`packed_gram`)."""
+    :func:`packed_gram`).
+
+    ``out_dtype``: storage dtype of the EMA'd packed state (default
+    f32).  With ``jnp.bfloat16`` the per-layer state is d(d+1)/2 bf16
+    words — a 4× saving over the dense-f32 Gram; the EMA arithmetic
+    still runs in f32 and only the stored triangle is narrowed."""
     decay: float = 0.99
     mesh: Optional[Mesh] = None
     axis: str = "model"
     chunk: Optional[int] = None
+    out_dtype: Optional[Any] = None
     _state: Dict[str, jax.Array] = field(default_factory=dict)
     _dims: Dict[str, int] = field(default_factory=dict)
 
     def update(self, name: str, x: jax.Array) -> None:
-        """x: (d, n) activations/gradients (n = tokens in the batch)."""
+        """x: (d, n) activations/gradients (n = tokens in the batch).
+
+        The fresh Gram stays f32 into the EMA (narrowing it first would
+        quantize the (1−decay)·g term for no saving — the collective is
+        f32 either way); only the stored triangle is cast."""
         d = x.shape[0]
         g = packed_gram(x, self.mesh, self.axis, chunk=self.chunk)
+        store = self.out_dtype or jnp.float32
         if name not in self._state:
-            self._state[name] = g
+            self._state[name] = g.astype(store)
             self._dims[name] = d
         else:
-            self._state[name] = self.decay * self._state[name] \
+            ema = self.decay * self._state[name].astype(jnp.float32) \
                 + (1.0 - self.decay) * g
+            self._state[name] = ema.astype(store)
+
+    def tritiles(self, name: str, bm: int = 128) -> TriTiles:
+        """The EMA'd packed Gram as a :class:`TriTiles` (pure scatter,
+        stored dtype preserved) — ready to feed ``blas.symm`` or a
+        serving-side whitening cache without densifying."""
+        return TriTiles.from_packed(self._state[name], self._dims[name],
+                                    bm)
 
     def regime(self, name: str, n_tokens: int, P_: int) -> str:
         """Which of the paper's algorithm families is optimal for this
@@ -119,8 +148,8 @@ class GramMonitor:
         """trace / frobenius / effective rank (exp of spectral entropy)
         from the packed EMA (dense rebuild only here, on host demand)."""
         d = self._dims[name]
-        dense = unpack_tril(self._state[name], d, diag=True,
-                            symmetric=True)
+        dense = unpack_tril(self._state[name].astype(jnp.float32), d,
+                            diag=True, symmetric=True)
         evs = jnp.linalg.eigvalsh(dense)
         evs = jnp.maximum(evs, 0.0)
         p = evs / jnp.maximum(jnp.sum(evs), 1e-30)
@@ -138,8 +167,8 @@ def whitening_factor(monitor: GramMonitor, name: str,
                      eps: float = 1e-5) -> jax.Array:
     """G^{-1/2} from the EMA'd packed Gram (K-FAC-style factor)."""
     d = monitor._dims[name]
-    dense = unpack_tril(monitor._state[name], d, diag=True,
-                        symmetric=True)
+    dense = unpack_tril(monitor._state[name].astype(jnp.float32), d,
+                        diag=True, symmetric=True)
     evs, vecs = jnp.linalg.eigh(dense)
     inv_sqrt = jnp.where(evs > eps, jax.lax.rsqrt(evs + eps), 0.0)
     return (vecs * inv_sqrt[None]) @ vecs.T

@@ -310,8 +310,9 @@ def check_blas_grad() -> None:
     cmp(gj, jax.grad(lambda x: jnp.sum(W["tril"] * blas.syrk(x)))(A))
     print("  grad parity under jit")
 
-    # batched operands on a mesh (GSPMD dense fallback route) still
-    # differentiate and match the meshless gradient for every fill
+    # batched operands on a mesh (stacked packed triangles on the 1D
+    # wire) still differentiate and match the meshless gradient for
+    # every fill
     Ab = jnp.asarray(rng.standard_normal((2, 16, 64)), jnp.float32)
     for fill in ("tril", "full", "packed"):
         gm = jax.grad(lambda x: jnp.sum(
@@ -370,11 +371,279 @@ def check_blas_grad() -> None:
     print("OK blas_grad")
 
 
+#: call wrappers re-emit their inner jaxpr's outputs — counting them
+#: would double-count a single materialization
+_WRAPPER_PRIMS = ("custom_vjp", "custom_jvp", "pjit", "closed_call",
+                  "core_call", "remat")
+
+
+def _square_vars_on_wire(jaxpr, n):
+    """All producing eqn outputs shaped (…, n, n) OUTSIDE shard_map
+    bodies.  The mesh packed-wire contract is about the distributed
+    data path: everything that crosses a device boundary or lives at
+    the GSPMD level must be packed (~n²/2 words).  What happens inside
+    a shard_map body is the algorithm's own per-device working set —
+    e.g. the 1D schedules' local Gram / local unpack (Algs 7/9 do
+    exactly that, in the regime where n₁ is the small dimension) — so
+    bodies are excluded; the 2D/3D bodies only ever touch nb×nb
+    blocks anyway."""
+    found = []
+
+    def walk(j):
+        for eqn in j.eqns:
+            name = eqn.primitive.name
+            if "shard_map" in name:
+                continue                      # don't recurse into bodies
+            if not any(w in name for w in _WRAPPER_PRIMS):
+                for v in eqn.outvars:
+                    sh = tuple(getattr(v.aval, "shape", ()))
+                    if len(sh) >= 2 and sh[-1] == n and sh[-2] == n:
+                        found.append((name, sh))
+            for val in eqn.params.values():
+                if hasattr(val, "jaxpr"):
+                    walk(val.jaxpr)
+                elif hasattr(val, "eqns"):
+                    walk(val)
+
+    walk(jaxpr.jaxpr)
+    return found
+
+
+def check_mesh_packed() -> None:
+    """The packed triangle-block mesh wire (12 fake devices): packed ==
+    dense parity for syrk/syr2k/symm on 1d/2d/3d (incl. batched stacks
+    and non-multiple-of-bm n1), jaxpr proof that fill="packed" mesh
+    routes move no n×n dense intermediate on the wire, and grad parity
+    with packed cotangents end to end."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro import blas
+    from repro.core.packing import ShardedTriTiles, TriTiles, tril_size
+
+    rng = np.random.default_rng(21)
+    TOL = dict(rtol=3e-4, atol=3e-4)
+
+    def tril_np(x):
+        return np.tril(np.asarray(x, np.float64)).astype(np.float32)
+
+    def packed_np(x):
+        t = tril_np(x)
+        return t[np.tril_indices(t.shape[0])]
+
+    def sym_np(s):
+        return np.tril(s) + np.tril(s, -1).T
+
+    # ---- 1d (P=4): packed fill end to end --------------------------------
+    mesh4 = _mesh((4,), ("x",))
+    A = jnp.asarray(rng.standard_normal((16, 64)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((16, 64)), jnp.float32)
+    assert blas.plan_route("syrk", 16, 64, mesh=mesh4).path == "1d"
+    np.testing.assert_allclose(
+        np.asarray(blas.syrk(A, fill="packed", mesh=mesh4)),
+        packed_np(np.asarray(A) @ np.asarray(A).T), **TOL)
+    g = np.asarray(A) @ np.asarray(B).T
+    np.testing.assert_allclose(
+        np.asarray(blas.syr2k(A, B, fill="packed", mesh=mesh4)),
+        packed_np(g + g.T), **TOL)
+    S = rng.standard_normal((16, 16)).astype(np.float32)
+    tt = TriTiles.from_tril(jnp.tril(jnp.asarray(S)), 8)
+    np.testing.assert_allclose(
+        np.asarray(blas.symm(tt, B, mesh=mesh4)),
+        sym_np(S) @ np.asarray(B), **TOL)
+    print("  1d packed parity: syrk/syr2k/symm(TriTiles)")
+
+    for op, fn in [("syrk", lambda x: blas.syrk(x, fill="packed",
+                                                mesh=mesh4)),
+                   ("syr2k", lambda x: blas.syr2k(x, x, fill="packed",
+                                                  mesh=mesh4))]:
+        jx = jax.make_jaxpr(fn)(A)
+        sq = _square_vars_on_wire(jx, 16)
+        assert not sq, f"dense on the packed 1d {op} wire: {sq}"
+    jx = jax.make_jaxpr(
+        lambda t, y: blas.symm(TriTiles(t, 16, 8), y, mesh=mesh4))(
+            tt.tiles, B)
+    assert not _square_vars_on_wire(jx, 16)
+    jx = jax.make_jaxpr(jax.grad(
+        lambda x: blas.syrk(x, fill="packed", mesh=mesh4).sum()))(A)
+    assert not _square_vars_on_wire(jx, 16), \
+        "packed 1d syrk backward densified the cotangent on the wire"
+    print("  1d packed wire is dense-free (jaxpr, fwd + bwd)")
+
+    # ---- batched stacks on the 1d wire -----------------------------------
+    Ab = jnp.asarray(rng.standard_normal((3, 16, 64)), jnp.float32)
+    Bb = jnp.asarray(rng.standard_normal((3, 16, 64)), jnp.float32)
+    r = blas.plan_route("syrk", 16, 64, batch=True, mesh=mesh4)
+    assert r.path == "1d", f"batched mesh call must ride the 1D wire: {r}"
+    got = np.asarray(blas.syrk(Ab, mesh=mesh4))
+    want = np.stack([tril_np(np.asarray(x) @ np.asarray(x).T) for x in Ab])
+    np.testing.assert_allclose(got, want, **TOL)
+    got = np.asarray(blas.syr2k(Ab, Bb, fill="packed", mesh=mesh4))
+    for i in range(3):
+        gi = np.asarray(Ab[i]) @ np.asarray(Bb[i]).T
+        np.testing.assert_allclose(got[i], packed_np(gi + gi.T), **TOL)
+    Sb = rng.standard_normal((3, 16, 16)).astype(np.float32)
+    got = np.asarray(blas.symm(jnp.asarray(Sb), Bb, mesh=mesh4))
+    for i in range(3):
+        np.testing.assert_allclose(got[i], sym_np(Sb[i]) @ np.asarray(Bb[i]),
+                                   **TOL)
+    ttb = TriTiles.from_tril(jnp.tril(jnp.asarray(Sb)), 8)
+    got = np.asarray(blas.symm(ttb, Bb, mesh=mesh4))
+    for i in range(3):
+        np.testing.assert_allclose(got[i], sym_np(Sb[i]) @ np.asarray(Bb[i]),
+                                   **TOL)
+    # the stack moves ONE collective pair, not k of them and not a
+    # dense all-reduce: packed words only on the wire
+    jx = jax.make_jaxpr(lambda x: blas.syrk(x, fill="packed",
+                                            mesh=mesh4))(Ab)
+    assert not _square_vars_on_wire(jx, 16)
+    # batched grad parity (fwd route + packed cotangent both stacked)
+    gm = jax.grad(lambda x: jnp.sum(
+        blas.syrk(x, fill="packed", mesh=mesh4) ** 2))(Ab)
+    gd = jax.grad(lambda x: jnp.sum(blas.syrk(x, fill="packed") ** 2))(Ab)
+    np.testing.assert_allclose(np.asarray(gm), np.asarray(gd), rtol=2e-3,
+                               atol=2e-4)
+    print("  batched stacks: parity + dense-free wire + grads (1d)")
+
+    # ---- 2d (P=6, c=2): ShardedTriTiles wire -----------------------------
+    mesh6 = _mesh((6,), ("x",))
+    for n1 in (36, 34):                 # 34: non-multiple of bm and nb
+        A2 = jnp.asarray(rng.standard_normal((n1, 6)), jnp.float32)
+        B2 = jnp.asarray(rng.standard_normal((n1, 6)), jnp.float32)
+        assert blas.plan_route("syrk", n1, 6, mesh=mesh6).path == "2d"
+        np.testing.assert_allclose(
+            np.asarray(blas.syrk(A2, fill="packed", mesh=mesh6)),
+            packed_np(np.asarray(A2) @ np.asarray(A2).T), **TOL)
+        g2 = np.asarray(A2) @ np.asarray(B2).T
+        np.testing.assert_allclose(
+            np.asarray(blas.syr2k(A2, B2, fill="packed", mesh=mesh6)),
+            packed_np(g2 + g2.T), **TOL)
+        S2 = rng.standard_normal((n1, n1)).astype(np.float32)
+        tt2 = TriTiles.from_tril(jnp.tril(jnp.asarray(S2)), 8)
+        assert blas.plan_route("symm", n1, 6, mesh=mesh6).path == "2d"
+        np.testing.assert_allclose(
+            np.asarray(blas.symm(tt2, B2, mesh=mesh6)),
+            sym_np(S2) @ np.asarray(B2), **TOL)
+        jx = jax.make_jaxpr(lambda x: blas.syrk(x, fill="packed",
+                                                mesh=mesh6))(A2)
+        assert not _square_vars_on_wire(jx, n1), \
+            f"2d packed syrk wire densified (n1={n1})"
+        jx = jax.make_jaxpr(
+            lambda t, y: blas.symm(TriTiles(t, n1, 8), y, mesh=mesh6))(
+                tt2.tiles, B2)
+        assert not _square_vars_on_wire(jx, n1)
+        jx = jax.make_jaxpr(jax.grad(
+            lambda x: blas.syrk(x, fill="packed", mesh=mesh6).sum()))(A2)
+        assert not _square_vars_on_wire(jx, n1)
+    print("  2d packed parity + dense-free wire (n1=36 and ragged 34)")
+
+    # backward of a packed 2d syrk runs its symm on the 2d packed wire
+    A2 = jnp.asarray(rng.standard_normal((36, 6)), jnp.float32)
+    with blas.capture_routes() as log:
+        gm = jax.grad(lambda x: jnp.sum(
+            blas.syrk(x, fill="packed", mesh=mesh6)))(A2)
+    assert ("symm", "2d") in [(r.op, r.path) for r in log]
+    gd = jax.grad(lambda x: jnp.sum(blas.syrk(x, fill="packed")))(A2)
+    np.testing.assert_allclose(np.asarray(gm), np.asarray(gd), **TOL)
+    # symm with a TriTiles primal gets dA back as TriTiles via a
+    # packed-fill SYR2K that itself rides the 2d wire
+    S2 = rng.standard_normal((36, 36)).astype(np.float32)
+    tt2 = TriTiles.from_tril(jnp.tril(jnp.asarray(S2)), 8)
+    B2 = jnp.asarray(rng.standard_normal((36, 6)), jnp.float32)
+    with blas.capture_routes() as log:
+        gt = jax.grad(lambda t: jnp.sum(
+            blas.symm(TriTiles(t, 36, 8), B2, mesh=mesh6) ** 2))(tt2.tiles)
+    assert ("syr2k", "2d") in [(r.op, r.path) for r in log]
+    gtd = jax.grad(lambda t: jnp.sum(
+        blas.symm(TriTiles(t, 36, 8), B2) ** 2))(tt2.tiles)
+    np.testing.assert_allclose(np.asarray(gt), np.asarray(gtd), rtol=2e-3,
+                               atol=2e-4)
+    print("  2d grads: packed cotangents stay on the wire")
+
+    # ---- 3d (P=12 = 6 x 2): flat shards -> ShardedTriTiles ---------------
+    mesh12 = _mesh((12,), ("x",))
+    A3 = jnp.asarray(rng.standard_normal((24, 8)), jnp.float32)
+    B3 = jnp.asarray(rng.standard_normal((24, 8)), jnp.float32)
+    assert blas.plan_route("syrk", 24, 8, mesh=mesh12).path == "3d"
+    np.testing.assert_allclose(
+        np.asarray(blas.syrk(A3, fill="packed", mesh=mesh12)),
+        packed_np(np.asarray(A3) @ np.asarray(A3).T), **TOL)
+    g3 = np.asarray(A3) @ np.asarray(B3).T
+    np.testing.assert_allclose(
+        np.asarray(blas.syr2k(A3, B3, fill="packed", mesh=mesh12)),
+        packed_np(g3 + g3.T), **TOL)
+    S3 = rng.standard_normal((24, 24)).astype(np.float32)
+    tt3 = TriTiles.from_tril(jnp.tril(jnp.asarray(S3)), 8)
+    assert blas.plan_route("symm", 24, 8, mesh=mesh12).path == "3d"
+    np.testing.assert_allclose(
+        np.asarray(blas.symm(tt3, B3, mesh=mesh12)),
+        sym_np(S3) @ np.asarray(B3), **TOL)
+    jx = jax.make_jaxpr(lambda x: blas.syrk(x, fill="packed",
+                                            mesh=mesh12))(A3)
+    assert not _square_vars_on_wire(jx, 24)
+    jx = jax.make_jaxpr(
+        lambda t, y: blas.symm(TriTiles(t, 24, 8), y, mesh=mesh12))(
+            tt3.tiles, B3)
+    assert not _square_vars_on_wire(jx, 24)
+    gm = jax.grad(lambda x: jnp.sum(
+        blas.syrk(x, fill="packed", mesh=mesh12)))(A3)
+    gd = jax.grad(lambda x: jnp.sum(blas.syrk(x, fill="packed")))(A3)
+    np.testing.assert_allclose(np.asarray(gm), np.asarray(gd), **TOL)
+    jx = jax.make_jaxpr(jax.grad(
+        lambda x: blas.syrk(x, fill="packed", mesh=mesh12).sum()))(A3)
+    assert not _square_vars_on_wire(jx, 24)
+    # TriTiles symm backward: dA rides a 3d-routed packed syr2k home
+    with blas.capture_routes() as log:
+        gt = jax.grad(lambda t: jnp.sum(
+            blas.symm(TriTiles(t, 24, 8), B3, mesh=mesh12) ** 2))(tt3.tiles)
+    assert ("syr2k", "3d") in [(r.op, r.path) for r in log]
+    gtd = jax.grad(lambda t: jnp.sum(
+        blas.symm(TriTiles(t, 24, 8), B3) ** 2))(tt3.tiles)
+    np.testing.assert_allclose(np.asarray(gt), np.asarray(gtd), rtol=2e-3,
+                               atol=2e-4)
+    print("  3d packed parity + dense-free wire + grads")
+
+    # ---- ShardedTriTiles round-trips against the mesh outputs ------------
+    from repro.blas import meshpath
+    st = meshpath.syrk_2d_sharded(A2, 2, mesh6, "x")
+    assert isinstance(st, ShardedTriTiles) and (st.n, st.c) == (36, 2)
+    np.testing.assert_allclose(
+        np.asarray(st.to_packed()),
+        packed_np(np.asarray(A2) @ np.asarray(A2).T), **TOL)
+    np.testing.assert_allclose(
+        np.asarray(st.to_tritiles(8).to_tril()),
+        tril_np(np.asarray(A2) @ np.asarray(A2).T), **TOL)
+    st3 = meshpath.syrk_3d_sharded(A3, 2, 2, mesh12)
+    np.testing.assert_allclose(
+        np.asarray(st3.to_packed()),
+        packed_np(np.asarray(A3) @ np.asarray(A3).T), **TOL)
+    print("  ShardedTriTiles: mesh outputs round-trip to packed/TriTiles")
+
+    # ---- bf16 packed Gram state on the mesh wire -------------------------
+    from repro.optim.gram import GramMonitor, packed_gram
+    X = jnp.asarray(rng.standard_normal((16, 64)), jnp.float32)
+    gbf = packed_gram(X, mesh4, axis="x", out_dtype=jnp.bfloat16)
+    assert gbf.dtype == jnp.bfloat16 and gbf.shape == (tril_size(16),)
+    gf = np.asarray(packed_gram(X, mesh4, axis="x"))
+    np.testing.assert_allclose(np.asarray(gbf, np.float32), gf, rtol=2e-2,
+                               atol=2e-2)
+    mon = GramMonitor(mesh=mesh4, axis="x", out_dtype=jnp.bfloat16)
+    mon.update("w", X)
+    mon.update("w", X)
+    assert mon._state["w"].dtype == jnp.bfloat16
+    tt_g = mon.tritiles("w", bm=8)
+    assert tt_g.dtype == jnp.bfloat16 and tt_g.n == 16
+    np.testing.assert_allclose(np.asarray(tt_g.to_packed(), np.float32),
+                               gf, rtol=2e-2, atol=2e-2)
+    print("  bf16 packed Gram EMA on the 1d wire (state + TriTiles exit)")
+    print("OK mesh_packed")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite", required=True,
                     choices=["1d", "2d", "3d", "3d-limited", "blas",
-                             "blas_grad"])
+                             "blas_grad", "mesh_packed"])
     ap.add_argument("--P", type=int, default=4)
     ap.add_argument("--c", type=int, default=2)
     ap.add_argument("--p2", type=int, default=2)
@@ -390,6 +659,8 @@ def main():
         check_blas()
     elif args.suite == "blas_grad":
         check_blas_grad()
+    elif args.suite == "mesh_packed":
+        check_mesh_packed()
     else:
         check_3d(args.c, args.p2, args.nsteps)
 
