@@ -94,7 +94,29 @@ def _movement_estimate(op, n1, n2, fill, accumulate):
     }
 
 
-def bench_blas_fwd_bwd(repeats: int = 3, grid: str = "full"):
+def _median_timer(fn, args, repeats: int):
+    """Median wall-clock over ``repeats`` timed reps, after one compile
+    call and one *dedicated warmup rep* per variant.
+
+    min-of-3-with-shared-warmup let several rows report
+    ``fwd_bwd_s < fwd_s`` (the first post-compile call still pays
+    allocator/cache effects and min() then keyed on one lucky rep);
+    median over >=5 warmed reps makes the cross-PR trajectory
+    trustworthy.  Returns the median in seconds."""
+    import statistics
+    import jax
+
+    jax.block_until_ready(fn(*args))          # compile
+    jax.block_until_ready(fn(*args))          # dedicated warmup rep
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(statistics.median(times))
+
+
+def bench_blas_fwd_bwd(repeats: int = 7, grid: str = "full"):
     """Wall-clock of blas forward and value_and_grad over a fixed shape
     grid, plus analytic bytes-moved / peak-live columns; rows land in
     repo-root BENCH_blas.json so the bench trajectory accumulates
@@ -140,20 +162,13 @@ def bench_blas_fwd_bwd(repeats: int = 3, grid: str = "full"):
                 lambda x, y: blas.symm(x, y).sum(), argnums=(0, 1)))
             args = (s, b)
 
-        def timed(fn):
-            jax.block_until_ready(fn(*args))          # compile + warm
-            best = float("inf")
-            for _ in range(repeats):
-                t0 = time.perf_counter()
-                jax.block_until_ready(fn(*args))
-                best = min(best, time.perf_counter() - t0)
-            return best
-
         row = {
             "op": op, "n1": n1, "n2": n2,
             "fill": fill or "n/a", "accumulate": accumulate,
             "backend": jax.default_backend(),
-            "fwd_s": timed(fwd), "fwd_bwd_s": timed(loss),
+            "fwd_s": _median_timer(fwd, args, repeats),
+            "fwd_bwd_s": _median_timer(loss, args, repeats),
+            "reps": repeats, "timer": "median",
         }
         row.update(_movement_estimate(op, n1, n2, fill, accumulate))
         rows.append(row)
@@ -205,7 +220,7 @@ def _mesh_movement_estimate(op, n1, n2, fill, path, P):
     }
 
 
-def bench_blas_mesh(repeats: int = 3, grid: str = "full"):
+def bench_blas_mesh(repeats: int = 7, grid: str = "full"):
     """Wall-clock + wire-traffic rows for the packed mesh routes.
 
     Needs fake (or real) devices: rows whose mesh does not fit the
@@ -257,21 +272,14 @@ def bench_blas_mesh(repeats: int = 3, grid: str = "full"):
             args = (tt.tiles, b)
         planned = blas.plan_route(op, n1, n2, mesh=mesh)
 
-        def timed(fn):
-            jax.block_until_ready(fn(*args))          # compile + warm
-            best = float("inf")
-            for _ in range(repeats):
-                t0 = time.perf_counter()
-                jax.block_until_ready(fn(*args))
-                best = min(best, time.perf_counter() - t0)
-            return best
-
         row = {
             "op": op, "n1": n1, "n2": n2, "fill": fill or "tritiles",
             "devices": need, "route": planned.path,
             "route_expected": path,
             "backend": jax.default_backend(),
-            "fwd_s": timed(fwd), "fwd_bwd_s": timed(loss),
+            "fwd_s": _median_timer(fwd, args, repeats),
+            "fwd_bwd_s": _median_timer(loss, args, repeats),
+            "reps": repeats, "timer": "median",
         }
         row.update(_mesh_movement_estimate(op, n1, n2, fill,
                                            planned.path, need))
@@ -288,6 +296,45 @@ def bench_blas_mesh(repeats: int = 3, grid: str = "full"):
         json.dump(rows, f, indent=1)
     print(f"[blas mesh] {len(rows)} rows ({grid} grid) -> {out}")
     return rows
+
+
+def check_packed_gate(rows, threshold: float = 2.0) -> bool:
+    """The bench-regression gate: at the largest shape(s) where both a
+    packed and a tril row of the same (op, n1, n2, accumulate) exist,
+    packed ``fwd_bwd_s`` must stay within ``threshold``× of tril's.
+
+    Every comparable pair at the maximal n1·n2 is checked and the gate
+    fails on the WORST ratio (a single max-by-area pick let a
+    regression in one op hide behind a healthy tie-mate on the small
+    grid).  This is the regression the slice-granular converters fixed
+    (packed backward was ~30× tril at n=1024 under the element-table
+    converters); the gate keeps it fixed.  Returns True when the gate
+    passes (or no comparable pair exists).  Mesh-row files (no
+    tril/packed pairs) hit the skip path gracefully."""
+    by_key = {(r["op"], r["n1"], r["n2"], r.get("accumulate", False),
+               r["fill"]): r for r in rows}
+    pairs = []
+    for (op, n1, n2, acc, fill), r in by_key.items():
+        if fill != "packed":
+            continue
+        tril = by_key.get((op, n1, n2, acc, "tril"))
+        if tril is not None:
+            pairs.append((n1 * n2, r, tril))
+    if not pairs:
+        print("[gate] no packed/tril row pair to compare — skipping")
+        return True
+    top = max(area for area, _, _ in pairs)
+    ok = True
+    for _, packed, tril in (p for p in pairs if p[0] == top):
+        ratio = packed["fwd_bwd_s"] / tril["fwd_bwd_s"]
+        verdict = "OK" if ratio <= threshold else "FAIL"
+        ok = ok and ratio <= threshold
+        print(f"[gate] {packed['op']}[{packed['n1']}x{packed['n2']}] "
+              f"acc={packed.get('accumulate', False)} packed fwd_bwd "
+              f"{packed['fwd_bwd_s']*1e3:.2f}ms vs tril "
+              f"{tril['fwd_bwd_s']*1e3:.2f}ms: ratio {ratio:.2f} "
+              f"(threshold {threshold}) {verdict}")
+    return ok
 
 
 def main() -> None:
@@ -307,7 +354,23 @@ def main() -> None:
                          "processes: '--mesh off' (no flags) for the "
                          "single-device grid, '--mesh only' (with flags) "
                          "for the mesh rows")
+    ap.add_argument("--gate", action="store_true",
+                    help="bench-regression gate: fail if packed "
+                         "fwd_bwd_s exceeds the threshold x tril at the "
+                         "largest comparable shape of the grid just run")
+    ap.add_argument("--gate-threshold", type=float, default=2.0)
+    ap.add_argument("--check-gate", default=None, metavar="JSON",
+                    help="apply the gate to an existing rows file and "
+                         "exit (no benchmarks are run)")
     args = ap.parse_args()
+    if args.gate and args.mesh == "only":
+        ap.error("--gate needs the single-device grid; it cannot run "
+                 "with --mesh only (use --check-gate on an existing "
+                 "rows file instead)")
+    if args.check_gate:
+        with open(args.check_gate) as f:
+            ok = check_packed_gate(json.load(f), args.gate_threshold)
+        sys.exit(0 if ok else 1)
     chosen = args.only.split(",") if args.only else list(SUITES)
     chosen = [c for c in chosen if c != "blas"]
     if args.mesh == "only":
@@ -317,7 +380,11 @@ def main() -> None:
     failures = 0
     if args.mesh != "only":
         try:
-            bench_blas_fwd_bwd(grid=args.grid)  # feeds the trajectory
+            rows = bench_blas_fwd_bwd(grid=args.grid)  # the trajectory
+            if args.gate and not check_packed_gate(rows,
+                                                   args.gate_threshold):
+                print("[blas fwd+bwd] bench-regression gate FAILED")
+                failures += 1
         except Exception as e:  # noqa: BLE001
             import traceback
             traceback.print_exc()

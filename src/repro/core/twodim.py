@@ -166,6 +166,54 @@ def tb_pack_tables(c: int, n1: int) -> Tuple[np.ndarray, np.ndarray]:
     return kidx, sidx
 
 
+@functools.lru_cache(maxsize=64)
+def tb_block_tables(c: int) -> Tuple[np.ndarray, np.ndarray]:
+    """*Block*-granular (device, slot) ↔ lower-triangle-grid bijection —
+    the slice/tile-granular replacement for per-element
+    :func:`tb_pack_tables` on the ShardedTriTiles converters.
+
+    The c²-block row grid has Tb = c²(c²+1)/2 lower-triangle blocks in
+    the row-major flat order of :func:`~repro.core.packing.
+    tile_tril_coords`; every device k owns T+1 slots (T off-diagonal
+    pairs + one diagonal slot).  Returns
+
+      * ``src`` (Tb,) int32: flat slot index ``k·(T+1)+t`` owning each
+        lower-triangle grid block (a bijection — every block owned
+        exactly once);
+      * ``dst`` (P, T+1) int32: the flat grid-block id held by each
+        device slot, with the sentinel ``Tb`` for the diagonal slot of
+        devices that own no diagonal block (callers append one zero pad
+        block).
+
+    Ownership depends only on c (so the cache is keyed on c alone);
+    cached and read-only.
+    """
+    plan = make_2d_plan(c, 1, 1)
+    T, Pn = plan.T, plan.num_devices
+    nblocks = c * c
+    Tb = nblocks * (nblocks + 1) // 2
+    src = np.full(Tb, -1, dtype=np.int64)
+    dst = np.full((Pn, T + 1), Tb, dtype=np.int64)
+    for k in range(Pn):
+        for t, (a, b) in enumerate(plan.pairs):
+            i, j = int(plan.R[k][a]), int(plan.R[k][b])      # i > j
+            f = i * (i + 1) // 2 + j
+            src[f] = k * (T + 1) + t
+            dst[k, t] = f
+        ds = plan.diag_slot[k]
+        if ds >= 0:
+            d = int(plan.R[k][ds])
+            f = d * (d + 1) // 2 + d
+            src[f] = k * (T + 1) + T
+            dst[k, T] = f
+    assert (src >= 0).all(), "partition must cover the block triangle"
+    src = src.astype(np.int32)
+    dst = dst.astype(np.int32)
+    src.setflags(write=False)
+    dst.setflags(write=False)
+    return src, dst
+
+
 # --------------------------------------------------------------------------
 # the all-to-all row exchange (Alg 10 lines 3–14)
 # --------------------------------------------------------------------------

@@ -28,12 +28,15 @@ def _syr2k_body(ai: jax.Array, bj: jax.Array, bi: jax.Array,
 def syr2k_tiles(a: jax.Array, b: jax.Array, *, bm: int = 128,
                 bk: int = 128, interpret: Optional[bool] = None,
                 c0: Optional[jax.Array] = None, alpha: float = 1.0,
-                beta: float = 0.0, out_dtype=jnp.float32) -> jax.Array:
+                beta: float = 0.0, out_dtype=jnp.float32,
+                diag_scale: float = 1.0) -> jax.Array:
     """A, B (n1, n2) -> packed lower-triangle tiles (T, bm, bm) of
-    ``alpha·(A·Bᵀ + B·Aᵀ) + beta·C0`` in ``out_dtype``."""
+    ``alpha·(A·Bᵀ + B·Aᵀ) + beta·C0`` in ``out_dtype``.  ``diag_scale``
+    scales the matrix diagonal in the fused epilogue (the SYMM-backward
+    halving runs in-kernel instead of as an XLA pass)."""
     ep = trigrid.Epilogue(alpha=alpha, beta=beta,
                           accumulate=c0 is not None and beta != 0.0,
-                          out_dtype=out_dtype)
+                          out_dtype=out_dtype, diag_scale=diag_scale)
     return trigrid.rank_update(_syr2k_body, (a, b, b, a), "ijij",
                                bm=bm, bk=bk, interpret=interpret,
                                epilogue=ep,

@@ -15,9 +15,12 @@ their MXU compute bodies:
   * **the interpret-mode default** (CPU ⇒ interpret);
   * **the fused epilogue**, run inside the kernel at the last
     contraction step: diagonal-tile masking, alpha/beta
-    scale-and-accumulate against an existing packed C, and the
-    out_dtype cast — so no masking, scaling, or conversion happens
-    post-hoc in XLA and the packed (T, bm, bm) tiles in HBM are final.
+    scale-and-accumulate against an existing packed C, the optional
+    matrix-diagonal scale (the packed cotangent algebra's
+    halving/doubling — see ``Epilogue.diag_scale`` and the SYMM body's
+    ``diag_scale`` prologue), and the out_dtype cast — so no masking,
+    scaling, or conversion happens post-hoc in XLA and the packed
+    (T, bm, bm) tiles in HBM are final.
 
 Accumulation always happens in an f32 VMEM scratch tile that stays
 resident across the innermost contraction axis (the paper's
@@ -90,11 +93,19 @@ class Epilogue:
     """What happens to the f32 accumulator at the last contraction step,
     inside the kernel: ``out = mask_diag(alpha·acc + beta·C0)`` cast to
     ``out_dtype``.  ``accumulate=True`` means a packed-tile C0 array
-    rides along as an extra streamed input."""
+    rides along as an extra streamed input.
+
+    ``diag_scale`` scales the *matrix-diagonal* elements (the diagonal
+    of grid-diagonal tiles) in the VMEM scratch before the cast — the
+    fused half of the packed cotangent algebra: a SYMM backward's
+    tril-projected SYR2K needs its diagonal halved
+    (``diag_scale=0.5``), and fusing it here removes the standalone
+    elementwise ``_packed_diag_scale`` pass over the packed output."""
     alpha: float = 1.0
     beta: float = 0.0
     accumulate: bool = False
     out_dtype: object = jnp.float32
+    diag_scale: float = 1.0
 
     def apply(self, acc: jax.Array, c0: Optional[jax.Array],
               is_diag, bm: int) -> jax.Array:
@@ -106,7 +117,11 @@ class Epilogue:
         rows = jax.lax.broadcasted_iota(jnp.int32, (bm, bm), 0)
         cols = jax.lax.broadcasted_iota(jnp.int32, (bm, bm), 1)
         keep = jnp.logical_or(jnp.logical_not(is_diag), rows >= cols)
-        return jnp.where(keep, acc, 0.0).astype(self.out_dtype)
+        acc = jnp.where(keep, acc, 0.0)
+        if self.diag_scale != 1.0:
+            on_diag = jnp.logical_and(is_diag, rows == cols)
+            acc = jnp.where(on_diag, self.diag_scale * acc, acc)
+        return acc.astype(self.out_dtype)
 
 
 # --------------------------------------------------------------------------

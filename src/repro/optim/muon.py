@@ -27,14 +27,13 @@ from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from .. import blas
 from ..compat import shard_map
 from ..core.onedim import syrk_1d_local
-from ..core.packing import tril_size, unpack_tril
+from ..core.packing import pack_tril, tril_size, unpack_tril
 
 # quintic Newton–Schulz coefficients (Jordan et al., Muon)
 NS_COEFFS = (3.4445, -4.7750, 2.0315)
@@ -116,20 +115,16 @@ def _ns_iteration_1d_stacked(x_loc: jax.Array, axis: str, n_shards: int
     one packed reduce-scatter + all-gather covers the whole stack."""
     a, b, c = NS_COEFFS
     k, m, _ = x_loc.shape
-    ii, jj = np.tril_indices(m)
-    L = ii.shape[0]
+    L = tril_size(m)
     g = jnp.einsum("kmi,kni->kmn", x_loc, x_loc)            # local SYRK
-    packed = g[:, ii, jj]                                   # (k, L) packed
+    packed = pack_tril(g)                                   # (k, L) packed
     pad = (-L) % n_shards
     if pad:
         packed = jnp.pad(packed, ((0, 0), (0, pad)))
     shard = jax.lax.psum_scatter(packed, axis, scatter_dimension=1,
                                  tiled=True)
     full = jax.lax.all_gather(shard, axis, axis=1, tiled=True)[:, :L]
-    s = jnp.zeros((k, m, m), x_loc.dtype).at[:, ii, jj].set(full)
-    st = s.swapaxes(-1, -2)
-    diag = jnp.einsum("kii->ki", s)
-    sym = s + st - jnp.einsum("ki,ij->kij", diag, jnp.eye(m, dtype=s.dtype))
+    sym = unpack_tril(full, m, diag=True, symmetric=True)
     y = b * sym + c * jnp.einsum("kmi,kin->kmn", sym, sym)
     return a * x_loc + jnp.einsum("kmi,kin->kmn", y, x_loc)
 

@@ -22,8 +22,10 @@ import numpy as np
 import pytest
 
 from repro import blas
-from repro.core.packing import (TriTiles, packed_to_tiles, tile_tril_coords,
-                                tiles_to_packed, tril_size)
+from repro.core.packing import (ShardedTriTiles, TriTiles, pack_tril,
+                                packed_tile_indices, packed_to_tiles,
+                                tile_tril_coords, tiles_to_packed,
+                                tril_size, unpack_tril)
 from repro.kernels import trigrid
 
 TOL = dict(rtol=1e-4, atol=3e-5)
@@ -392,6 +394,222 @@ def test_packed_tile_index_tables_invert():
     tiles = packed_to_tiles(jnp.asarray(p), 40, 16)
     back = tiles_to_packed(tiles, 40)
     np.testing.assert_array_equal(np.asarray(back), p)
+
+
+# ---------------------------------------------------------------------------
+# slice-granular converters: bit-for-bit vs the element-table reference
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n", [33, 40, 48])     # 33/40: ragged vs bm=16
+def test_pack_unpack_match_element_reference(n):
+    x = np.asarray(_rand((n, n), 30))
+    i, j = np.tril_indices(n)
+    p_ref = x[i, j]
+    np.testing.assert_array_equal(np.asarray(pack_tril(jnp.asarray(x))),
+                                  p_ref)
+    full = np.zeros((n, n), np.float32)
+    full[i, j] = p_ref
+    np.testing.assert_array_equal(
+        np.asarray(unpack_tril(jnp.asarray(p_ref), n, symmetric=False)),
+        full)
+    np.testing.assert_array_equal(
+        np.asarray(unpack_tril(jnp.asarray(p_ref), n, symmetric=True)),
+        full + full.T - np.diag(np.diag(full)))
+
+
+@pytest.mark.parametrize("n", [33, 40, 48])
+def test_tile_converters_match_element_reference(n):
+    """packed<->tiles must agree bit-for-bit with the (kept, reference)
+    per-element tables on ragged n, including zeroed padding slots."""
+    bm = 16
+    p = np.asarray(_rand((tril_size(n),), 31))
+    tidx, ridx, cidx = packed_tile_indices(n, bm)
+    nt = -(-n // bm)
+    ref = np.zeros((nt * (nt + 1) // 2, bm, bm), np.float32)
+    ref[tidx, ridx, cidx] = p
+    got = np.asarray(packed_to_tiles(jnp.asarray(p), n, bm))
+    np.testing.assert_array_equal(got, ref)
+    np.testing.assert_array_equal(
+        np.asarray(tiles_to_packed(jnp.asarray(ref), n)), p)
+
+
+def test_converters_batched_match_element_reference():
+    xb = np.asarray(_rand((2, 3, 40, 40), 32))
+    i, j = np.tril_indices(40)
+    pb = np.asarray(pack_tril(jnp.asarray(xb)))
+    np.testing.assert_array_equal(pb, xb[..., i, j])
+    tb = packed_to_tiles(jnp.asarray(pb), 40, 16)
+    assert tb.shape == (2, 3, 6, 16, 16)
+    np.testing.assert_array_equal(np.asarray(tiles_to_packed(tb, 40)), pb)
+    ub = np.asarray(unpack_tril(jnp.asarray(pb), 40, symmetric=False))
+    want = np.zeros_like(xb)
+    want[..., i, j] = pb
+    np.testing.assert_array_equal(ub, want)
+
+
+@pytest.mark.parametrize("c,n", [(2, 36), (2, 9), (3, 100)])
+def test_sharded_tritiles_matches_element_reference(c, n):
+    """The block-granular ShardedTriTiles converters must reproduce the
+    element-table tb_pack_tables layout exactly (incl. n not a multiple
+    of the block grid and devices that own no diagonal block)."""
+    from repro.core.twodim import tb_flat_words, tb_pack_tables
+    p = np.asarray(_rand((tril_size(n),), 33))
+    st = ShardedTriTiles.from_packed(jnp.asarray(p), n, c)
+    np.testing.assert_array_equal(np.asarray(st.to_packed()), p)
+    kidx, sidx = tb_pack_tables(c, n)
+    Pn, T, nb = c * (c + 1), c * (c - 1) // 2, -(-n // (c * c))
+    flat = np.zeros((Pn, tb_flat_words(c, n)), np.float32)
+    flat[kidx, sidx] = p
+    np.testing.assert_array_equal(
+        np.asarray(st.off), flat[:, :T * nb * nb].reshape(Pn, T, nb, nb))
+    np.testing.assert_array_equal(
+        np.asarray(st.diag), flat[:, T * nb * nb:].reshape(Pn, nb, nb))
+
+
+# ---------------------------------------------------------------------------
+# jaxpr regression: converters and packed backward are slice-granular
+# (no element-granular gather/scatter; tile/row-axis indexing only)
+# ---------------------------------------------------------------------------
+def _indexed_ops(jx):
+    """(primitive, index_rows) for every gather/scatter in the jaxpr
+    tree — ``index_rows`` is the number of independent start positions,
+    i.e. the scatter/gather granularity (an element-granular op has one
+    row per element; slice-granular ops have one per matrix/tile row)."""
+    found = []
+
+    def walk(j):
+        for eqn in j.eqns:
+            nm = eqn.primitive.name
+            if nm == "gather" or nm.startswith("scatter"):
+                idx_shape = tuple(eqn.invars[1].aval.shape)
+                rows = int(np.prod(idx_shape[:-1])) if idx_shape else 1
+                found.append((nm, rows))
+            for val in eqn.params.values():
+                if hasattr(val, "jaxpr"):
+                    walk(val.jaxpr)
+                elif hasattr(val, "eqns"):
+                    walk(val)
+
+    walk(jx.jaxpr)
+    return found
+
+
+def _max_slice_rows(n1, bm=16):
+    """Slice-granular ceiling: one index row per (tile, intra-tile row)
+    — far below the tril_size(n1) element count."""
+    nt = -(-n1 // bm)
+    return max(n1, nt * (nt + 1) // 2 * bm)
+
+
+@pytest.mark.parametrize("n", [40, 48])
+def test_converter_jaxprs_are_slice_granular(n):
+    L = tril_size(n)
+    p = jnp.zeros(L, jnp.float32)
+    x = jnp.zeros((n, n), jnp.float32)
+    cap = _max_slice_rows(n)
+    assert cap < L / 4          # the bound actually separates the two
+    fns = [
+        (lambda v: pack_tril(v), x),
+        (lambda v: unpack_tril(v, n, symmetric=True), p),
+        (lambda v: packed_to_tiles(v, n, 16), p),
+        (lambda v: tiles_to_packed(packed_to_tiles(v, n, 16), n), p),
+        (jax.grad(lambda v: pack_tril(v).sum()), x),
+        (jax.grad(lambda v: unpack_tril(v, n).sum()), p),
+        (jax.grad(lambda v: packed_to_tiles(v, n, 16).sum()), p),
+    ]
+    for fn, arg in fns:
+        ops = _indexed_ops(jax.make_jaxpr(fn)(arg))
+        bad = [(nm, r) for nm, r in ops if r > cap]
+        assert not bad, f"element-granular indexing: {bad}"
+
+
+@pytest.mark.parametrize("route_kw", [{}, PALLAS],
+                         ids=["dense", "pallas"])
+@pytest.mark.parametrize("op", ["syrk", "syr2k"])
+def test_packed_backward_jaxpr_is_scatter_free(op, route_kw):
+    """The PR-5 acceptance: the packed backward trace contains no
+    scatter with O(n²) index rows on ANY route (the dense route's
+    pack/unpack and the Pallas route's tile converters are all
+    slice-granular now)."""
+    n1 = 48
+    a = jnp.zeros((n1, 32), jnp.float32)
+    if op == "syrk":
+        fn = jax.grad(lambda x: blas.syrk(x, fill="packed",
+                                          **route_kw).sum())
+        jx = jax.make_jaxpr(fn)(a)
+    else:
+        fn = jax.grad(lambda x, y: blas.syr2k(x, y, fill="packed",
+                                              **route_kw).sum())
+        jx = jax.make_jaxpr(fn)(a, a)
+    cap = _max_slice_rows(n1)
+    bad = [(nm, r) for nm, r in _indexed_ops(jx)
+           if nm.startswith("scatter") and r > cap]
+    assert not bad, f"element-granular scatter in packed backward: {bad}"
+
+
+def test_symm_tritiles_backward_jaxpr_is_scatter_free():
+    n1 = 48
+    tt = TriTiles.from_packed(jnp.zeros(tril_size(n1), jnp.float32),
+                              n1, 16)
+    b = jnp.zeros((n1, 32), jnp.float32)
+    jx = jax.make_jaxpr(jax.grad(
+        lambda t, y: blas.symm(TriTiles(t, n1, 16), y,
+                               **PALLAS).sum(), argnums=(0, 1)))(
+        tt.tiles, b)
+    cap = _max_slice_rows(n1)
+    bad = [(nm, r) for nm, r in _indexed_ops(jx)
+           if nm.startswith("scatter") and r > cap]
+    assert not bad, f"element-granular scatter in TriTiles symm bwd: {bad}"
+    assert not _square_vars(jx, n1)     # and still no dense intermediate
+
+
+# ---------------------------------------------------------------------------
+# fused cotangent prologue: pallas-route grads == dense-route grads
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n1", [48, 40])
+def test_fused_prologue_syrk_grad_matches_dense_route(n1):
+    a = _rand((n1, 32), 34)
+    gp = jax.grad(lambda x: jnp.sum(jnp.sin(
+        blas.syrk(x, fill="packed", **PALLAS))))(a)
+    gd = jax.grad(lambda x: jnp.sum(jnp.sin(
+        blas.syrk(x, fill="packed"))))(a)
+    np.testing.assert_allclose(np.asarray(gp), np.asarray(gd), **TOL)
+
+
+@pytest.mark.parametrize("n1", [48, 40])
+def test_fused_prologue_syr2k_grad_matches_dense_route(n1):
+    a, b = _rand((n1, 32), 35), _rand((n1, 32), 36)
+    loss = lambda kw: jax.grad(                            # noqa: E731
+        lambda x, y: jnp.sum(jnp.cos(blas.syr2k(x, y, fill="packed",
+                                                **kw))),
+        argnums=(0, 1))(a, b)
+    for g, w in zip(loss(PALLAS), loss({})):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), **TOL)
+
+
+def test_fused_prologue_symm_grad_matches_dense_route(n1=40):
+    """SYMM's dA rides a packed SYR2K whose diagonal halving is the
+    fused kernel epilogue on the Pallas route — grads must match the
+    dense route bit-for-tolerance on both operands."""
+    s, b = _rand((n1, n1), 37), _rand((n1, 24), 38)
+    tt = TriTiles.from_tril(jnp.tril(s), 16)
+
+    def grads(kw):
+        return jax.grad(
+            lambda t, y: jnp.sum(jnp.cos(blas.symm(TriTiles(t, n1, 16), y,
+                                                   **kw))),
+            argnums=(0, 1))(tt.tiles, b)
+
+    for g, w in zip(grads(PALLAS), grads({})):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), **TOL)
+
+
+def test_packed_diag_scale_mask_keeps_cotangent_dtype():
+    from repro.blas.grad import _packed_diag_scale
+    m = _packed_diag_scale(8, 2.0, jnp.bfloat16)
+    assert m.dtype == jnp.dtype(jnp.bfloat16)
+    assert _packed_diag_scale(8, 0.5).dtype == np.float32
+    g = jnp.ones(tril_size(8), jnp.bfloat16)
+    assert (g * jnp.asarray(m)).dtype == jnp.dtype(jnp.bfloat16)
 
 
 # ---------------------------------------------------------------------------
