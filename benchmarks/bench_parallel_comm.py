@@ -30,9 +30,7 @@ from repro.core.lower_bounds import memory_independent_lower_bound
 from repro.core.onedim import syrk_1d, syr2k_1d, symm_1d, pack_for_1d_symm
 from repro.core.twodim import (make_2d_plan, syrk_2d, syr2k_2d, symm_2d,
                                distribute_rows, distribute_sym)
-from repro.core.threedim import (syrk_3d, syr2k_3d, symm_3d,
-                                 distribute_rows_3d, distribute_3d_sym,
-                                 flat_tb_size)
+from repro.core.threedim import syrk_3d, syr2k_3d, symm_3d, flat_tb_size
 
 def wire_words(lowered):
     hlo = lowered.compile().as_text()

@@ -406,7 +406,10 @@ def main() -> None:
         print("=" * 72)
         t0 = time.time()
         try:
-            rows = mod.main()
+            # memdep's M-sweep has its own small/full grid (CI smoke
+            # writes artifacts/, full runs the repo-root trajectory)
+            rows = mod.main(grid=args.grid) if name == "memdep" \
+                else mod.main()
             out = os.path.join(ROOT, "artifacts", f"bench_{name}.json")
             with open(out, "w") as f:
                 json.dump(rows, f, indent=1, default=str)

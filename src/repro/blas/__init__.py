@@ -11,6 +11,7 @@ shapes and GSPMD fallback, triangular flat-grid Pallas kernels on a
 single accelerator, and the paper's 1D/2D/3D shard_map schedules on a
 mesh.  See api.py for the dtype/fill/batching contracts.
 """
+from ..core.dispatch import device_memory_budget
 from ..core.packing import ShardedTriTiles, TriTiles
 from .api import explain, symm, syr2k, syrk
 from .autotune import clear_cache, heuristic_tiles, pick_tiles
@@ -21,7 +22,7 @@ from .routing import (PALLAS_MIN_N1, Route, capture_routes, pinned,
 __all__ = [
     "syrk", "syr2k", "symm", "explain", "TriTiles", "ShardedTriTiles",
     "plan_route", "Route", "PALLAS_MIN_N1",
-    "pinned", "capture_routes",
+    "pinned", "capture_routes", "device_memory_budget",
     "COTANGENT_OPS", "sym_cotangent",
     "pick_tiles", "heuristic_tiles", "clear_cache",
 ]

@@ -51,21 +51,42 @@ from typing import Optional, Tuple, Union
 import jax
 import jax.numpy as jnp
 
-from ..core.packing import (TriTiles, pack_tril, pack_tril_tiles,
-                            packed_to_tiles, pad2d, tiles_to_packed,
-                            tril_size, unpack_tril, unpack_tril_tiles)
+from ..core.packing import (ShardedTriTiles, TriTiles, pack_tril,
+                            pack_tril_tiles, packed_to_tiles, pad2d,
+                            tiles_to_packed, tril_size, unpack_tril,
+                            unpack_tril_tiles)
 from ..kernels.symm import symm_tiles
 from ..kernels.syr2k import syr2k_tiles
 from ..kernels.syrk import syrk_tiles
 from . import grad, meshpath
 from .routing import Route, pinned, plan_route
 
-_FILLS = ("tril", "full", "packed")
+_FILLS = ("tril", "full", "packed", "sharded")
 
 
 def _check_fill(fill: str) -> None:
     if fill not in _FILLS:
         raise ValueError(f"fill must be one of {_FILLS}, got {fill!r}")
+
+
+def _check_sharded_fill(batch: bool, c) -> None:
+    """fill="sharded" returns the mesh-resident ShardedTriTiles layout:
+    no batch stacking and no fused accumulator on that exit."""
+    if batch:
+        raise ValueError('fill="sharded" does not support leading batch '
+                         "dims")
+    if c is not None:
+        raise ValueError('fill="sharded" does not support an accumulator '
+                         "c")
+
+
+def _sharded_grid_c(route) -> int:
+    """Tile grid parameter for a ShardedTriTiles built off-grid (1d /
+    pallas / dense routes): reuse the planned c when it names a real
+    triangle grid, else the smallest one."""
+    if route.choice is not None and route.choice.c >= 2:
+        return route.choice.c
+    return 2
 
 
 def _out(x: jax.Array, out_dtype) -> jax.Array:
@@ -260,11 +281,26 @@ def _apply_batched(fn, *arrays, trailing=None):
 # --------------------------------------------------------------------------
 # per-route executors (primal bodies; grad.py wraps these in custom_vjp)
 # --------------------------------------------------------------------------
+def _scale_sharded(st: ShardedTriTiles, alpha: float) -> ShardedTriTiles:
+    if alpha == 1.0:
+        return st
+    return ShardedTriTiles(alpha * st.off, alpha * st.diag, st.n, st.c)
+
+
 def _execute_syrk(a32: jax.Array, c32: Optional[jax.Array], *, fill: str,
                   alpha: float, beta: float, route: Route, mesh,
                   interpret: Optional[bool],
                   out_dtype=None) -> jax.Array:
     n1 = a32.shape[-2]
+    grid_paths = ("2d", "3d", "3d-limited")
+    if fill == "sharded" and route.path not in grid_paths:
+        # off-grid routes produce the packed triangle; one block-granular
+        # scatter puts it into the mesh-resident layout
+        packed = _execute_syrk(a32, None, fill="packed", alpha=alpha,
+                               beta=0.0, route=route, mesh=mesh,
+                               interpret=interpret, out_dtype=out_dtype)
+        return ShardedTriTiles.from_packed(packed, n1,
+                                           _sharded_grid_c(route))
     if route.path == "1d":
         if a32.ndim > 2:
             af, lead = _flatten_lead(a32, 2)
@@ -274,17 +310,21 @@ def _execute_syrk(a32: jax.Array, c32: Optional[jax.Array], *, fill: str,
             packed = meshpath.syrk_1d_packed(a32, mesh, route.axis)
         base = _packed_to_fill(packed, n1, fill)
         return _combine_fill(base, c32, alpha, beta, fill)
-    if route.path == "2d":
-        packed = meshpath.syrk_2d_sharded(a32, route.choice.c, mesh,
-                                          route.axis).to_packed()
-        return _combine_fill(_packed_to_fill(packed, n1, fill), c32, alpha,
-                             beta, fill)
-    if route.path == "3d":
-        packed = meshpath.syrk_3d_sharded(a32, route.choice.c,
-                                          route.choice.p2,
-                                          mesh).to_packed()
-        return _combine_fill(_packed_to_fill(packed, n1, fill), c32, alpha,
-                             beta, fill)
+    if route.path in grid_paths:
+        if route.path == "2d":
+            st = meshpath.syrk_2d_sharded(a32, route.choice.c, mesh,
+                                          route.axis)
+        elif route.path == "3d":
+            st = meshpath.syrk_3d_sharded(a32, route.choice.c,
+                                          route.choice.p2, mesh)
+        else:
+            st = meshpath.syrk_3d_limited_sharded(a32, route.choice.c,
+                                                  route.choice.p2,
+                                                  route.choice.b, mesh)
+        if fill == "sharded":
+            return _scale_sharded(st, alpha)
+        return _combine_fill(_packed_to_fill(st.to_packed(), n1, fill),
+                             c32, alpha, beta, fill)
     if route.path == "pallas":
         fn = functools.partial(_syrk_pallas, fill=fill, tiles=route.tiles,
                                interpret=interpret, alpha=alpha, beta=beta,
@@ -306,6 +346,14 @@ def _execute_syr2k(a32: jax.Array, b32: jax.Array,
     # fallback on every other route
     post = functools.partial(grad.scale_matrix_diag, fill=fill, n1=n1,
                              scale=diag_scale)
+    grid_paths = ("2d", "3d", "3d-limited")
+    if fill == "sharded" and route.path not in grid_paths:
+        packed = _execute_syr2k(a32, b32, None, fill="packed", alpha=alpha,
+                                beta=0.0, route=route, mesh=mesh,
+                                interpret=interpret, out_dtype=out_dtype,
+                                diag_scale=diag_scale)
+        return ShardedTriTiles.from_packed(packed, n1,
+                                           _sharded_grid_c(route))
     if route.path == "1d":
         if a32.ndim > 2:
             af, lead = _flatten_lead(a32, 2)
@@ -317,16 +365,26 @@ def _execute_syr2k(a32: jax.Array, b32: jax.Array,
             packed = meshpath.syr2k_1d_packed(a32, b32, mesh, route.axis)
         base = _packed_to_fill(packed, n1, fill)
         return post(_combine_fill(base, c32, alpha, beta, fill))
-    if route.path == "2d":
-        packed = meshpath.syr2k_2d_sharded(a32, b32, route.choice.c, mesh,
-                                           route.axis).to_packed()
-        return post(_combine_fill(_packed_to_fill(packed, n1, fill), c32,
-                                  alpha, beta, fill))
-    if route.path == "3d":
-        packed = meshpath.syr2k_3d_sharded(a32, b32, route.choice.c,
-                                           route.choice.p2,
-                                           mesh).to_packed()
-        return post(_combine_fill(_packed_to_fill(packed, n1, fill), c32,
+    if route.path in grid_paths:
+        if route.path == "2d":
+            st = meshpath.syr2k_2d_sharded(a32, b32, route.choice.c, mesh,
+                                           route.axis)
+        elif route.path == "3d":
+            st = meshpath.syr2k_3d_sharded(a32, b32, route.choice.c,
+                                           route.choice.p2, mesh)
+        else:
+            st = meshpath.syr2k_3d_limited_sharded(a32, b32,
+                                                   route.choice.c,
+                                                   route.choice.p2,
+                                                   route.choice.b, mesh)
+        if fill == "sharded":
+            if diag_scale != 1.0:
+                p = grad.scale_matrix_diag(st.to_packed(), "packed", n1,
+                                           diag_scale)
+                st = ShardedTriTiles.from_packed(p, n1, st.c)
+            return _scale_sharded(st, alpha)
+        return post(_combine_fill(_packed_to_fill(st.to_packed(), n1,
+                                                  fill), c32,
                                   alpha, beta, fill))
     if route.path == "pallas":
         fn = functools.partial(_syr2k_pallas, fill=fill, tiles=route.tiles,
@@ -341,9 +399,15 @@ def _execute_syr2k(a32: jax.Array, b32: jax.Array,
                               beta, fill))
 
 
-def _execute_symm(a32: Union[jax.Array, TriTiles], b32: jax.Array, *,
+def _execute_symm(a32: Union[jax.Array, TriTiles, ShardedTriTiles],
+                  b32: jax.Array, *,
                   route: Route, mesh, interpret: Optional[bool],
                   out_dtype=None, diag_scale: float = 1.0) -> jax.Array:
+    if isinstance(a32, ShardedTriTiles):
+        return _execute_symm_sharded(a32, b32, route=route, mesh=mesh,
+                                     interpret=interpret,
+                                     out_dtype=out_dtype,
+                                     diag_scale=diag_scale)
     if isinstance(a32, TriTiles):
         return _execute_symm_tiles(a32, b32, route=route, mesh=mesh,
                                    interpret=interpret,
@@ -369,6 +433,10 @@ def _execute_symm(a32: Union[jax.Array, TriTiles], b32: jax.Array, *,
     if route.path == "3d":
         return meshpath.symm_3d_dense(a32, b32, route.choice.c,
                                       route.choice.p2, mesh)
+    if route.path == "3d-limited":
+        return meshpath.symm_3d_limited_dense(a32, b32, route.choice.c,
+                                              route.choice.p2,
+                                              route.choice.b, mesh)
     if route.path == "pallas":
         fn = functools.partial(_symm_pallas, tiles=route.tiles,
                                interpret=interpret,
@@ -411,6 +479,11 @@ def _execute_symm_tiles(a: TriTiles, b32: jax.Array, *, route: Route,
         return meshpath.symm_3d_packed_a(scaled_packed(), b32,
                                          route.choice.c, route.choice.p2,
                                          mesh)
+    if route.path == "3d-limited":
+        return meshpath.symm_3d_limited_packed_a(scaled_packed(), b32,
+                                                 route.choice.c,
+                                                 route.choice.p2,
+                                                 route.choice.b, mesh)
     if route.path == "pallas":
         bm = a.bm                      # the layout fixes the row tile
         bn = route.tiles[1]
@@ -422,6 +495,46 @@ def _execute_symm_tiles(a: TriTiles, b32: jax.Array, *, route: Route,
     _warn_densify("symm", route.path)
     return grad.scale_matrix_diag(a.to_full(), "full", n1,
                                   diag_scale) @ b32
+
+
+def _execute_symm_sharded(st: ShardedTriTiles, b32: jax.Array, *,
+                          route: Route, mesh, interpret: Optional[bool],
+                          out_dtype=None, diag_scale: float = 1.0
+                          ) -> jax.Array:
+    """SYMM whose symmetric operand is already mesh-resident as
+    ShardedTriTiles: the grid routes consume the shards directly (no
+    distribute step for A), repacking only when the planned grid's c
+    differs from the layout's; everything else goes through the packed
+    triangle.  The limited route streams B/C in ``route.choice.b``-column
+    chunks against the resident shards — exactly the working set Alg 18
+    budgets."""
+    n1 = st.n
+    if diag_scale != 1.0:
+        p = grad.scale_matrix_diag(st.to_packed(), "packed", n1,
+                                   diag_scale)
+        st = ShardedTriTiles.from_packed(p, n1, st.c)
+    grid_paths = ("2d", "3d", "3d-limited")
+    if route.path in grid_paths and st.c != route.choice.c:
+        st = ShardedTriTiles.from_packed(st.to_packed(), n1,
+                                         route.choice.c)
+    if route.path == "1d":
+        return meshpath.symm_1d_packed_a(st.to_packed(), b32, n1, mesh,
+                                         route.axis)
+    if route.path == "2d":
+        return meshpath.symm_2d_sharded_a(st, b32, mesh, route.axis)
+    if route.path == "3d":
+        return meshpath.symm_3d_sharded_a(st, b32, route.choice.p2, mesh)
+    if route.path == "3d-limited":
+        return meshpath.symm_3d_limited_sharded_a(st, b32,
+                                                  route.choice.p2,
+                                                  route.choice.b, mesh)
+    if route.path == "pallas":
+        bm = route.tiles[0] if route.tiles else 128
+        return _execute_symm_tiles(st.to_tritiles(bm), b32, route=route,
+                                   mesh=mesh, interpret=interpret,
+                                   out_dtype=out_dtype)
+    _warn_densify("symm", route.path)
+    return st.to_full() @ b32
 
 
 # --------------------------------------------------------------------------
@@ -449,28 +562,36 @@ def _check_c(c, fill: str, n1: int, lead: Tuple[int, ...]) -> None:
 def syrk(a, *, out_dtype=None, fill: str = "tril", mesh=None,
          axis: Optional[str] = None, tile=None,
          interpret: Optional[bool] = None, c=None, alpha: float = 1.0,
-         beta: Optional[float] = None) -> jax.Array:
+         beta: Optional[float] = None, M="auto") -> jax.Array:
     """C = alpha·A·Aᵀ + beta·C₀ for A (..., n1, n2), routed per regime.
 
-    ``fill``: "tril" (default), "full", or "packed".  Accumulates in
-    f32; ``out_dtype=None`` returns f32.  ``c`` is an optional
-    accumulator in the *same fill format* as the output (only its lower
-    triangle is read); ``beta`` defaults to 1.0 when ``c`` is given —
-    chunked Gram updates are ``g = syrk(x_chunk, fill="packed", c=g)``.
-    On the Pallas route the epilogue (diag mask, scale-accumulate,
-    out_dtype) runs inside the kernel.  Reverse-differentiable on every
-    route: the VJP is a SYMM executed through the same router
-    (see :mod:`repro.blas.grad`).
+    ``fill``: "tril" (default), "full", "packed", or "sharded" — the
+    last returns the mesh-resident
+    :class:`~repro.core.packing.ShardedTriTiles` layout (no gather at
+    all; feed it back into :func:`symm` to stay on the wire).
+    Accumulates in f32; ``out_dtype=None`` returns f32.  ``c`` is an
+    optional accumulator in the *same fill format* as the output (only
+    its lower triangle is read); ``beta`` defaults to 1.0 when ``c`` is
+    given — chunked Gram updates are
+    ``g = syrk(x_chunk, fill="packed", c=g)``.  On the Pallas route the
+    epilogue (diag mask, scale-accumulate, out_dtype) runs inside the
+    kernel.  ``M`` is the per-device memory budget in f32 words for the
+    §IX memory-dependent regime ("auto": device-HBM probe /
+    ``REPRO_BLAS_MEMORY_WORDS`` env; None disables).
+    Reverse-differentiable on every route: the VJP is a SYMM executed
+    through the same router (see :mod:`repro.blas.grad`).
     """
     _check_fill(fill)
     a = jnp.asarray(a)
     n1, n2 = a.shape[-2:]
+    if fill == "sharded":
+        _check_sharded_fill(a.ndim > 2, c)
     beta = _resolve_beta(c, beta)
     c = None if c is None else jnp.asarray(c)
     _check_c(c, fill, n1, a.shape[:-2])
     route = plan_route("syrk", n1, n2, dtype=a.dtype, batch=a.ndim > 2,
                        mesh=mesh, axis=axis, tile=tile, interpret=interpret,
-                       fill=fill, accumulate=c is not None)
+                       fill=fill, accumulate=c is not None, M=M)
     a32 = a.astype(jnp.float32)
     c32 = None if c is None else c.astype(jnp.float32)
     return _out(grad.syrk_call(a32, c32, fill=fill, alpha=alpha, beta=beta,
@@ -481,10 +602,11 @@ def syrk(a, *, out_dtype=None, fill: str = "tril", mesh=None,
 def syr2k(a, b, *, out_dtype=None, fill: str = "tril", mesh=None,
           axis: Optional[str] = None, tile=None,
           interpret: Optional[bool] = None, c=None, alpha: float = 1.0,
-          beta: Optional[float] = None,
+          beta: Optional[float] = None, M="auto",
           _diag_scale: float = 1.0) -> jax.Array:
     """C = alpha·(A·Bᵀ + B·Aᵀ) + beta·C₀ for A, B (..., n1, n2), routed
-    per regime.  Accumulator contract as :func:`syrk`.
+    per regime.  Accumulator / ``fill`` / ``M`` contract as
+    :func:`syrk`.
 
     Reverse-differentiable on every route: the VJP is two SYMMs through
     the same router (see :mod:`repro.blas.grad`).
@@ -502,12 +624,14 @@ def syr2k(a, b, *, out_dtype=None, fill: str = "tril", mesh=None,
         raise ValueError("_diag_scale is incompatible with an "
                          "accumulator c")
     n1, n2 = a.shape[-2:]
+    if fill == "sharded":
+        _check_sharded_fill(a.ndim > 2, c)
     beta = _resolve_beta(c, beta)
     c = None if c is None else jnp.asarray(c)
     _check_c(c, fill, n1, a.shape[:-2])
     route = plan_route("syr2k", n1, n2, dtype=a.dtype, batch=a.ndim > 2,
                        mesh=mesh, axis=axis, tile=tile, interpret=interpret,
-                       fill=fill, accumulate=c is not None)
+                       fill=fill, accumulate=c is not None, M=M)
     a32, b32 = a.astype(jnp.float32), b.astype(jnp.float32)
     c32 = None if c is None else c.astype(jnp.float32)
     return _out(grad.syr2k_call(a32, b32, c32, fill=fill, alpha=alpha,
@@ -518,21 +642,26 @@ def syr2k(a, b, *, out_dtype=None, fill: str = "tril", mesh=None,
 
 def symm(a_sym, b, *, out_dtype=None, mesh=None,
          axis: Optional[str] = None, tile=None,
-         interpret: Optional[bool] = None,
+         interpret: Optional[bool] = None, M="auto",
          _diag_scale: float = 1.0) -> jax.Array:
     """C = sym(A)·B for tril-valid A (..., n1, n1) and B (..., n1, n2).
 
     ``a_sym`` may be a dense array — only its lower triangle is read
-    (the upper half may hold garbage) — or a pre-packed
+    (the upper half may hold garbage) — a pre-packed
     :class:`~repro.core.packing.TriTiles`, in which case the packed
     layout feeds the Pallas kernel or the packed mesh wire directly
     (1d all-gather, 2d/3d extended triangle-block scatter, stacked 1d
-    when batched) and the symmetric matrix is never densified beyond
-    each path's working set.
+    when batched), or a mesh-resident
+    :class:`~repro.core.packing.ShardedTriTiles` (e.g. the
+    ``fill="sharded"`` output of :func:`syrk`), which the grid routes
+    consume without any distribute step for A — the symmetric matrix
+    is never densified beyond each path's working set.
+    ``M`` is the per-device memory budget in f32 words for the §IX
+    memory-dependent regime (contract as :func:`syrk`).
     Reverse-differentiable on every route: dB is a SYMM and dA a
     tril-projected SYR2K through the same router (see
     :mod:`repro.blas.grad`); the dA cotangent is zero on the unread
-    upper triangle (and arrives as TriTiles when A did).
+    upper triangle (and arrives as TriTiles/ShardedTriTiles when A did).
 
     ``_diag_scale`` (internal, the fused cotangent prologue) computes
     C = sym_s(A)·B with the matrix diagonal of sym(A) scaled by s —
@@ -541,13 +670,21 @@ def symm(a_sym, b, *, out_dtype=None, mesh=None,
     """
     b = jnp.asarray(b)
     n1, n2 = b.shape[-2:]
-    if isinstance(a_sym, TriTiles):
+    if isinstance(a_sym, ShardedTriTiles):
+        if a_sym.n != n1 or b.ndim > 2:
+            raise ValueError(f"symm shapes: ShardedTriTiles(n={a_sym.n}) "
+                             f"vs b {b.shape} (no batch dims)")
+        route = plan_route("symm", n1, n2, dtype=b.dtype, batch=False,
+                           mesh=mesh, axis=axis, tile=tile,
+                           interpret=interpret, fill="sharded", M=M)
+        a32 = a_sym.astype(jnp.float32)
+    elif isinstance(a_sym, TriTiles):
         if a_sym.n != n1 or a_sym.batch_shape != b.shape[:-2]:
             raise ValueError(f"symm shapes: TriTiles(n={a_sym.n}, "
                              f"batch={a_sym.batch_shape}) vs b {b.shape}")
         route = plan_route("symm", n1, n2, dtype=b.dtype, batch=b.ndim > 2,
                            mesh=mesh, axis=axis, tile=tile,
-                           interpret=interpret, fill="tritiles")
+                           interpret=interpret, fill="tritiles", M=M)
         a32 = a_sym.astype(jnp.float32)
     else:
         a_sym = jnp.asarray(a_sym)
@@ -555,7 +692,7 @@ def symm(a_sym, b, *, out_dtype=None, mesh=None,
             raise ValueError(f"symm shapes: a {a_sym.shape} vs b {b.shape}")
         route = plan_route("symm", n1, n2, dtype=b.dtype, batch=b.ndim > 2,
                            mesh=mesh, axis=axis, tile=tile,
-                           interpret=interpret)
+                           interpret=interpret, M=M)
         a32 = a_sym.astype(jnp.float32)
     b32 = b.astype(jnp.float32)
     return _out(grad.symm_call(a32, b32, route=route, mesh=mesh,
@@ -564,14 +701,19 @@ def symm(a_sym, b, *, out_dtype=None, mesh=None,
 
 
 def explain(op: str, n1: int, n2: int, *, dtype=jnp.float32, mesh=None,
-            axis: Optional[str] = None, grad: bool = False) -> str:
+            axis: Optional[str] = None, grad: bool = False,
+            M="auto") -> str:
     """Human-readable routing decision for an (op, shape, mesh) triple.
 
-    With ``grad=True``, also shows one line per backward-pass op — the
-    route each cotangent takes when ``jax.grad`` flows through the call
-    (planned under the forward Route pin, exactly as the VJP does)."""
+    ``M`` is the per-device memory budget in f32 words (contract as
+    :func:`syrk`) — pass a small value to see where the §IX
+    memory-dependent "3d-limited" route takes over, with its chunk and
+    predicted word count.  With ``grad=True``, also shows one line per
+    backward-pass op — the route each cotangent takes when ``jax.grad``
+    flows through the call (planned under the forward Route pin, exactly
+    as the VJP does, including the forward's resolved budget)."""
     from .grad import COTANGENT_OPS
-    r = plan_route(op, n1, n2, dtype=dtype, mesh=mesh, axis=axis)
+    r = plan_route(op, n1, n2, dtype=dtype, mesh=mesh, axis=axis, M=M)
     if not grad:
         return r.describe()
     lines = [r.describe()]

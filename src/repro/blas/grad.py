@@ -62,7 +62,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.packing import TriTiles, tril_size, unpack_tril
+from ..core.packing import (ShardedTriTiles, TriTiles, tril_size,
+                            unpack_tril)
 from . import routing
 
 #: backward ops per forward op: (cotangent name, blas op that computes it)
@@ -180,6 +181,10 @@ def _packed_mesh_symm(g_packed: jax.Array, other: jax.Array, n1: int,
     if br.path == "3d" and other.ndim == 2:
         return meshpath.symm_3d_packed_a(lp, other, br.choice.c,
                                          br.choice.p2, mesh)
+    if br.path == "3d-limited" and other.ndim == 2:
+        return meshpath.symm_3d_limited_packed_a(lp, other, br.choice.c,
+                                                 br.choice.p2,
+                                                 br.choice.b, mesh)
     return None
 
 
@@ -198,6 +203,10 @@ def _syrk_bwd(g: jax.Array, a: jax.Array, *, fill: str, alpha: float,
               route: routing.Route, mesh, interpret) -> jax.Array:
     from . import api
     n1 = a.shape[-2]
+    if isinstance(g, ShardedTriTiles):
+        # a "sharded" primal's cotangent arrives as the same pytree; its
+        # packed words flow onto the packed mesh wire like a packed fill
+        g, fill = g.astype(jnp.float32).to_packed(), "packed"
     g = g.astype(jnp.float32)
     with routing.pinned(route):
         if fill == "packed" and mesh is not None:
@@ -218,6 +227,8 @@ def _syr2k_bwd(g: jax.Array, a: jax.Array, b: jax.Array, *, fill: str,
                diag_scale: float = 1.0):
     from . import api
     n1 = a.shape[-2]
+    if isinstance(g, ShardedTriTiles):
+        g, fill = g.astype(jnp.float32).to_packed(), "packed"
     g = g.astype(jnp.float32)
     # VJP of an output-diag-scaled rank update: scale the cotangent
     g = scale_matrix_diag(g, fill, n1, diag_scale)
@@ -250,6 +261,12 @@ def _symm_bwd(g: jax.Array, a, b: jax.Array, *,
         # diagonal is exposed once (vs twice for off-diag mirror pairs)
         # — the halving (×diag_scale/2) is fused into the SYR2K kernel
         # epilogue on the Pallas route, elementwise elsewhere
+        if isinstance(a, ShardedTriTiles):
+            # dA stays on the mesh: tril-projected SYR2K in packed fill,
+            # scattered back into the mesh-resident shard layout
+            dp = api.syr2k(g, b, fill="packed",
+                           _diag_scale=diag_scale / 2, **kw)
+            return ShardedTriTiles.from_packed(dp, a.n, a.c), db
         if isinstance(a, TriTiles):
             # dA stays packed: tril-projected SYR2K in packed fill,
             # gathered back into the TriTiles layout

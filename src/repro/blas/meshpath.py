@@ -45,7 +45,8 @@ from ..core.packing import (ShardedTriTiles, pack_tril, tril_size,
                             unpack_tril)
 from ..core.twodim import (TwoDPlan, make_2d_plan, symm_2d, syr2k_2d,
                            syrk_2d, tb_flat_words)
-from ..core.threedim import symm_3d, syr2k_3d, syrk_3d
+from ..core.threedim import (symm_3d, symm_3d_limited, syr2k_3d,
+                             syr2k_3d_limited, syrk_3d, syrk_3d_limited)
 
 TB_AXIS, REP_AXIS = "blas_p1", "blas_p2"
 
@@ -276,6 +277,17 @@ def syr2k_2d_sharded(a: jax.Array, b: jax.Array, c: int, mesh: Mesh,
     return ShardedTriTiles(off, diag, n1, c)
 
 
+def symm_2d_sharded_a(st: ShardedTriTiles, b: jax.Array, mesh: Mesh,
+                      axis: str) -> jax.Array:
+    """SYMM whose symmetric operand is already on the mesh as
+    ShardedTriTiles — no distribute step for A at all."""
+    n1, n2 = st.n, b.shape[1]
+    plan = make_2d_plan(st.c, n1, n2)
+    c_dist = symm_2d(st.off, st.diag, distribute_rows_jnp(b, plan), plan,
+                     mesh, axis)
+    return collect_rows_jnp(c_dist, plan)
+
+
 def symm_2d_packed_a(a_packed: jax.Array, b: jax.Array, c: int, mesh: Mesh,
                      axis: str) -> jax.Array:
     """f32 packed tril (tril_size(n1),) × (n1, n2) -> (n1, n2).
@@ -284,12 +296,9 @@ def symm_2d_packed_a(a_packed: jax.Array, b: jax.Array, c: int, mesh: Mesh,
     straight into the extended triangle-block shards (a pure
     index-table scatter — the distribute_sym step without the dense
     (n1_pad, n1_pad) staging buffer)."""
-    n1, n2 = b.shape
-    plan = make_2d_plan(c, n1, n2)
+    n1 = b.shape[0]
     st = ShardedTriTiles.from_packed(a_packed, n1, c)
-    c_dist = symm_2d(st.off, st.diag, distribute_rows_jnp(b, plan), plan,
-                     mesh, axis)
-    return collect_rows_jnp(c_dist, plan)
+    return symm_2d_sharded_a(st, b, mesh, axis)
 
 
 def syrk_2d_dense(a: jax.Array, c: int, mesh: Mesh, axis: str) -> jax.Array:
@@ -338,18 +347,25 @@ def syr2k_3d_sharded(a: jax.Array, b: jax.Array, c: int, p2: int,
     return _sharded_from_flat(flat, plan, n1, c)
 
 
-def symm_3d_packed_a(a_packed: jax.Array, b: jax.Array, c: int, p2: int,
-                     mesh: Mesh) -> jax.Array:
-    """f32 packed tril × (n1, n2) -> (n1, n2): packed scatter into the
-    extended triangle blocks, shard-split over the replication axis."""
-    n1, n2 = b.shape
+def symm_3d_sharded_a(st: ShardedTriTiles, b: jax.Array, p2: int,
+                      mesh: Mesh) -> jax.Array:
+    """3D SYMM with the symmetric operand already in ShardedTriTiles."""
+    n1, n2 = st.n, b.shape[1]
+    c = st.c
     plan = make_2d_plan(c, n1, n2 // p2)
     mesh3 = _mesh_3d(mesh, c * (c + 1), p2)
-    st = ShardedTriTiles.from_packed(a_packed, n1, c)
     c_dist = symm_3d(_flat_from_sharded(st, p2),
                      distribute_rows_3d_jnp(b, plan, p2), plan, mesh3,
                      TB_AXIS, REP_AXIS)
     return collect_rows_3d_jnp(c_dist, plan, p2)
+
+
+def symm_3d_packed_a(a_packed: jax.Array, b: jax.Array, c: int, p2: int,
+                     mesh: Mesh) -> jax.Array:
+    """f32 packed tril × (n1, n2) -> (n1, n2): packed scatter into the
+    extended triangle blocks, shard-split over the replication axis."""
+    st = ShardedTriTiles.from_packed(a_packed, b.shape[0], c)
+    return symm_3d_sharded_a(st, b, p2, mesh)
 
 
 def syrk_3d_dense(a: jax.Array, c: int, p2: int, mesh: Mesh) -> jax.Array:
@@ -364,3 +380,109 @@ def syr2k_3d_dense(a: jax.Array, b: jax.Array, c: int, p2: int, mesh: Mesh
 def symm_3d_dense(a_sym: jax.Array, b: jax.Array, c: int, p2: int,
                   mesh: Mesh) -> jax.Array:
     return symm_3d_packed_a(pack_tril(jnp.tril(a_sym)), b, c, p2, mesh)
+
+
+# --------------------------------------------------------------------------
+# 3D limited-memory paths (Algs 16–18, §IX): streamed b-column chunks
+# --------------------------------------------------------------------------
+def _limited_steps(n2: int, p2: int, b: int):
+    """Clamp the chunk to the per-slice column count and return
+    (b, nsteps) with nsteps·b >= n2/p2 (the tail chunk is zero-padded —
+    padded columns add nothing to a rank update and padded SYMM output
+    columns are trimmed at collect)."""
+    n2s = max(n2 // p2, 1)
+    b = max(min(b, n2s), 1)
+    return b, -(-n2s // b)
+
+
+def _chunk_cols_3d_jnp(x: jax.Array, plan_b: TwoDPlan, p2: int,
+                       nsteps: int) -> jax.Array:
+    """(n1, n2) -> (p1, p2, nsteps, c, nb, bw): column slices over the
+    replication axis, b-column chunks within each, 2D row-share layout
+    per chunk (n2 % p2 == 0 required)."""
+    n1, n2 = x.shape
+    b = plan_b.n2
+    n2s = n2 // p2
+    xs = x.reshape(n1, p2, n2s).transpose(1, 0, 2)        # (p2, n1, n2s)
+    xs = jnp.pad(xs, ((0, 0), (0, 0), (0, nsteps * b - n2s)))
+    xc = xs.reshape(p2, n1, nsteps, b).transpose(0, 2, 1, 3)
+    dist = jax.vmap(jax.vmap(
+        lambda s: distribute_rows_jnp(s, plan_b)))(xc)
+    return dist.transpose(2, 0, 1, 3, 4, 5)               # (p1, p2, ...)
+
+
+def _collect_cols_3d_jnp(c_dist: jax.Array, plan_b: TwoDPlan, p2: int,
+                         n2: int) -> jax.Array:
+    """Inverse of :func:`_chunk_cols_3d_jnp` for the SYMM output
+    (drops the zero-padded tail columns)."""
+    per = jax.vmap(jax.vmap(
+        lambda d: collect_rows_jnp(d, plan_b)))(
+        c_dist.transpose(1, 2, 0, 3, 4, 5))               # (p2, ns, n1, b)
+    n1 = per.shape[-2]
+    n2s = n2 // p2
+    per = per.transpose(0, 2, 1, 3).reshape(p2, n1, -1)[:, :, :n2s]
+    return per.transpose(1, 0, 2).reshape(n1, n2)
+
+
+def syrk_3d_limited_sharded(a: jax.Array, c: int, p2: int, chunk: int,
+                            mesh: Mesh) -> ShardedTriTiles:
+    """Alg 16 on the packed wire: stream ``chunk``-column panels through
+    the scan, reduce-scatter the accumulated extended triangle blocks
+    once.  Per-device peak-live stays O(chunk working set + owned
+    triangle block), not O(n₂/p₂)."""
+    n1, n2 = a.shape
+    b, nsteps = _limited_steps(n2, p2, chunk)
+    plan_b = make_2d_plan(c, n1, b)
+    mesh3 = _mesh_3d(mesh, c * (c + 1), p2)
+    flat = syrk_3d_limited(_chunk_cols_3d_jnp(a, plan_b, p2, nsteps),
+                           plan_b, mesh3, TB_AXIS, REP_AXIS)
+    return _sharded_from_flat(flat, plan_b, n1, c)
+
+
+def syr2k_3d_limited_sharded(a: jax.Array, b_mat: jax.Array, c: int,
+                             p2: int, chunk: int, mesh: Mesh
+                             ) -> ShardedTriTiles:
+    n1, n2 = a.shape
+    b, nsteps = _limited_steps(n2, p2, chunk)
+    plan_b = make_2d_plan(c, n1, b)
+    mesh3 = _mesh_3d(mesh, c * (c + 1), p2)
+    flat = syr2k_3d_limited(_chunk_cols_3d_jnp(a, plan_b, p2, nsteps),
+                            _chunk_cols_3d_jnp(b_mat, plan_b, p2, nsteps),
+                            plan_b, mesh3, TB_AXIS, REP_AXIS)
+    return _sharded_from_flat(flat, plan_b, n1, c)
+
+
+def symm_3d_limited_sharded_a(st: ShardedTriTiles, b: jax.Array, p2: int,
+                              chunk: int, mesh: Mesh) -> jax.Array:
+    """Alg 18: gather A's triangle blocks once, stream B/C chunks."""
+    n1, n2 = st.n, b.shape[1]
+    c = st.c
+    bw, nsteps = _limited_steps(n2, p2, chunk)
+    plan_b = make_2d_plan(c, n1, bw)
+    mesh3 = _mesh_3d(mesh, c * (c + 1), p2)
+    c_dist = symm_3d_limited(_flat_from_sharded(st, p2),
+                             _chunk_cols_3d_jnp(b, plan_b, p2, nsteps),
+                             plan_b, mesh3, TB_AXIS, REP_AXIS)
+    return _collect_cols_3d_jnp(c_dist, plan_b, p2, n2)
+
+
+def symm_3d_limited_packed_a(a_packed: jax.Array, b: jax.Array, c: int,
+                             p2: int, chunk: int, mesh: Mesh) -> jax.Array:
+    st = ShardedTriTiles.from_packed(a_packed, b.shape[0], c)
+    return symm_3d_limited_sharded_a(st, b, p2, chunk, mesh)
+
+
+def syrk_3d_limited_dense(a: jax.Array, c: int, p2: int, chunk: int,
+                          mesh: Mesh) -> jax.Array:
+    return syrk_3d_limited_sharded(a, c, p2, chunk, mesh).to_tril()
+
+
+def syr2k_3d_limited_dense(a: jax.Array, b: jax.Array, c: int, p2: int,
+                           chunk: int, mesh: Mesh) -> jax.Array:
+    return syr2k_3d_limited_sharded(a, b, c, p2, chunk, mesh).to_tril()
+
+
+def symm_3d_limited_dense(a_sym: jax.Array, b: jax.Array, c: int, p2: int,
+                          chunk: int, mesh: Mesh) -> jax.Array:
+    return symm_3d_limited_packed_a(pack_tril(jnp.tril(a_sym)), b, c, p2,
+                                    chunk, mesh)

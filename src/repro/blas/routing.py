@@ -6,8 +6,16 @@ executable :class:`Route`.  The regime analysis is
 this module layers the *executability* constraints of the concrete
 backends on top and picks the fallback chain:
 
-  mesh present:   regime kind (1d / 2d / 3d)  →  1d  →  dense (GSPMD)
+  mesh present:   regime kind (1d / 2d / 3d / 3d-limited)  →  1d
+                  →  dense (GSPMD)
   single device:  pallas (TPU or explicit opt-in)  →  dense (jnp)
+
+The §IX memory-dependent regime rides the same chain: when the resolved
+per-device budget ``M`` (device-HBM probe / env / argument) can't hold
+the unlimited 3D working set, ``choose_algorithm`` returns
+``kind="3d-limited"`` with a column chunk ``b`` and the route executes
+the streamed Algs 16–18 schedules instead of silently collapsing into
+the unlimited-memory 3D path.
 
 All decisions are static functions of shapes/dtypes/mesh, so routing is
 jit/vmap-safe and free after the first trace.
@@ -34,7 +42,8 @@ from typing import List, Optional, Tuple
 
 import jax
 
-from ..core.dispatch import AlgoChoice, choose_algorithm
+from ..core.dispatch import (AlgoChoice, choose_algorithm,
+                             resolve_memory_budget)
 from ..core.gf import prime_power
 from .autotune import heuristic_tiles, pick_tiles
 
@@ -49,7 +58,7 @@ PALLAS_MIN_N1 = 256
 class Route:
     """An executable routing decision."""
     op: str
-    path: str                 # "dense" | "pallas" | "1d" | "2d" | "3d"
+    path: str     # "dense" | "pallas" | "1d" | "2d" | "3d" | "3d-limited"
     reason: str
     n1: int
     n2: int
@@ -58,12 +67,19 @@ class Route:
     axis: Optional[str] = None
     choice: Optional[AlgoChoice] = None
     tiles: Optional[Tuple[int, int]] = None
+    M: Optional[int] = None   # resolved per-device memory budget (words)
 
     def describe(self) -> str:
         grid = ""
-        if self.choice is not None and self.path in ("2d", "3d"):
+        if self.choice is not None and self.path in ("2d", "3d",
+                                                     "3d-limited"):
             grid = (f" grid c={self.choice.c} p1={self.choice.p1}"
                     f" p2={self.choice.p2}")
+            if self.path == "3d-limited":
+                # the §IX memory-dependent route: show the streamed
+                # chunk and its predicted word count W(x)
+                grid += (f" b={self.choice.b} M={self.M}"
+                         f" W_IX={self.choice.predicted_words:.4g}w")
         tiles = f" tiles={self.tiles}" if self.tiles else ""
         return (f"{self.op}[{self.n1}x{self.n2}] -> {self.path}"
                 f"{grid}{tiles} ({self.reason})")
@@ -161,7 +177,20 @@ def _grid_fits(choice: AlgoChoice, P: int, n2: int, single_axis: bool
         if choice.idle == 0 and c >= 2 and _is_prime_power(c):
             return "2d"
         return None
-    if choice.kind in ("3d", "3d-limited"):
+    if choice.kind == "3d-limited":
+        # the memory-constrained plan must NOT collapse into the
+        # unlimited-memory 3D (or 2D) schedule: that silently discards
+        # the §IX working-set bound the dispatcher just enforced.  The
+        # streamed schedule tolerates a degenerate replication axis
+        # (p2 == 1 still chunks the columns), so only the grid embed,
+        # the chunk, and the column split gate it.
+        if choice.idle != 0 or c < 2 or not _is_prime_power(c):
+            return None
+        if single_axis and choice.b >= 1 \
+                and n2 % max(choice.p2, 1) == 0:
+            return "3d-limited"
+        return None
+    if choice.kind == "3d":
         if choice.idle != 0 or c < 2 or not _is_prime_power(c):
             return None
         if choice.p2 == 1:        # degenerate replication axis: pure 2D
@@ -183,7 +212,7 @@ def plan_route(op: str, n1: int, n2: int, *, dtype=None, batch: bool = False,
                mesh=None, axis: Optional[str] = None,
                tile=None, interpret: Optional[bool] = None,
                autotune_runner=None, fill: str = "tril",
-               accumulate: bool = False) -> Route:
+               accumulate: bool = False, M="auto") -> Route:
     """Pick the execution path for one blas call.
 
     ``tile``: None (heuristic), "auto" (measured + cached), or an
@@ -192,6 +221,12 @@ def plan_route(op: str, n1: int, n2: int, *, dtype=None, batch: bool = False,
     (output layout and beta-accumulate) so measured tiles are tuned —
     and cached — per epilogue: a packed-gather exit and an extra
     streamed C0 input change the VMEM footprint of a (bm, bk) choice.
+
+    ``M``: per-device memory budget in f32 words for the §IX
+    memory-dependent regime.  "auto" (default) probes the device HBM
+    (env-overridable, inert on CPU), None disables the budget, an int is
+    used as-is.  Inside :func:`pinned` the backward inherits the
+    forward's resolved budget so both passes agree on the regime.
     """
     if op not in M_OF:
         raise ValueError(f"unknown op {op!r}")
@@ -201,6 +236,8 @@ def plan_route(op: str, n1: int, n2: int, *, dtype=None, batch: bool = False,
         axis = pin.axis if mesh is not None and pin.axis in mesh.shape \
             else axis
     ax = _resolve_axis(mesh, axis)
+    M_res = pin.M if (pin is not None and M == "auto") \
+        else resolve_memory_budget(M)
 
     if mesh is not None and ax is not None and mesh.shape[ax] > 1:
         if tile is not None or interpret is True:
@@ -216,29 +253,35 @@ def plan_route(op: str, n1: int, n2: int, *, dtype=None, batch: bool = False,
             if n2 % P == 0:
                 return _emit(Route(op, "1d", "batched: stacked packed "
                                    "triangles on the 1D wire", n1, n2, m,
-                                   P=P, axis=ax,
+                                   P=P, axis=ax, M=M_res,
                                    choice=choose_algorithm(n1, n2, P, m)))
             return _emit(Route(op, "dense", f"batched with n2 % P = "
                                f"{n2 % P} != 0; GSPMD dense", n1, n2, m,
-                               P=P, axis=ax))
-        choice = choose_algorithm(n1, n2, P, m)
+                               P=P, axis=ax, M=M_res))
+        choice = choose_algorithm(n1, n2, P, m, M_res)
         fits_1d = n2 % P == 0
         grid_path = _grid_fits(choice, P, n2, len(mesh.shape) == 1)
         if choice.kind == "1d" and fits_1d:
             return _emit(Route(op, "1d", f"Thm 9 case {choice.case}: packed-"
                                "triangle 1D is optimal", n1, n2, m, P=P,
-                               axis=ax, choice=choice))
+                               axis=ax, choice=choice, M=M_res))
+        if grid_path == "3d-limited":
+            return _emit(Route(op, "3d-limited", f"§IX memory-dependent: "
+                               f"M={M_res} words forces streaming b="
+                               f"{choice.b} columns over the {choice.p1}x"
+                               f"{choice.p2} grid", n1, n2, m, P=P, axis=ax,
+                               choice=choice, M=M_res))
         if grid_path is not None:
             return _emit(Route(op, grid_path, f"Thm 9 case {choice.case}: "
                                f"{choice.kind} grid embeds exactly", n1, n2,
-                               m, P=P, axis=ax, choice=choice))
+                               m, P=P, axis=ax, choice=choice, M=M_res))
         if fits_1d:
             return _emit(Route(op, "1d", f"{choice.kind} grid infeasible on "
                                f"P={P}; 1D fallback", n1, n2, m, P=P, axis=ax,
-                               choice=choice))
+                               choice=choice, M=M_res))
         return _emit(Route(op, "dense", f"no distributed grid fits (P={P}, "
                            f"n2%P={n2 % P}); GSPMD dense", n1, n2, m, P=P,
-                           axis=ax, choice=choice))
+                           axis=ax, choice=choice, M=M_res))
 
     # single device --------------------------------------------------------
     if pin is not None and pin.P == 1:

@@ -17,10 +17,73 @@ systems decision.
 from __future__ import annotations
 
 import math
+import os
 from dataclasses import dataclass
-from typing import Optional
+from typing import Optional, Union
 
 from .lower_bounds import mem_independent_case, memory_independent_lower_bound
+
+#: env override for the per-device memory budget, in f32 WORDS (not
+#: bytes).  Takes precedence over the device-HBM probe; "0"/"" disables
+#: the budget entirely (plans stay memory-unconstrained).
+MEMORY_BUDGET_ENV = "REPRO_BLAS_MEMORY_WORDS"
+
+#: fraction of the probed HBM byte limit the planner may budget —
+#: operands, XLA scratch, and the framework's own buffers share the
+#: device, so the streamed working set must not claim all of it
+_HBM_BUDGET_FRACTION = 0.8
+
+
+def device_memory_budget(device=None) -> Optional[int]:
+    """Per-device memory budget in f32 words, or None when unknown.
+
+    Resolution order: the :data:`MEMORY_BUDGET_ENV` env var (words; 0 or
+    empty disables), else a device-HBM probe via ``memory_stats()``
+    (``bytes_limit`` scaled by :data:`_HBM_BUDGET_FRACTION`).  CPU
+    devices report no memory stats, so on CPU — including every fake
+    ``--xla_force_host_platform_device_count`` mesh — this returns None
+    and route plans stay exactly as memory-unconstrained as before.
+    """
+    env = os.environ.get(MEMORY_BUDGET_ENV)
+    if env is not None:
+        env = env.strip()
+        if not env:
+            return None
+        try:
+            words = int(float(env))
+        except ValueError as e:
+            raise ValueError(f"{MEMORY_BUDGET_ENV}={env!r} is not a "
+                             "number of f32 words") from e
+        return words if words > 0 else None
+    if device is None:
+        import jax
+        devices = jax.devices()
+        if not devices:
+            return None
+        device = devices[0]
+    stats_fn = getattr(device, "memory_stats", None)
+    stats = stats_fn() if callable(stats_fn) else None
+    if not stats:
+        return None
+    limit = stats.get("bytes_limit") or stats.get("bytes_reservable_limit")
+    if not limit:
+        return None
+    return int(limit * _HBM_BUDGET_FRACTION) // 4
+
+
+def resolve_memory_budget(M: Union[str, int, None] = "auto"
+                          ) -> Optional[int]:
+    """Normalize a user-facing ``M`` argument to words-or-None.
+
+    ``"auto"`` (the API default) probes via :func:`device_memory_budget`;
+    ``None`` explicitly disables the budget; an int is used as-is.
+    """
+    if isinstance(M, str):
+        if M != "auto":
+            raise ValueError(f"M must be 'auto', None, or an int budget "
+                             f"in f32 words, got {M!r}")
+        return device_memory_budget()
+    return M
 
 
 @dataclass

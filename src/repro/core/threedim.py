@@ -18,7 +18,6 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from ..compat import pvary, shard_map
@@ -81,34 +80,43 @@ def symm_3d_local(a_flat_shard: jax.Array, b_own: jax.Array, plan: TwoDPlan,
 
 
 # ---- limited-memory variants (Algs 16–18) ---------------------------------
+def _zero_tb(plan: TwoDPlan, dtype, axes: Tuple[str, ...]
+             ) -> Tuple[jax.Array, jax.Array]:
+    """The owned extended triangle block (off, diag), zeroed — the scan
+    carry of the streamed Algs 16/17.  Its T·nb² + nb² words are the
+    resident x·n₁²/(2P) term of the §IX tradeoff, independent of n₂."""
+    zeros = lambda s: _varying(jnp.zeros(s, dtype), axes)
+    return (zeros((plan.T, plan.nb, plan.nb)), zeros((plan.nb, plan.nb)))
+
+
 def syrk_3d_limited_local(a_own_chunks: jax.Array, plan: TwoDPlan,
                           tb_axis: str, rep_axis: str, p2: int) -> jax.Array:
     """Alg 16: a_own_chunks (nsteps, c, nb, bw) — b-column chunks streamed
-    through a lax.scan; the accumulator C̄_Tk (the only resident
-    intermediate) has size T·nb² + nb², independent of n₂."""
+    through a lax.scan, each step's 2D rank update accumulated into the
+    owned extended triangle block; one reduce-scatter at the end."""
     def step(acc, chunk):
         off, diag = syrk_2d_local(chunk, plan, tb_axis)
-        return acc + _flatten_tb(off, diag), None
+        return (acc[0] + off, acc[1] + diag), None
 
-    t = plan.T * plan.nb * plan.nb + plan.nb * plan.nb
-    acc0 = _varying(jnp.zeros((t,), a_own_chunks.dtype), (tb_axis, rep_axis))
-    acc, _ = jax.lax.scan(step, acc0, a_own_chunks)
-    return jax.lax.psum_scatter(_pad_to(acc, p2), rep_axis,
-                                scatter_dimension=0, tiled=True)
+    acc0 = _zero_tb(plan, a_own_chunks.dtype, (tb_axis, rep_axis))
+    (off, diag), _ = jax.lax.scan(step, acc0, a_own_chunks)
+    return jax.lax.psum_scatter(_pad_to(_flatten_tb(off, diag), p2),
+                                rep_axis, scatter_dimension=0, tiled=True)
 
 
 def syr2k_3d_limited_local(a_own_chunks: jax.Array, b_own_chunks: jax.Array,
                            plan: TwoDPlan, tb_axis: str, rep_axis: str,
                            p2: int) -> jax.Array:
+    """Alg 17: like Alg 16 with the symmetrized two-sided update."""
     def step(acc, ab):
         off, diag = syr2k_2d_local(ab[0], ab[1], plan, tb_axis)
-        return acc + _flatten_tb(off, diag), None
+        return (acc[0] + off, acc[1] + diag), None
 
-    t = plan.T * plan.nb * plan.nb + plan.nb * plan.nb
-    acc0 = _varying(jnp.zeros((t,), a_own_chunks.dtype), (tb_axis, rep_axis))
-    acc, _ = jax.lax.scan(step, acc0, (a_own_chunks, b_own_chunks))
-    return jax.lax.psum_scatter(_pad_to(acc, p2), rep_axis,
-                                scatter_dimension=0, tiled=True)
+    acc0 = _zero_tb(plan, a_own_chunks.dtype, (tb_axis, rep_axis))
+    (off, diag), _ = jax.lax.scan(step, acc0,
+                                  (a_own_chunks, b_own_chunks))
+    return jax.lax.psum_scatter(_pad_to(_flatten_tb(off, diag), p2),
+                                rep_axis, scatter_dimension=0, tiled=True)
 
 
 def symm_3d_limited_local(a_flat_shard: jax.Array, b_own_chunks: jax.Array,
@@ -172,55 +180,53 @@ def symm_3d(a_flat, b_dist, plan: TwoDPlan, mesh, tb_axis="tb",
         out_specs=P(tb_axis, rep_axis)))(a_flat, b_dist)
 
 
-# --------------------------------------------------------------------------
-# host-side distribution helpers
-# --------------------------------------------------------------------------
-def distribute_rows_3d(Xf: np.ndarray, plan: TwoDPlan, p2: int,
-                       nsteps: int = 1) -> np.ndarray:
-    """(n1, n2) -> (p1, p2, [nsteps,] c, nb, bw): column slices over the
-    replication axis, 2D row-share layout within each slice, optionally
-    chunked for the limited-memory variants."""
-    from .twodim import distribute_rows, make_2d_plan
-    n2s = Xf.shape[1] // p2
-    slices = []
-    for l in range(p2):
-        Xs = Xf[:, l * n2s:(l + 1) * n2s]
-        if nsteps == 1:
-            slices.append(distribute_rows(Xs, plan))        # (p1, c, nb, w2)
-        else:
-            b = n2s // nsteps
-            chunk_plan = make_2d_plan(plan.c, plan.n1, b)
-            chunks = [Xs[:, t * b:(t + 1) * b] for t in range(nsteps)]
-            chunked = np.stack([distribute_rows(ch, chunk_plan)
-                                for ch in chunks], axis=1)
-            slices.append(chunked)      # (p1, nsteps, c, nb, bw)
-    return np.stack(slices, axis=1)     # (p1, p2, ...)
+def syrk_3d_limited(a_chunks: jax.Array, plan: TwoDPlan, mesh,
+                    tb_axis: str = "tb", rep_axis: str = "rep") -> jax.Array:
+    """a_chunks global (p1, p2, nsteps, c, nb, bw) sharded P(tb, rep);
+    plan is the per-chunk 2D plan (n₂ = b).  Returns (p1, p2, shard)."""
+    p2 = mesh.shape[rep_axis]
+    f = functools.partial(syrk_3d_limited_local, plan=plan, tb_axis=tb_axis,
+                          rep_axis=rep_axis, p2=p2)
+
+    def body(a):                   # a: (1, 1, nsteps, c, nb, bw) per device
+        return f(a[0, 0])[None, None]
+
+    return jax.jit(shard_map(
+        body, mesh=mesh, in_specs=P(tb_axis, rep_axis),
+        out_specs=P(tb_axis, rep_axis)))(a_chunks)
+
+
+def syr2k_3d_limited(a_chunks, b_chunks, plan: TwoDPlan, mesh,
+                     tb_axis="tb", rep_axis="rep"):
+    p2 = mesh.shape[rep_axis]
+    f = functools.partial(syr2k_3d_limited_local, plan=plan, tb_axis=tb_axis,
+                          rep_axis=rep_axis, p2=p2)
+
+    def body(a, b):
+        return f(a[0, 0], b[0, 0])[None, None]
+
+    return jax.jit(shard_map(
+        body, mesh=mesh, in_specs=(P(tb_axis, rep_axis),) * 2,
+        out_specs=P(tb_axis, rep_axis)))(a_chunks, b_chunks)
+
+
+def symm_3d_limited(a_flat, b_chunks, plan: TwoDPlan, mesh,
+                    tb_axis="tb", rep_axis="rep"):
+    """a_flat global (p1, p2, shard) sharded P(tb, rep);
+    b_chunks global (p1, p2, nsteps, c, nb, bw).  Returns the C chunks
+    in the same (p1, p2, nsteps, c, nb, bw) layout."""
+    f = functools.partial(symm_3d_limited_local, plan=plan, tb_axis=tb_axis,
+                          rep_axis=rep_axis)
+
+    def body(a, b):
+        return f(a[0, 0], b[0, 0])[None, None]
+
+    return jax.jit(shard_map(
+        body, mesh=mesh, in_specs=(P(tb_axis, rep_axis),) * 2,
+        out_specs=P(tb_axis, rep_axis)))(a_flat, b_chunks)
 
 
 def flat_tb_size(plan: TwoDPlan) -> int:
     """Words of one flattened extended triangle block (off ‖ diag) —
     the shared layout of the 3D flat shards and the packed mesh wire."""
     return tb_flat_words(plan.c, plan.n1)
-
-
-def gather_3d_sym(flat_shards: np.ndarray, plan: TwoDPlan) -> np.ndarray:
-    """(p1, p2, shard) reduce-scattered output -> dense tril (n1, n1)."""
-    from .twodim import assemble_sym
-    p1, p2, s = flat_shards.shape
-    flat = flat_shards.reshape(p1, p2 * s)[:, :flat_tb_size(plan)]
-    t = plan.T * plan.nb * plan.nb
-    off = flat[:, :t].reshape(p1, plan.T, plan.nb, plan.nb)
-    diag = flat[:, t:].reshape(p1, plan.nb, plan.nb)
-    return assemble_sym(off, diag, plan)
-
-
-def distribute_3d_sym(Af: np.ndarray, plan: TwoDPlan, p2: int) -> np.ndarray:
-    """Full symmetric A -> (p1, p2, shard) flattened extended triangle
-    blocks, shard-split over the replication axis (for 3D SYMM input)."""
-    from .twodim import distribute_sym
-    off, diag = distribute_sym(Af, plan)
-    p1 = plan.num_devices
-    flat = np.concatenate([off.reshape(p1, -1), diag.reshape(p1, -1)], 1)
-    pad = -flat.shape[1] % p2
-    flat = np.pad(flat, ((0, 0), (0, pad)))
-    return flat.reshape(p1, p2, -1)

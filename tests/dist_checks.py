@@ -87,82 +87,66 @@ def check_2d(c: int) -> None:
 def check_3d(c: int, p2: int, nsteps: int) -> None:
     import jax.numpy as jnp
 
-    from repro.core.threedim import (distribute_3d_sym, distribute_rows_3d,
-                                     flat_tb_size, gather_3d_sym, symm_3d,
-                                     syr2k_3d, syrk_3d)
-    from repro.core.twodim import collect_rows, make_2d_plan
-    import functools
-    import jax
-    from jax.sharding import PartitionSpec as P_
+    from repro.blas.meshpath import (_chunk_cols_3d_jnp, _collect_cols_3d_jnp,
+                                     _flat_from_sharded, _sharded_from_flat,
+                                     collect_rows_3d_jnp,
+                                     distribute_rows_3d_jnp)
+    from repro.core.packing import ShardedTriTiles
+    from repro.core.threedim import (symm_3d, symm_3d_limited, syr2k_3d,
+                                     syr2k_3d_limited, syrk_3d,
+                                     syrk_3d_limited)
+    from repro.core.twodim import make_2d_plan
 
     p1 = c * (c + 1)
     rng = np.random.default_rng(2)
     n1 = 2 * c * c
     n2 = 2 * (c + 1) * p2 * max(nsteps, 1)
     n2s = n2 // p2
-    plan = make_2d_plan(c, n1, n2s)
     A = rng.standard_normal((n1, n2)).astype(np.float32)
     B = rng.standard_normal((n1, n2)).astype(np.float32)
+    S = rng.standard_normal((n1, n1)).astype(np.float32)
+    S = np.tril(S) + np.tril(S, -1).T
     mesh = _mesh((p1, p2), ("tb", "rep"))
 
     if nsteps == 1:
-        a_dist = jnp.asarray(distribute_rows_3d(A, plan, p2))
+        plan = make_2d_plan(c, n1, n2s)
+        a_dist = distribute_rows_3d_jnp(jnp.asarray(A), plan, p2)
         out = syrk_3d(a_dist, plan, mesh)
-        got = gather_3d_sym(np.asarray(out), plan)
+        got = np.asarray(_sharded_from_flat(out, plan, n1, c).to_tril())
         np.testing.assert_allclose(got, np.tril(A @ A.T), rtol=2e-4,
                                    atol=2e-4)
-        b_dist = jnp.asarray(distribute_rows_3d(B, plan, p2))
+        b_dist = distribute_rows_3d_jnp(jnp.asarray(B), plan, p2)
         out = syr2k_3d(a_dist, b_dist, plan, mesh)
-        got = gather_3d_sym(np.asarray(out), plan)
+        got = np.asarray(_sharded_from_flat(out, plan, n1, c).to_tril())
         np.testing.assert_allclose(got, np.tril(A @ B.T + B @ A.T),
                                    rtol=2e-4, atol=2e-4)
-        # SYMM 3D
-        S = rng.standard_normal((n1, n1)).astype(np.float32)
-        S = np.tril(S) + np.tril(S, -1).T
-        s_flat = jnp.asarray(distribute_3d_sym(S, plan, p2))
-        c_dist = symm_3d(s_flat, b_dist, plan, mesh)
-        # reassemble: each slice l holds C columns of its slice
-        cd = np.asarray(c_dist)  # (p1, p2, c, nb, w2)
-        C = np.zeros((n1, n2), np.float32)
-        for l in range(p2):
-            C[:, l * n2s:(l + 1) * n2s] = collect_rows(cd[:, l], plan)
-        np.testing.assert_allclose(C, S @ B, rtol=2e-4, atol=2e-4)
+        # SYMM 3D: triangle blocks in, column slices out
+        st = ShardedTriTiles.from_tril(jnp.tril(jnp.asarray(S)), c)
+        c_dist = symm_3d(_flat_from_sharded(st, p2), b_dist, plan, mesh)
+        got = np.asarray(collect_rows_3d_jnp(c_dist, plan, p2))
+        np.testing.assert_allclose(got, S @ B, rtol=2e-4, atol=2e-4)
         print(f"OK 3d c={c} p2={p2}")
     else:
-        # limited-memory variants
-        from repro.compat import shard_map
-        from repro.core.threedim import (symm_3d_limited_local,
-                                         syrk_3d_limited_local)
-        a_dist = jnp.asarray(distribute_rows_3d(A, plan, p2, nsteps=nsteps))
-        bchunk_plan = make_2d_plan(c, n1, n2s // nsteps)
-
-        f = functools.partial(syrk_3d_limited_local, plan=bchunk_plan,
-                              tb_axis="tb", rep_axis="rep", p2=p2)
-        out = jax.jit(shard_map(
-            lambda a: f(a[0, 0])[None, None], mesh=mesh,
-            in_specs=P_("tb", "rep"), out_specs=P_("tb", "rep")))(a_dist)
-        got = gather_3d_sym(np.asarray(out), bchunk_plan)
+        # limited-memory variants (Algs 16-18): streamed b-column chunks
+        bw = n2s // nsteps
+        plan_b = make_2d_plan(c, n1, bw)
+        a_ch = _chunk_cols_3d_jnp(jnp.asarray(A), plan_b, p2, nsteps)
+        out = syrk_3d_limited(a_ch, plan_b, mesh)
+        got = np.asarray(_sharded_from_flat(out, plan_b, n1, c).to_tril())
         np.testing.assert_allclose(got, np.tril(A @ A.T), rtol=2e-4,
                                    atol=2e-4)
 
-        S = rng.standard_normal((n1, n1)).astype(np.float32)
-        S = np.tril(S) + np.tril(S, -1).T
-        s_flat = jnp.asarray(distribute_3d_sym(S, bchunk_plan, p2))
-        b_dist = jnp.asarray(distribute_rows_3d(B, plan, p2, nsteps=nsteps))
-        g = functools.partial(symm_3d_limited_local, plan=bchunk_plan,
-                              tb_axis="tb", rep_axis="rep")
-        c_out = jax.jit(shard_map(
-            lambda a, b: g(a[0, 0], b[0, 0])[None, None], mesh=mesh,
-            in_specs=(P_("tb", "rep"),) * 2,
-            out_specs=P_("tb", "rep")))(s_flat, b_dist)
-        cd = np.asarray(c_out)  # (p1, p2, nsteps, c, nb, bw)
-        C = np.zeros((n1, n2), np.float32)
-        bwidth = n2s // nsteps
-        for l in range(p2):
-            for t in range(nsteps):
-                Cs = collect_rows(cd[:, l, t], bchunk_plan)
-                C[:, l * n2s + t * bwidth: l * n2s + (t + 1) * bwidth] = Cs
-        np.testing.assert_allclose(C, S @ B, rtol=2e-4, atol=2e-4)
+        b_ch = _chunk_cols_3d_jnp(jnp.asarray(B), plan_b, p2, nsteps)
+        out = syr2k_3d_limited(a_ch, b_ch, plan_b, mesh)
+        got = np.asarray(_sharded_from_flat(out, plan_b, n1, c).to_tril())
+        np.testing.assert_allclose(got, np.tril(A @ B.T + B @ A.T),
+                                   rtol=2e-4, atol=2e-4)
+
+        st = ShardedTriTiles.from_tril(jnp.tril(jnp.asarray(S)), c)
+        c_out = symm_3d_limited(_flat_from_sharded(st, p2), b_ch, plan_b,
+                                mesh)
+        got = np.asarray(_collect_cols_3d_jnp(c_out, plan_b, p2, n2))
+        np.testing.assert_allclose(got, S @ B, rtol=2e-4, atol=2e-4)
         print(f"OK 3d-limited c={c} p2={p2} nsteps={nsteps}")
 
 
@@ -639,11 +623,198 @@ def check_mesh_packed() -> None:
     print("OK mesh_packed")
 
 
+def _shardmap_scan_peaks(jaxpr):
+    """Max words of any eqn output inside each lax.scan body that lives
+    inside a shard_map body — the per-device live working set of the
+    streamed loop.  Scans at the GSPMD level (layout converters) are
+    excluded: they shuffle owned data, they are not the stream."""
+    peaks = []
+
+    def walk(j, inside):
+        for eqn in j.eqns:
+            name = eqn.primitive.name
+            if name == "scan" and inside:
+                words = 1
+                for e2 in eqn.params["jaxpr"].jaxpr.eqns:
+                    for v in e2.outvars:
+                        sh = tuple(getattr(v.aval, "shape", ()))
+                        words = max(words,
+                                    int(np.prod(sh, dtype=np.int64))
+                                    if sh else 1)
+                peaks.append(words)
+            nested = inside or "shard_map" in name
+            for val in eqn.params.values():
+                if hasattr(val, "jaxpr") and hasattr(val.jaxpr, "eqns"):
+                    walk(val.jaxpr, nested)
+                elif hasattr(val, "eqns"):
+                    walk(val, nested)
+
+    walk(jaxpr.jaxpr, False)
+    return peaks
+
+
+def check_memdep() -> None:
+    """The §IX memory-dependent wire (12 fake devices): a small budget M
+    forces the 3d-limited route (Route capture, not just planning), the
+    streamed Algs 16-18 match the dense oracle for every op/fill (incl.
+    ragged n1 and ShardedTriTiles operands), the packed wire stays
+    dense-free fwd+bwd, the scan body's live set is O(chunk) — not
+    O(n2/p2) — and a huge budget reproduces the memory-independent
+    plans exactly."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro import blas
+    from repro.blas import meshpath
+    from repro.core.packing import ShardedTriTiles
+    from repro.core.threedim import syrk_3d_limited
+    from repro.core.twodim import make_2d_plan
+
+    rng = np.random.default_rng(33)
+    TOL = dict(rtol=3e-4, atol=3e-4)
+
+    def tril_np(x):
+        return np.tril(np.asarray(x, np.float64)).astype(np.float32)
+
+    def packed_np(x):
+        t = tril_np(x)
+        return t[np.tril_indices(t.shape[0])]
+
+    def sym_np(s):
+        return np.tril(s) + np.tril(s, -1).T
+
+    mesh = _mesh((12,), ("x",))
+    M = 60                                  # words/device -> 3d-limited
+    n2 = 32
+
+    # ---- routing: M forces the streamed route, and it executes ----------
+    r = blas.plan_route("syrk", 24, n2, mesh=mesh, M=M)
+    assert r.path == "3d-limited" and r.M == M, r
+    assert (r.choice.c, r.choice.p2) == (2, 2) and r.choice.b >= 1, r
+    assert "b=" in r.describe() and "W_IX" in r.describe(), r.describe()
+
+    for n1 in (24, 22):                     # 22: ragged (nb padding)
+        A = jnp.asarray(rng.standard_normal((n1, n2)), jnp.float32)
+        B = jnp.asarray(rng.standard_normal((n1, n2)), jnp.float32)
+        assert blas.plan_route("syrk", n1, n2, mesh=mesh,
+                               M=M).path == "3d-limited"
+        with blas.capture_routes() as log:
+            got = np.asarray(blas.syrk(A, mesh=mesh, M=M))
+        assert [(x.op, x.path) for x in log] == [("syrk", "3d-limited")]
+        np.testing.assert_allclose(
+            got, tril_np(np.asarray(A) @ np.asarray(A).T), **TOL)
+        np.testing.assert_allclose(
+            np.asarray(blas.syrk(A, fill="packed", mesh=mesh, M=M)),
+            packed_np(np.asarray(A) @ np.asarray(A).T), **TOL)
+        g = np.asarray(A) @ np.asarray(B).T
+        np.testing.assert_allclose(
+            np.asarray(blas.syr2k(A, B, mesh=mesh, M=M)),
+            tril_np(g + g.T), **TOL)
+        np.testing.assert_allclose(
+            np.asarray(blas.syr2k(A, B, fill="packed", mesh=mesh, M=M)),
+            packed_np(g + g.T), **TOL)
+        S = rng.standard_normal((n1, n1)).astype(np.float32)
+        with blas.capture_routes() as log:
+            got = np.asarray(blas.symm(jnp.asarray(S), B, mesh=mesh, M=M))
+        assert ("symm", "3d-limited") in [(x.op, x.path) for x in log]
+        np.testing.assert_allclose(got, sym_np(S) @ np.asarray(B), **TOL)
+    print("  streamed == dense: syrk/syr2k/symm, tril+packed, ragged n1")
+
+    # ---- fill="sharded" output feeds a limited symm without repacking ----
+    A = jnp.asarray(rng.standard_normal((24, n2)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((24, n2)), jnp.float32)
+    st = blas.syrk(A, fill="sharded", mesh=mesh, M=M)
+    assert isinstance(st, ShardedTriTiles) and (st.n, st.c) == (24, 2)
+    np.testing.assert_allclose(
+        np.asarray(st.to_tril()),
+        tril_np(np.asarray(A) @ np.asarray(A).T), **TOL)
+    with blas.capture_routes() as log:
+        got = np.asarray(blas.symm(st, B, mesh=mesh, M=M))
+    assert ("symm", "3d-limited") in [(x.op, x.path) for x in log]
+    want = sym_np(tril_np(np.asarray(A) @ np.asarray(A).T))
+    np.testing.assert_allclose(got, want @ np.asarray(B), rtol=2e-3,
+                               atol=2e-3)
+    print("  fill=sharded round-trips and rides the limited symm")
+
+    # ---- batched operands ignore M (stacked 1d wire, unchanged) ---------
+    Ab = jnp.asarray(rng.standard_normal((2, 24, 48)), jnp.float32)
+    rb = blas.plan_route("syrk", 24, 48, batch=True, mesh=mesh, M=M)
+    assert rb.path == "1d", rb
+    got = np.asarray(blas.syrk(Ab, mesh=mesh, M=M))
+    want = np.stack([tril_np(np.asarray(x) @ np.asarray(x).T) for x in Ab])
+    np.testing.assert_allclose(got, want, **TOL)
+    print("  batched stacks stay on the 1d wire under a budget")
+
+    # ---- packed wire dense-free, fwd + bwd ------------------------------
+    jx = jax.make_jaxpr(lambda x: blas.syrk(x, fill="packed", mesh=mesh,
+                                            M=M))(A)
+    assert not _square_vars_on_wire(jx, 24), "limited syrk wire densified"
+    jx = jax.make_jaxpr(jax.grad(
+        lambda x: blas.syrk(x, fill="packed", mesh=mesh, M=M).sum()))(A)
+    assert not _square_vars_on_wire(jx, 24), \
+        "limited syrk backward densified the cotangent on the wire"
+    print("  3d-limited packed wire is dense-free (jaxpr, fwd + bwd)")
+
+    # ---- the scan body's live set is O(chunk), not O(n2/p2) -------------
+    c, p2, b = r.choice.c, r.choice.p2, r.choice.b
+    bw, nsteps = meshpath._limited_steps(n2, p2, b)
+    plan_b = make_2d_plan(c, 24, bw)
+    mesh3 = meshpath._mesh_3d(mesh, c * (c + 1), p2)
+    a_ch = meshpath._chunk_cols_3d_jnp(A, plan_b, p2, nsteps)
+    jx = jax.make_jaxpr(
+        lambda x: syrk_3d_limited(x, plan_b, mesh3,
+                                  meshpath.TB_AXIS, meshpath.REP_AXIS))(a_ch)
+    peaks = _shardmap_scan_peaks(jx)
+    assert peaks, "limited route lost its streaming scan"
+    panel_words = c * plan_b.nb * (n2 // p2)    # unchunked per-device slice
+    assert max(peaks) < panel_words, (peaks, panel_words)
+    print(f"  scan-body peak {max(peaks)}w < owned panel {panel_words}w "
+          f"(nsteps={nsteps})")
+
+    # ---- grads ride the limited wire and match dense --------------------
+    W = jnp.asarray(rng.standard_normal((24, 24)), jnp.float32)
+    with blas.capture_routes() as log:
+        gm = jax.grad(lambda x: jnp.sum(
+            W * blas.syrk(x, mesh=mesh, M=M)))(A)
+    planned = [(x.op, x.path) for x in log]
+    assert ("syrk", "3d-limited") in planned \
+        and ("symm", "3d-limited") in planned, planned
+    gd = jax.grad(lambda x: jnp.sum(W * blas.syrk(x)))(A)
+    np.testing.assert_allclose(np.asarray(gm), np.asarray(gd), rtol=1e-4,
+                               atol=1e-5)
+    gm = jax.grad(lambda x, y: jnp.sum(
+        blas.syr2k(x, y, mesh=mesh, M=M) ** 2), argnums=(0, 1))(A, B)
+    gd = jax.grad(lambda x, y: jnp.sum(
+        blas.syr2k(x, y) ** 2), argnums=(0, 1))(A, B)
+    for x, y in zip(gm, gd):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=2e-3,
+                                   atol=2e-4)
+    S = jnp.asarray(rng.standard_normal((24, 24)), jnp.float32)
+    gm = jax.grad(lambda s, y: jnp.sum(
+        blas.symm(s, y, mesh=mesh, M=M) ** 2), argnums=(0, 1))(S, B)
+    gd = jax.grad(lambda s, y: jnp.sum(
+        blas.symm(s, y) ** 2), argnums=(0, 1))(S, B)
+    for x, y in zip(gm, gd):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=2e-3,
+                                   atol=2e-4)
+    print("  grad parity vs dense (backward symm routed 3d-limited)")
+
+    # ---- a huge budget reproduces the memory-independent plans ----------
+    for op, n1_, n2_ in (("syrk", 24, 8), ("syrk", 16, 1024),
+                         ("symm", 36, 6)):
+        r_big = blas.plan_route(op, n1_, n2_, mesh=mesh, M=1 << 40)
+        r_off = blas.plan_route(op, n1_, n2_, mesh=mesh, M=None)
+        assert (r_big.path, r_big.choice) == (r_off.path, r_off.choice), \
+            (r_big, r_off)
+    print("  huge M == memory-independent plans")
+    print("OK memdep")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite", required=True,
                     choices=["1d", "2d", "3d", "3d-limited", "blas",
-                             "blas_grad", "mesh_packed"])
+                             "blas_grad", "mesh_packed", "memdep"])
     ap.add_argument("--P", type=int, default=4)
     ap.add_argument("--c", type=int, default=2)
     ap.add_argument("--p2", type=int, default=2)
@@ -661,6 +832,8 @@ def main():
         check_blas_grad()
     elif args.suite == "mesh_packed":
         check_mesh_packed()
+    elif args.suite == "memdep":
+        check_memdep()
     else:
         check_3d(args.c, args.p2, args.nsteps)
 

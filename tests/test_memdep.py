@@ -1,0 +1,135 @@
+"""§IX memory-dependent regime (Algs 16-18 as a first-class route).
+
+Single-process coverage of the planning layer — the budget probe and
+its env override, ``choose_algorithm``'s limited-memory crossover, the
+route-kind round-trip through ``_grid_fits``, and ``describe()``'s
+§IX annotations — plus the multi-device execution suite
+(`dist_checks.py --suite memdep`: streamed == dense parity for every
+op, dense-free jaxprs fwd+bwd, O(chunk) scan-body live set) run in a
+subprocess so fake-device XLA flags never leak into this process.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro import blas
+from repro.core.dispatch import (MEMORY_BUDGET_ENV, choose_algorithm,
+                                 device_memory_budget,
+                                 resolve_memory_budget)
+from repro.core.lower_bounds import memory_dependent_parallel_lower_bound
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# budget resolution: env override, probe, and the API's M argument
+# ---------------------------------------------------------------------------
+def test_budget_env_override(monkeypatch):
+    monkeypatch.setenv(MEMORY_BUDGET_ENV, "12345")
+    assert device_memory_budget() == 12345
+    assert resolve_memory_budget("auto") == 12345
+
+
+@pytest.mark.parametrize("raw", ["", "0", "  "])
+def test_budget_env_disables(monkeypatch, raw):
+    monkeypatch.setenv(MEMORY_BUDGET_ENV, raw)
+    assert device_memory_budget() is None
+
+
+def test_budget_cpu_probe_is_none(monkeypatch):
+    """CPU devices expose no memory stats, so without the env override
+    the probe must return None — CI plans stay memory-unconstrained."""
+    monkeypatch.delenv(MEMORY_BUDGET_ENV, raising=False)
+    assert device_memory_budget() is None
+
+
+def test_resolve_memory_budget_contract():
+    assert resolve_memory_budget(None) is None
+    assert resolve_memory_budget(77) == 77
+    with pytest.raises(ValueError):
+        resolve_memory_budget("small")
+
+
+def test_plan_route_rejects_bad_m():
+    with pytest.raises(ValueError):
+        blas.plan_route("syrk", 64, 64, M="tiny")
+
+
+# ---------------------------------------------------------------------------
+# choose_algorithm crossover (pure logic, no devices)
+# ---------------------------------------------------------------------------
+def test_limited_crossover_small_budget():
+    ch = choose_algorithm(n1=24, n2=32, P=12, m=1, M=60)
+    assert ch.kind == "3d-limited"
+    assert (ch.c, ch.p1, ch.p2) == (2, 6, 2) and ch.b == 2
+    # tighter budget -> smaller replication degree, still streamed
+    ch2 = choose_algorithm(n1=24, n2=32, P=12, m=1, M=40)
+    assert ch2.kind == "3d-limited" and ch2.p2 <= ch.p2
+    assert ch2.p2 == 1 and ch2.c == 3
+
+
+def test_limited_plan_tracks_section_ix_bound():
+    """predicted_words of the streamed plan stays within a modest
+    constant of the Cor 6-8 memory-dependent lower bound."""
+    for (n1, n2, P, M) in [(32768, 1024, 240, 1 << 22),
+                           (4096, 4096, 240, 1 << 19)]:
+        ch = choose_algorithm(n1, n2, P, m=1, M=M)
+        assert ch.kind == "3d-limited", ch
+        assert 0 < ch.lower_bound and \
+            ch.predicted_words <= 4.0 * ch.lower_bound, ch
+        # any valid schedule moves at least the Cor 6-8 words (the -2M
+        # slack can push that bound negative; it still can't exceed the
+        # planned traffic)
+        lb = memory_dependent_parallel_lower_bound(n1, n2, P, M, 1)
+        assert ch.predicted_words >= lb, (ch, lb)
+
+
+def test_huge_budget_reproduces_unconstrained_plans():
+    for (n1, n2, P) in [(24, 8, 12), (16, 1024, 4), (65536, 128, 12)]:
+        a = choose_algorithm(n1, n2, P, m=1, M=None)
+        b = choose_algorithm(n1, n2, P, m=1, M=1 << 40)
+        assert (a.kind, a.c, a.p1, a.p2) == (b.kind, b.c, b.p1, b.p2)
+
+
+# ---------------------------------------------------------------------------
+# route-kind round-trip (the _grid_fits "3d-limited" != "3d" bugfix)
+# ---------------------------------------------------------------------------
+def test_grid_fits_keeps_limited_kind_distinct():
+    from repro.blas.routing import _grid_fits
+    ch = choose_algorithm(n1=24, n2=32, P=12, m=1, M=60)
+    assert ch.kind == "3d-limited"
+    assert _grid_fits(ch, 12, 32, single_axis=True) == "3d-limited"
+    # a ragged column count the p2-way slicing can't split -> no grid
+    assert _grid_fits(ch, 12, 33, single_axis=True) is None
+    # an unconstrained 3D plan must still round-trip as "3d"
+    ch3 = choose_algorithm(n1=24, n2=8, P=12, m=1)
+    assert ch3.kind == "3d"
+    assert _grid_fits(ch3, 12, 8, single_axis=True) == "3d"
+
+
+def test_describe_names_the_budget():
+    import jax
+    if jax.device_count() != 1:
+        pytest.skip("single-device planning test")
+    r = blas.plan_route("syrk", 4096, 4096, M=60)
+    # no mesh -> no grid path, but the plan must not crash and M rides
+    # along for explain()/pinning
+    assert r.path in ("pallas", "dense")
+
+
+# ---------------------------------------------------------------------------
+# multi-device execution (subprocess: fake devices must not leak)
+# ---------------------------------------------------------------------------
+def test_memdep_wire_subprocess():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=12"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", "dist_checks.py"),
+         "--suite", "memdep"],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, f"memdep suite failed:\n{out.stdout}" \
+                                f"\n{out.stderr}"
+    assert "OK memdep" in out.stdout
