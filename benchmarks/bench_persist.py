@@ -1,0 +1,115 @@
+"""§Persist — packed-native checkpoints: bytes + save/restore wall-clock.
+
+The triangle-block format is the storage format too (see
+distributed/checkpoint.py): ``TriTiles`` / ``ShardedTriTiles`` /
+``PackedTriangle`` leaves are written as packed bf16 words — the
+n(n+1)/2 triangle instead of the dense n², and 2 bytes instead of 4 —
+so a symmetric leaf costs ~0.25x its dense-f32 bytes on disk.  This
+suite measures that against the dense baseline at a few n:
+
+  * on-disk bytes per leaf (manifest-accounted, crc-verified), and the
+    packed/dense ratio (the <=0.30x acceptance line);
+  * save / restore wall-clock medians (atomic tmp-dir + fsync rename
+    included — this is the real persistence path, not a raw np.save);
+  * the elastic restore: the same packed file restored onto a
+    DIFFERENT wire (c=2 -> c=3) through the block-granular bijection,
+    timed separately so the re-shard overhead is visible.
+
+Rows land in repo-root BENCH_persist.json (full grid, the cross-PR
+trajectory) or artifacts/BENCH_persist_small.json (CI smoke).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import statistics
+import tempfile
+import time
+from typing import List
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_NS_FULL = (512, 1024, 2048)
+_NS_SMALL = (256, 512)
+_C_SAVE, _C_ELASTIC = 2, 3
+
+
+def _median(fn, repeats: int) -> float:
+    fn()                                       # warmup (compile/page-in)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return float(statistics.median(times))
+
+
+def main(grid: str = "full", repeats: int = 5) -> List[dict]:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.packing import ShardedTriTiles
+    from repro.distributed import (checkpoint_bytes, restore_checkpoint,
+                                   save_checkpoint)
+
+    rng = np.random.default_rng(3)
+    rows = []
+    base = tempfile.mkdtemp(prefix="bench_persist_")
+    try:
+        for n in (_NS_FULL if grid == "full" else _NS_SMALL):
+            a = rng.standard_normal((n, n)).astype(np.float32)
+            sym = jnp.asarray((a + a.T) / 2)
+            st = ShardedTriTiles.from_tril(jnp.tril(sym), _C_SAVE)
+            like = ShardedTriTiles.from_tril(jnp.zeros((n, n)), _C_SAVE)
+            like_el = ShardedTriTiles.from_tril(jnp.zeros((n, n)),
+                                                _C_ELASTIC)
+            dense_like = jax.ShapeDtypeStruct((n, n), jnp.float32)
+
+            for fmt, tree, lk in (("dense_f32", {"w": sym}, dense_like),
+                                  ("packed_bf16", {"w": st}, like)):
+                d = os.path.join(base, f"{fmt}_{n}")
+                save_s = _median(
+                    lambda: save_checkpoint(d, 1, tree), repeats)
+                restore_s = _median(
+                    lambda: restore_checkpoint(d, {"w": lk}), repeats)
+                row = {
+                    "format": fmt, "n": n, "c": _C_SAVE,
+                    "bytes": checkpoint_bytes(d)["leaves"]["w"],
+                    "dense_f32_bytes": n * n * 4,
+                    "save_s": save_s, "restore_s": restore_s,
+                    "reps": repeats, "timer": "median",
+                }
+                row["bytes_ratio"] = round(
+                    row["bytes"] / row["dense_f32_bytes"], 4)
+                if fmt == "packed_bf16":
+                    # elastic: same file, restored onto the c=3 wire
+                    # (every block changes owner) — no dense n x n built
+                    row["elastic_restore_s"] = _median(
+                        lambda: restore_checkpoint(d, {"w": like_el}),
+                        repeats)
+                    row["c_elastic"] = _C_ELASTIC
+                rows.append(row)
+                print(f"[persist] {fmt:>11} n={n:<5} "
+                      f"{row['bytes']:>9} B ({row['bytes_ratio']:.3f}x "
+                      f"dense f32)  save {save_s*1e3:6.1f}ms  restore "
+                      f"{restore_s*1e3:6.1f}ms"
+                      + (f"  elastic {row['elastic_restore_s']*1e3:6.1f}ms"
+                         if fmt == "packed_bf16" else ""))
+    finally:
+        shutil.rmtree(base, ignore_errors=True)
+
+    if grid == "full":
+        out = os.path.join(ROOT, "BENCH_persist.json")
+    else:
+        os.makedirs(os.path.join(ROOT, "artifacts"), exist_ok=True)
+        out = os.path.join(ROOT, "artifacts", "BENCH_persist_small.json")
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"[persist] {len(rows)} rows ({grid} grid) -> {out}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,7 @@ Suites:
   memdep    Cor 6-8   limited-memory tradeoff (Algs 16-18)
   kernels   Pallas kernels: correctness + triangular-tiling traffic
   roofline  40-cell dry-run roofline table (reads artifacts/*.jsonl)
+  persist   packed-native checkpoints: bytes + save/restore wall-clock
 
 Each suite prints its table and the JSON rows land in
 artifacts/bench_<suite>.json for EXPERIMENTS.md.
@@ -22,7 +23,7 @@ import time
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
-SUITES = ("seq", "parallel", "memdep", "kernels", "roofline")
+SUITES = ("seq", "parallel", "memdep", "kernels", "roofline", "persist")
 
 #: fixed fwd+bwd shape grid for the BENCH_blas.json trajectory — the
 #: original four rows stay byte-identical in (op, n1, n2, fill) so
@@ -406,10 +407,11 @@ def main() -> None:
         print("=" * 72)
         t0 = time.time()
         try:
-            # memdep's M-sweep has its own small/full grid (CI smoke
-            # writes artifacts/, full runs the repo-root trajectory)
-            rows = mod.main(grid=args.grid) if name == "memdep" \
-                else mod.main()
+            # memdep's M-sweep and persist's n-sweep have their own
+            # small/full grids (CI smoke writes artifacts/, full runs
+            # the repo-root trajectory)
+            rows = mod.main(grid=args.grid) \
+                if name in ("memdep", "persist") else mod.main()
             out = os.path.join(ROOT, "artifacts", f"bench_{name}.json")
             with open(out, "w") as f:
                 json.dump(rows, f, indent=1, default=str)

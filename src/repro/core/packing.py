@@ -325,6 +325,66 @@ def unpack_tril_tiles(p, n: int, tile: int, symmetric: bool = True):
     return out.reshape(p.shape[:-3] + (n, n))
 
 
+# ---- PackedTriangle: the typed element-packed persistence format ----------
+@dataclasses.dataclass(frozen=True)
+class PackedTriangle:
+    """Element-packed lower triangle ``vec`` (…, n(n+1)/2) plus its
+    logical dimension ``n`` — the typed marker for packed symmetric
+    vectors (Gram EMAs, Muon curvature stats, whitening caches).
+
+    A bare (L,) array cannot be recognized as symmetric state by a
+    pytree walk; wrapping it lets the persistence layer
+    (:mod:`repro.distributed.checkpoint`), gradient compression, and the
+    elastic re-shard path treat packed symmetric leaves natively — store
+    them as packed words (~4× fewer bytes than the dense f32 matrix when
+    narrowed to bf16) and rebuild them through the slice-granular
+    converters instead of densifying.
+
+    Registered as a jax pytree: ``vec`` is the only leaf, ``n`` is
+    static, so PackedTriangle flows through jit/vmap/grad/eval_shape
+    unchanged.  Leading batch dims vmap straight through.
+    """
+    vec: jax.Array                # (…, tril_size(n))
+    n: int
+
+    @property
+    def dtype(self):
+        return self.vec.dtype
+
+    @property
+    def batch_shape(self) -> Tuple[int, ...]:
+        return self.vec.shape[:-1]
+
+    def __post_init__(self):
+        shape = getattr(self.vec, "shape", None)
+        if shape is None or len(shape) < 1:
+            return                 # pytree unflatten sentinels pass through
+        if shape[-1] != tril_size(self.n):
+            raise ValueError(f"PackedTriangle(n={self.n}) needs trailing "
+                             f"length {tril_size(self.n)}, got {shape[-1]}")
+
+    def astype(self, dtype) -> "PackedTriangle":
+        return PackedTriangle(self.vec.astype(dtype), self.n)
+
+    @classmethod
+    def from_dense(cls, x) -> "PackedTriangle":
+        """Dense tril-valid (…, n, n) -> PackedTriangle (reads tril)."""
+        return cls(pack_tril(x), x.shape[-1])
+
+    def to_dense(self, symmetric: bool = True) -> jax.Array:
+        return unpack_tril(self.vec, self.n, diag=True,
+                           symmetric=symmetric)
+
+    def to_tritiles(self, bm: int = 128) -> "TriTiles":
+        return TriTiles.from_packed(self.vec, self.n, bm)
+
+
+jax.tree_util.register_pytree_node(
+    PackedTriangle,
+    lambda t: ((t.vec,), (t.n,)),
+    lambda aux, children: PackedTriangle(children[0], *aux))
+
+
 # ---- TriTiles: the first-class packed-triangular interchange format -------
 @dataclasses.dataclass(frozen=True)
 class TriTiles:
@@ -455,15 +515,17 @@ class ShardedTriTiles:
     none).  Total storage is P·(T+1)·nb² ≈ n²/2 — each device owns
     ~n²/(2P) words, the paper's per-processor memory bound.
 
-    ``off`` is (P, T, nb, nb) and ``diag`` (P, nb, nb) with the device
-    axis leading, exactly the shapes the shard_map schedules emit and
-    consume sharded over the mesh axis; (n, c) are static metadata.
+    ``off`` is (…, P, T, nb, nb) and ``diag`` (…, P, nb, nb) with the
+    device axis leading the core dims, exactly the shapes the shard_map
+    schedules emit and consume sharded over the mesh axis; optional
+    leading batch dims (stacked accumulators) ride through every
+    converter; (n, c) are static metadata.
     Converters route through the cached :func:`~repro.core.twodim.
     tb_pack_tables` bijection and never build an n×n dense array except
     the explicitly-dense ``to_tril``/``to_full`` exits.
     """
-    off: jax.Array                # (P, T, nb, nb)
-    diag: jax.Array               # (P, nb, nb)
+    off: jax.Array                # (…, P, T, nb, nb)
+    diag: jax.Array               # (…, P, nb, nb)
     n: int
     c: int
 
@@ -491,11 +553,14 @@ class ShardedTriTiles:
         want_off = (self.num_devices, self.T, self.nb, self.nb)
         want_diag = (self.num_devices, self.nb, self.nb)
         off_shape = tuple(getattr(self.off, "shape", ()))
-        if off_shape != want_off or tuple(shape) != want_diag:
+        ok = (len(off_shape) >= 4 and off_shape[-4:] == want_off
+              and len(shape) >= 3 and tuple(shape[-3:]) == want_diag
+              and off_shape[:-4] == tuple(shape[:-3]))
+        if not ok:
             raise ValueError(
                 f"ShardedTriTiles(n={self.n}, c={self.c}) needs off "
-                f"{want_off} and diag {want_diag}, got {off_shape} and "
-                f"{tuple(shape)}")
+                f"(…,) + {want_off} and diag (…,) + {want_diag} with "
+                f"matching batch dims, got {off_shape} and {tuple(shape)}")
 
     def astype(self, dtype) -> "ShardedTriTiles":
         return ShardedTriTiles(self.off.astype(dtype),
@@ -510,9 +575,10 @@ class ShardedTriTiles:
         from .twodim import tb_block_tables
         src, _ = tb_block_tables(self.c)
         Pn, T, nb = self.num_devices, self.T, self.nb
-        stack = jnp.concatenate([self.off, self.diag[:, None]], axis=1)
-        stack = stack.reshape(Pn * (T + 1), nb, nb)
-        blocks = jnp.take(stack, jnp.asarray(src), axis=0)
+        stack = jnp.concatenate(
+            [self.off, self.diag[..., :, None, :, :]], axis=-3)
+        stack = stack.reshape(stack.shape[:-4] + (Pn * (T + 1), nb, nb))
+        blocks = jnp.take(stack, jnp.asarray(src), axis=-3)
         return tiles_to_packed(blocks, self.n)
 
     @classmethod
@@ -529,10 +595,11 @@ class ShardedTriTiles:
         T = c * (c - 1) // 2
         blocks = packed_to_tiles(p, n, nb, nt=c * c)
         stack = jnp.concatenate(
-            [blocks, jnp.zeros((1, nb, nb), blocks.dtype)], axis=0)
-        sel = jnp.take(stack, jnp.asarray(dst).reshape(-1), axis=0)
-        sel = sel.reshape(Pn, T + 1, nb, nb)
-        return cls(sel[:, :T], sel[:, T], n, c)
+            [blocks, jnp.zeros(blocks.shape[:-3] + (1, nb, nb),
+                               blocks.dtype)], axis=-3)
+        sel = jnp.take(stack, jnp.asarray(dst).reshape(-1), axis=-3)
+        sel = sel.reshape(sel.shape[:-3] + (Pn, T + 1, nb, nb))
+        return cls(sel[..., :T, :, :], sel[..., T, :, :], n, c)
 
     # -- TriTiles interchange ----------------------------------------------
     def to_tritiles(self, bm: int = 128) -> TriTiles:
@@ -568,3 +635,40 @@ jax.tree_util.register_pytree_node(
     ShardedTriTiles,
     lambda t: ((t.off, t.diag), (t.n, t.c)),
     lambda aux, children: ShardedTriTiles(children[0], children[1], *aux))
+
+
+def packed_to_device_shard(p, n: int, c: int, k: int
+                           ) -> Tuple[jax.Array, jax.Array]:
+    """Element-packed (tril_size(n),) -> device ``k``'s extended triangle
+    block ``(off[k] (T, nb, nb), diag[k] (nb, nb))`` — and ONLY that
+    device's shard.
+
+    This is the straggler-eviction recovery path: when one device of a
+    P = c(c+1) wire is replaced, the survivor shards are already
+    resident, so the replacement needs just its own ~n²/(2P) words.  The
+    gather is (T+1)·nb contiguous width-nb slices of the packed vector
+    (the per-device rows of :func:`~repro.core.twodim.
+    tb_device_row_starts`) + one vectorized mask — never the full
+    P-shard :meth:`ShardedTriTiles.from_packed`, never a dense n×n.
+
+    Bit-for-bit equal to ``ShardedTriTiles.from_packed(p, n, c).off[k]``
+    / ``.diag[k]`` (asserted in the persist test suite).
+    """
+    from .twodim import tb_device_row_starts
+    assert p.shape[-1] == tril_size(n), (p.shape, n)
+    starts, is_diag, valid = tb_device_row_starts(c, n, k)
+    Tslots, nb = starts.shape
+    lpad = tril_size(c * c * nb)
+    u, v = _iota2((Tslots, nb, nb), 1, 2)
+    keep = jnp.logical_and(
+        jnp.asarray(valid)[:, None, None],
+        jnp.logical_or(~jnp.asarray(is_diag)[:, None, None], u >= v))
+
+    def one(pv):
+        pv = jnp.pad(pv, (0, lpad - pv.shape[0]))
+        blocks = _gather_rows(pv, starts.reshape(-1), nb)
+        blocks = blocks.reshape(Tslots, nb, nb)
+        return jnp.where(keep, blocks, jnp.zeros((), blocks.dtype))
+
+    blocks = _over_batch(one, p, 1)
+    return blocks[..., :Tslots - 1, :, :], blocks[..., Tslots - 1, :, :]

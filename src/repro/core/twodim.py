@@ -214,6 +214,46 @@ def tb_block_tables(c: int) -> Tuple[np.ndarray, np.ndarray]:
     return src, dst
 
 
+@functools.lru_cache(maxsize=256)
+def tb_device_row_starts(c: int, n1: int, k: int
+                         ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Slice-granular packed-offset tables for ONE device's extended
+    triangle block — the straggler-replacement rebuild path.
+
+    Device ``k`` of the c(c+1) partition owns T+1 = c(c−1)/2 + 1 grid
+    blocks (``tb_block_tables`` dst row k).  Returns
+
+      * ``starts`` (T+1, nb) int32: packed offset of intra-block row u of
+        owned block t — matrix row bi·nb+u, columns bj·nb…, i.e. each
+        (block, row) pair is one contiguous width-nb slice of the packed
+        triangle (padded to tril_size(c²·nb));
+      * ``is_diag`` (T+1,) bool: grid-diagonal blocks whose intra-block
+        upper halves must be masked;
+      * ``valid`` (T+1,) bool: False only for the diagonal slot of
+        devices that own no diagonal block (the ``dst`` sentinel).
+
+    Rebuilding one device therefore costs (T+1)·nb slice gathers —
+    ~n²/(2P) words — instead of the full P-shard ``from_packed``.
+    """
+    _, dst = tb_block_tables(c)
+    from .packing import tile_tril_coords
+    nblocks = c * c
+    nb = -(-n1 // nblocks)
+    coords = tile_tril_coords(nblocks)            # (Tb, 2) row-major tril
+    Tb = coords.shape[0]
+    f = dst[k].astype(np.int64)                   # (T+1,) grid block ids
+    valid = f < Tb
+    fv = np.where(valid, f, 0)
+    bi, bj = coords[fv, 0], coords[fv, 1]         # (T+1,)
+    u = np.arange(nb, dtype=np.int64)
+    rr = bi[:, None] * nb + u[None, :]            # (T+1, nb) matrix rows
+    starts = (rr * (rr + 1) // 2 + bj[:, None] * nb).astype(np.int32)
+    is_diag = (bi == bj) & valid
+    for arr in (starts, is_diag, valid):
+        arr.setflags(write=False)
+    return starts, is_diag, valid
+
+
 # --------------------------------------------------------------------------
 # the all-to-all row exchange (Alg 10 lines 3–14)
 # --------------------------------------------------------------------------

@@ -1,4 +1,4 @@
-"""Atomic, shard-aware, restart-safe checkpointing.
+"""Atomic, shard-aware, restart-safe, packed-native checkpointing.
 
 Layout (one directory per step, committed by atomic rename):
 
@@ -10,15 +10,29 @@ Guarantees:
   * **Atomicity** — leaves + manifest are written into
     ``step_N.tmp-<pid>`` and the directory is ``os.rename``d only after
     every file is fsynced; a crash mid-save never corrupts an existing
-    checkpoint and never leaves a half-readable new one.
+    checkpoint and never leaves a half-readable new one.  Orphaned
+    ``step_*.tmp-*`` directories from crashed saves are swept by the
+    retention pass (live writers are never touched).
   * **Integrity** — every leaf carries a crc32 in the manifest, checked
     on restore; a torn file fails loudly instead of silently training on
     garbage.
-  * **Elasticity** — leaves are stored as *full logical arrays*, so a
-    restore may target a mesh with a different device count / topology
-    (see distributed/elastic.py).  At 1000+-node scale one would stripe
-    shard files per host behind the same manifest; the commit protocol
-    and addressing below are unchanged by that swap.
+  * **Packed-native symmetric state** — pytree leaves that are
+    :class:`~repro.core.packing.TriTiles`,
+    :class:`~repro.core.packing.ShardedTriTiles`, or
+    :class:`~repro.core.packing.PackedTriangle` are stored as their
+    element-packed triangle words (f32/f64 narrowed to bf16 by default:
+    ~4× fewer bytes than the dense f32 matrix, ~2× fewer than dense
+    bf16) with the layout metadata (``n``, ``c``/``bm``, source dtype)
+    in the manifest.  Restore rebuilds whatever layout the ``like``
+    leaf asks for through the slice/block-granular converters — a
+    ``ShardedTriTiles`` saved at P = c(c+1) devices restores onto a
+    *different* device count (``like``'s ``c′``) without ever
+    materializing a dense n×n (see distributed/elastic.py).
+  * **Elasticity** — plain leaves are stored as *full logical arrays*,
+    so a restore may target a mesh with a different device count /
+    topology.  At 1000+-node scale one would stripe shard files per
+    host behind the same manifest; the commit protocol and addressing
+    below are unchanged by that swap.
   * **Async** — ``save_checkpoint(..., blocking=False)`` snapshots
     device arrays to host and writes in a background thread, overlapping
     the serialization with subsequent training steps.  Call
@@ -38,9 +52,26 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from ..core.packing import (PackedTriangle, ShardedTriTiles, TriTiles,
+                            unpack_tril)
+
 _STEP_RE = re.compile(r"^step_(\d{8})$")
+_TMP_RE = re.compile(r"^step_\d{8}\.tmp-(\d+)-\d+$")
+_OLD_RE = re.compile(r"^step_(\d{8})\.old$")
 _PENDING: List[threading.Thread] = []
 _PENDING_LOCK = threading.Lock()
+#: tmp directories this process is actively writing (guarded by
+#: _PENDING_LOCK) — the orphan sweep must never touch them
+_ACTIVE_TMP: set = set()
+
+#: default narrow dtype for packed symmetric leaves (None = keep source)
+PACKED_DTYPE = "bfloat16"
+
+_PACKED_TYPES = (TriTiles, ShardedTriTiles, PackedTriangle)
+
+
+def _is_packed_leaf(x) -> bool:
+    return isinstance(x, _PACKED_TYPES)
 
 
 def _leaf_key(path) -> str:
@@ -50,7 +81,9 @@ def _leaf_key(path) -> str:
 
 
 def _flatten(tree: Any) -> List[Tuple[str, Any]]:
-    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    """(key, leaf) pairs; packed symmetric formats are ONE leaf each."""
+    leaves = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=_is_packed_leaf)[0]
     out = []
     seen: Dict[str, int] = {}
     for path, leaf in leaves:
@@ -62,6 +95,65 @@ def _flatten(tree: Any) -> List[Tuple[str, Any]]:
             seen[k] = 0
         out.append((k, leaf))
     return out
+
+
+def _packed_meta(leaf) -> Dict[str, Any]:
+    """Manifest layout metadata for one packed symmetric leaf."""
+    if isinstance(leaf, ShardedTriTiles):
+        return {"format": "sharded_tritiles", "n": leaf.n, "c": leaf.c,
+                "fill": "sym", "source_dtype": str(leaf.dtype)}
+    if isinstance(leaf, TriTiles):
+        return {"format": "tritiles", "n": leaf.n, "bm": leaf.bm,
+                "fill": "sym", "source_dtype": str(leaf.dtype)}
+    return {"format": "packed_triangle", "n": leaf.n, "fill": "sym",
+            "source_dtype": str(leaf.dtype)}
+
+
+def _narrow(arr: np.ndarray, packed_dtype: Optional[str]) -> np.ndarray:
+    """Narrow wide-float packed words to the storage dtype (default
+    bf16).  Integer / already-narrow leaves are stored as-is."""
+    if packed_dtype is None or arr.dtype not in (np.float32, np.float64):
+        return arr
+    import ml_dtypes
+    return arr.astype(np.dtype(getattr(ml_dtypes, packed_dtype)))
+
+
+def _host_packed(leaf, packed_dtype: Optional[str]
+                 ) -> Tuple[np.ndarray, Dict[str, Any]]:
+    """Packed leaf -> (host packed words, manifest layout meta).  The
+    ``to_packed`` exits are the block/slice-granular converters — no
+    dense n×n is built on the way to disk."""
+    meta = _packed_meta(leaf)
+    vec = leaf.vec if isinstance(leaf, PackedTriangle) else leaf.to_packed()
+    return _narrow(np.asarray(vec), packed_dtype), meta
+
+
+def _rebuild_packed(arr: np.ndarray, meta: Dict[str, Any], like: Any):
+    """Stored packed words -> the layout ``like`` asks for.
+
+    The layout parameters come from ``like`` (its ``c``/``bm`` may
+    differ from the saving run's — this IS the elastic restore path);
+    ``n`` must match the manifest.  All rebuilds route through the
+    block/slice-granular ``from_packed`` converters.
+    """
+    import jax.numpy as jnp
+    n = int(meta["n"])
+    vec = jnp.asarray(arr)
+    if _is_packed_leaf(like):
+        if like.n != n:
+            raise ValueError(f"packed leaf dimension mismatch: checkpoint "
+                             f"has n={n}, restore target has n={like.n}")
+        vec = vec.astype(like.dtype)
+        if isinstance(like, ShardedTriTiles):
+            return ShardedTriTiles.from_packed(vec, n, like.c)
+        if isinstance(like, TriTiles):
+            return TriTiles.from_packed(vec, n, like.bm)
+        return PackedTriangle(vec, n)
+    # dense restore target: rebuild the symmetric matrix explicitly
+    want_dtype = getattr(like, "dtype", vec.dtype)
+    dense = unpack_tril(vec.astype(jnp.float32), n, diag=True,
+                        symmetric=True)
+    return dense.astype(want_dtype)
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
@@ -78,40 +170,68 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
 
 def _write(ckpt_dir: str, step: int, host_leaves: List[Tuple[str,
                                                              np.ndarray]],
-           keep: int, extra: Dict[str, Any]) -> str:
+           keep: int, extra: Dict[str, Any],
+           packed_meta: Optional[Dict[str, Dict[str, Any]]] = None) -> str:
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = final + f".tmp-{os.getpid()}-{threading.get_ident()}"
-    os.makedirs(tmp, exist_ok=True)
-    manifest = {"step": step, "leaves": {}, "extra": extra}
-    for key, arr in host_leaves:
-        fn = os.path.join(tmp, key + ".npy")
-        with open(fn, "wb") as f:
-            np.save(f, arr)
+    with _PENDING_LOCK:
+        _ACTIVE_TMP.add(tmp)
+    try:
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {"step": step, "leaves": {}, "extra": extra}
+        for key, arr in host_leaves:
+            fn = os.path.join(tmp, key + ".npy")
+            with open(fn, "wb") as f:
+                np.save(f, arr)
+                f.flush()
+                os.fsync(f.fileno())
+            with open(fn, "rb") as f:
+                crc = zlib.crc32(f.read())
+            entry = {"shape": list(arr.shape), "dtype": str(arr.dtype),
+                     "crc": crc, "bytes": arr.nbytes}
+            if packed_meta and key in packed_meta:
+                entry["packed"] = packed_meta[key]
+            manifest["leaves"][key] = entry
+        mf = os.path.join(tmp, "manifest.json")
+        with open(mf, "w") as f:
+            json.dump(manifest, f)
             f.flush()
             os.fsync(f.fileno())
-        with open(fn, "rb") as f:
-            crc = zlib.crc32(f.read())
-        manifest["leaves"][key] = {
-            "shape": list(arr.shape), "dtype": str(arr.dtype), "crc": crc}
-    mf = os.path.join(tmp, "manifest.json")
-    with open(mf, "w") as f:
-        json.dump(manifest, f)
-        f.flush()
-        os.fsync(f.fileno())
-    if os.path.exists(final):      # same step re-saved: replace atomically
-        os.rename(final, final + ".old")
-        os.rename(tmp, final)
-        import shutil
-        shutil.rmtree(final + ".old", ignore_errors=True)
-    else:
-        os.rename(tmp, final)
+        if os.path.exists(final):  # same step re-saved: replace atomically
+            os.rename(final, final + ".old")
+            os.rename(tmp, final)
+            import shutil
+            shutil.rmtree(final + ".old", ignore_errors=True)
+        else:
+            os.rename(tmp, final)
+    finally:
+        with _PENDING_LOCK:
+            _ACTIVE_TMP.discard(tmp)
     _retire(ckpt_dir, keep)
     return final
 
 
+def _pid_alive(pid: int) -> bool:
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except OSError:
+        pass                       # EPERM etc.: some process owns the pid
+    return True
+
+
 def _retire(ckpt_dir: str, keep: int) -> None:
+    """Retention + crash cleanup.
+
+    Retires committed checkpoints beyond the newest ``keep``, then
+    sweeps debris from crashed saves: ``step_*.tmp-*`` directories whose
+    writer is gone (never this process' in-flight saves, never a live
+    foreign writer), and ``step_*.old`` replace-leftovers — restoring an
+    ``.old`` to ``final`` first when the crash landed between the two
+    renames and the ``.old`` is the only complete copy.
+    """
     import shutil
-    steps = sorted(s for s in (latest_step(ckpt_dir),) if s is not None)
     all_steps = []
     for name in os.listdir(ckpt_dir):
         m = _STEP_RE.match(name)
@@ -120,13 +240,42 @@ def _retire(ckpt_dir: str, keep: int) -> None:
     for s in sorted(all_steps)[:-keep] if keep > 0 else []:
         shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
                       ignore_errors=True)
-    del steps
+    for name in os.listdir(ckpt_dir):
+        path = os.path.join(ckpt_dir, name)
+        m = _OLD_RE.match(name)
+        if m:
+            final = os.path.join(ckpt_dir, f"step_{m.group(1)}")
+            if not os.path.exists(final) and os.path.exists(
+                    os.path.join(path, "manifest.json")):
+                os.rename(path, final)   # crash between renames: recover
+            else:
+                shutil.rmtree(path, ignore_errors=True)
+            continue
+        m = _TMP_RE.match(name)
+        if not m:
+            continue
+        with _PENDING_LOCK:
+            if path in _ACTIVE_TMP:
+                continue           # this process is mid-save here
+        pid = int(m.group(1))
+        if pid != os.getpid() and _pid_alive(pid):
+            continue               # a live foreign writer owns it
+        shutil.rmtree(path, ignore_errors=True)
 
 
 def save_checkpoint(ckpt_dir: str, step: int, tree: Any, *,
                     keep: int = 3, blocking: bool = True,
-                    extra: Optional[Dict[str, Any]] = None) -> None:
+                    extra: Optional[Dict[str, Any]] = None,
+                    packed_dtype: Optional[str] = PACKED_DTYPE) -> None:
     """Snapshot ``tree`` (params/opt_state/anything pytree) at ``step``.
+
+    Packed symmetric leaves (TriTiles / ShardedTriTiles /
+    PackedTriangle) are stored as their element-packed words, f32/f64
+    narrowed to ``packed_dtype`` (default bf16 — ~4× fewer bytes than
+    the dense f32 matrix; pass ``packed_dtype=None`` to keep the source
+    dtype bit-exactly).  bf16-stored state (e.g. a
+    ``GramMonitor(out_dtype=bf16)`` EMA) round-trips bit-exactly either
+    way.
 
     With ``blocking=False`` the device->host copies happen here (cheap,
     ordered before any later donation) and file IO runs on a background
@@ -134,14 +283,23 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Any, *,
     below is still safe — ``np.asarray`` materializes before return.
     """
     os.makedirs(ckpt_dir, exist_ok=True)
-    host_leaves = [(k, np.asarray(v)) for k, v in _flatten(tree)]
+    host_leaves: List[Tuple[str, np.ndarray]] = []
+    packed_meta: Dict[str, Dict[str, Any]] = {}
+    for k, v in _flatten(tree):
+        if _is_packed_leaf(v):
+            arr, meta = _host_packed(v, packed_dtype)
+            packed_meta[k] = meta
+        else:
+            arr = np.asarray(v)
+        host_leaves.append((k, arr))
     extra = extra or {}
     if blocking:
-        _write(ckpt_dir, step, host_leaves, keep, extra)
+        _write(ckpt_dir, step, host_leaves, keep, extra, packed_meta)
         return
 
     th = threading.Thread(
-        target=_write, args=(ckpt_dir, step, host_leaves, keep, extra),
+        target=_write,
+        args=(ckpt_dir, step, host_leaves, keep, extra, packed_meta),
         daemon=True)
     th.start()
     with _PENDING_LOCK:
@@ -155,16 +313,56 @@ def wait_for_saves() -> None:
         th.join()
 
 
+def checkpoint_bytes(ckpt_dir: str, step: Optional[int] = None
+                     ) -> Dict[str, Any]:
+    """Per-leaf and total on-disk payload bytes of one checkpoint (from
+    the manifest — what the persistence benchmark and the README bytes
+    table report)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    with open(os.path.join(ckpt_dir, f"step_{step:08d}",
+                           "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves = {k: m.get("bytes", 0) for k, m in manifest["leaves"].items()}
+    return {"step": step, "total": sum(leaves.values()), "leaves": leaves}
+
+
+def _load_leaf(d: str, key: str, meta: Dict[str, Any]) -> np.ndarray:
+    fn = os.path.join(d, key + ".npy")
+    with open(fn, "rb") as f:
+        raw = f.read()
+    if zlib.crc32(raw) != meta["crc"]:
+        raise IOError(f"crc mismatch for {key!r} — torn checkpoint?")
+    import io
+    arr = np.load(io.BytesIO(raw))
+    if arr.dtype.kind == "V":
+        # ml_dtypes (bfloat16, f8...) round-trip np.save as raw void
+        import ml_dtypes
+        arr = arr.view(np.dtype(getattr(ml_dtypes, meta["dtype"])))
+    return arr
+
+
 def restore_checkpoint(ckpt_dir: str, like: Any, *,
                        step: Optional[int] = None,
                        shardings: Optional[Any] = None
                        ) -> Tuple[int, Any]:
     """Restore the newest (or ``step``) checkpoint into the structure of
-    ``like`` (a pytree of arrays or ShapeDtypeStructs).
+    ``like`` (a pytree of arrays / ShapeDtypeStructs / packed symmetric
+    formats).
 
-    ``shardings`` — optional pytree of NamedShardings (same structure);
-    when given, each leaf is placed with it (this is the elastic-restore
-    path: the mesh may differ from the one that saved).
+    Packed manifest leaves rebuild into whatever layout the matching
+    ``like`` leaf asks for: a ``ShardedTriTiles`` like with a different
+    ``c`` re-shards onto the new device count through the
+    block-granular converters (the elastic path — no dense n×n is ever
+    built); a plain dense ``like`` gets the mirrored symmetric matrix.
+    Conversely a packed ``like`` accepts a legacy dense-stored leaf.
+
+    ``shardings`` — optional pytree of NamedShardings (same structure,
+    packed formats counting as ONE leaf); when given, each restored
+    leaf is placed with it (a single sharding per packed leaf is
+    broadcast over its component arrays).
     """
     if step is None:
         step = latest_step(ckpt_dir)
@@ -174,31 +372,38 @@ def restore_checkpoint(ckpt_dir: str, like: Any, *,
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
 
-    keys = [k for k, _ in _flatten(like)]
-    shard_leaves = jax.tree_util.tree_leaves(shardings) \
+    flat_like = _flatten(like)
+    keys = [k for k, _ in flat_like]
+    shard_leaves = jax.tree_util.tree_leaves(
+        shardings, is_leaf=_is_packed_leaf) \
         if shardings is not None else [None] * len(keys)
     if len(shard_leaves) not in (len(keys), 0):
         raise ValueError("shardings structure mismatch")
 
     loaded = []
-    for key, sh in zip(keys, shard_leaves):
+    for (key, lk), sh in zip(flat_like, shard_leaves):
         meta = manifest["leaves"].get(key)
         if meta is None:
             raise KeyError(f"checkpoint missing leaf {key!r}")
-        fn = os.path.join(d, key + ".npy")
-        with open(fn, "rb") as f:
-            raw = f.read()
-        if zlib.crc32(raw) != meta["crc"]:
-            raise IOError(f"crc mismatch for {key!r} — torn checkpoint?")
-        import io
-        arr = np.load(io.BytesIO(raw))
-        if arr.dtype.kind == "V":
-            # ml_dtypes (bfloat16, f8...) round-trip np.save as raw void
-            import ml_dtypes
-            arr = arr.view(np.dtype(getattr(ml_dtypes, meta["dtype"])))
+        arr = _load_leaf(d, key, meta)
+        if "packed" in meta:
+            leaf = _rebuild_packed(arr, meta["packed"], lk)
+        elif _is_packed_leaf(lk):
+            # legacy dense-stored symmetric leaf -> packed target
+            import jax.numpy as jnp
+            dense = jnp.asarray(arr)
+            if isinstance(lk, ShardedTriTiles):
+                leaf = ShardedTriTiles.from_tril(
+                    jnp.tril(dense), lk.c).astype(lk.dtype)
+            elif isinstance(lk, TriTiles):
+                leaf = TriTiles.from_tril(dense, lk.bm).astype(lk.dtype)
+            else:
+                leaf = PackedTriangle.from_dense(dense).astype(lk.dtype)
+        else:
+            leaf = arr
         if sh is not None:
-            arr = jax.device_put(arr, sh)
-        loaded.append(arr)
+            leaf = jax.device_put(leaf, sh)
+        loaded.append(leaf)
 
-    treedef = jax.tree_util.tree_structure(like)
+    treedef = jax.tree_util.tree_structure(like, is_leaf=_is_packed_leaf)
     return step, jax.tree_util.tree_unflatten(treedef, loaded)

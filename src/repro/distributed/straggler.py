@@ -13,13 +13,20 @@ monitor below implements the standard telemetry:
     elastically — see elastic.py).
 
 The same object doubles as the step timer used by launch/train.py.
+
+Eviction recovery for packed symmetric state is local:
+:func:`rebuild_replacement_shard` reconstructs ONLY the replacement
+device's extended triangle block from the packed checkpoint vector —
+O(n²/P) words gathered via the slice-granular offset tables
+(:func:`~repro.core.twodim.tb_device_row_starts`) — instead of
+re-sharding the whole wire (O(n²/2)) or densifying (O(n²)).
 """
 from __future__ import annotations
 
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, List, Optional
+from typing import Deque, List, Optional, Tuple
 
 
 @dataclass
@@ -102,3 +109,20 @@ class StepTimer:
         else:
             self.event = None
         return False
+
+
+def rebuild_replacement_shard(packed, n: int, c: int, k: int
+                              ) -> Tuple["jax.Array", "jax.Array"]:
+    """Rebuild device ``k``'s shard of a P = c(c+1) ``ShardedTriTiles``
+    wire from the element-packed checkpoint vector.
+
+    This is the ``evict`` leg of the escalation policy: after the
+    scheduler swaps a straggling host, only the replacement needs state
+    — the survivors keep theirs.  Returns ``(off, diag)`` with shapes
+    ``(T, nb, nb)`` / ``(nb, nb)`` (T = c(c-1)/2 off-diagonal slots),
+    matching ``ShardedTriTiles.off[k]`` / ``.diag[k]`` exactly, built by
+    one slice-granular gather from ``packed`` — no dense n×n, no other
+    device's blocks ever touched.
+    """
+    from ..core.packing import packed_to_device_shard
+    return packed_to_device_shard(packed, n, c, k)

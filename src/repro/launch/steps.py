@@ -48,15 +48,20 @@ def describe_blas_routing(params_shape, mesh, axis: str = "model",
 
 
 def make_optimizer(cfg: ArchConfig, name: str = "adamw", lr: float = 3e-4,
-                   mesh=None):
+                   mesh=None, track_gram: bool = False):
+    """``track_gram``: EMA a packed momentum-Gram per 2D matrix param in
+    the Muon state (``MuonState.gram`` — m(m+1)/2 words each, stored as
+    typed ``PackedTriangle`` leaves that the checkpoint layer persists
+    packed).  Ignored by the AdamW family."""
+    gd = 0.99 if track_gram else None
     if name == "adamw":
         return AdamW(lr=lr)
     if name == "adamw8bit":
         return AdamW(lr=lr, quantize_moments=True)
     if name == "muon":
-        return Muon(lr=2e-2, mode="reference")
+        return Muon(lr=2e-2, mode="reference", gram_decay=gd)
     if name == "muon-syrk":
-        return Muon(lr=2e-2, mode="syrk-1d", mesh=mesh)
+        return Muon(lr=2e-2, mode="syrk-1d", mesh=mesh, gram_decay=gd)
     raise ValueError(name)
 
 

@@ -36,9 +36,9 @@ from jax.sharding import PartitionSpec as P
 from repro.configs import get_config, get_smoke_config
 from repro.data import DataConfig, make_train_iterator
 from repro.distributed import (ErrorFeedbackInt8, StepTimer,
-                               StragglerMonitor, latest_step, plan_mesh,
-                               restore_checkpoint, save_checkpoint,
-                               wait_for_saves)
+                               StragglerMonitor, checkpoint_bytes,
+                               latest_step, plan_mesh, restore_checkpoint,
+                               save_checkpoint, wait_for_saves)
 from repro.compat import use_mesh
 from repro.launch.steps import (describe_blas_routing, make_optimizer,
                                 make_train_step)
@@ -72,7 +72,8 @@ def train(args) -> Dict[str, Any]:
         raise SystemExit(f"--global-batch must divide data axis {dp}")
     cfg = build_config(args)
 
-    opt = make_optimizer(cfg, args.optimizer, lr=args.lr, mesh=mesh)
+    opt = make_optimizer(cfg, args.optimizer, lr=args.lr, mesh=mesh,
+                         track_gram=args.track_gram)
     compressor = ErrorFeedbackInt8() if args.compress_grads else None
     step_fn = make_train_step(cfg, opt, microbatches=args.microbatches,
                               loss_chunk=args.loss_chunk,
@@ -171,6 +172,8 @@ def train(args) -> Dict[str, Any]:
            / max(args.steps - start_step, 1),
            "straggler_events": len(monitor.events),
            "resumed": resumed, "mesh": dict(mesh.shape)}
+    if args.ckpt_dir:
+        out["ckpt_bytes"] = checkpoint_bytes(args.ckpt_dir)["total"]
     print("[train] done:", json.dumps(out))
     return out
 
@@ -221,6 +224,10 @@ def build_argparser():
     ap.add_argument("--loss-chunk", type=int, default=256)
     ap.add_argument("--max-model", type=int, default=4)
     ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--track-gram", action="store_true",
+                    help="EMA packed momentum-Grams in the Muon state "
+                         "(typed PackedTriangle leaves; the checkpoint "
+                         "layer stores them packed bf16)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--ckpt-keep", type=int, default=3)

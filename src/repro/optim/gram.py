@@ -24,7 +24,8 @@ from jax.sharding import Mesh
 
 from .. import blas
 from ..core.dispatch import choose_algorithm
-from ..core.packing import TriTiles, tril_size, unpack_tril
+from ..core.packing import (PackedTriangle, TriTiles, tril_size,
+                            unpack_tril)
 
 import numpy as np
 
@@ -130,6 +131,32 @@ class GramMonitor:
             ema = self.decay * self._state[name].astype(jnp.float32) \
                 + (1.0 - self.decay) * g
             self._state[name] = ema.astype(store)
+
+    def state_dict(self) -> Dict[str, PackedTriangle]:
+        """The EMA'd Grams as typed packed leaves for
+        :func:`~repro.distributed.save_checkpoint` — each is a
+        :class:`PackedTriangle` carrying its own ``n``, so the
+        persistence layer stores d(d+1)/2 words (bf16 on disk by
+        default) and can rebuild any layout on restore."""
+        return {name: PackedTriangle(v, self._dims[name])
+                for name, v in self._state.items()}
+
+    def load_state_dict(self, sd: Dict[str, Any]) -> None:
+        """Inverse of :meth:`state_dict`; also accepts raw packed
+        vectors (n inferred from the triangle length)."""
+        for name, leaf in sd.items():
+            if isinstance(leaf, PackedTriangle):
+                vec, d = leaf.vec, leaf.n
+            else:
+                vec = jnp.asarray(leaf)
+                d = int((np.sqrt(8 * vec.shape[-1] + 1) - 1) / 2)
+                if tril_size(d) != vec.shape[-1]:
+                    raise ValueError(
+                        f"{name}: length {vec.shape[-1]} is not a "
+                        "triangle number")
+            store = self.out_dtype or jnp.float32
+            self._state[name] = vec.astype(store)
+            self._dims[name] = d
 
     def tritiles(self, name: str, bm: int = 128) -> TriTiles:
         """The EMA'd packed Gram as a :class:`TriTiles` (pure scatter,

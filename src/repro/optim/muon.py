@@ -33,7 +33,8 @@ from jax.sharding import PartitionSpec as P
 from .. import blas
 from ..compat import shard_map
 from ..core.onedim import syrk_1d_local
-from ..core.packing import pack_tril, tril_size, unpack_tril
+from ..core.packing import (PackedTriangle, pack_tril, tril_size,
+                            unpack_tril)
 
 # quintic Newton–Schulz coefficients (Jordan et al., Muon)
 NS_COEFFS = (3.4445, -4.7750, 2.0315)
@@ -42,6 +43,10 @@ NS_COEFFS = (3.4445, -4.7750, 2.0315)
 class MuonState(NamedTuple):
     step: jax.Array
     momentum: Any
+    #: optional per-matrix Gram EMA of the momentum (packed lower
+    #: triangles, m(m+1)/2 words each) — curvature telemetry that
+    #: checkpoints packed; None unless ``Muon.gram_decay`` is set.
+    gram: Any = None
 
 
 # ---------------------------------------------------------------------------
@@ -197,12 +202,28 @@ class Muon:
     #: stream NS Grams over column chunks of this size via the SYRK
     #: beta-accumulate epilogue (None = one-shot)
     gram_chunk: Optional[int] = None
+    #: EMA decay for a packed momentum-Gram per 2D matrix param
+    #: (curvature telemetry; ``MuonState.gram``).  The Gram is the
+    #: short-side ``blas.syrk(fill="packed")`` — m(m+1)/2 words of
+    #: state, never densified; None disables tracking.
+    gram_decay: Optional[float] = None
+
+    def _gram_zero(self, p: jax.Array):
+        if _is_matrix(p) and p.ndim == 2:
+            m = min(p.shape)
+            return PackedTriangle(jnp.zeros((tril_size(m),), jnp.float32),
+                                  m)
+        return jnp.zeros((0,), jnp.float32)   # structure placeholder
 
     def init(self, params: Any) -> MuonState:
+        gram = None
+        if self.gram_decay is not None:
+            gram = jax.tree.map(self._gram_zero, params)
         return MuonState(
             step=jnp.zeros((), jnp.int32),
             momentum=jax.tree.map(
-                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+                lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            gram=gram)
 
     def _use_1d(self, n1: int, n2: int) -> bool:
         """The paper's regime selection (Thm 9 / §VIII-D): the packed
@@ -262,4 +283,37 @@ class Muon:
                     ).astype(p.dtype)
 
         new_params = jax.tree.map(upd, params, mom)
-        return new_params, MuonState(step=step, momentum=mom)
+
+        gram = state.gram
+        if self.gram_decay is not None and gram is not None:
+            d = self.gram_decay
+
+            def upd_gram(gm, mm):
+                if not isinstance(gm, PackedTriangle):
+                    return gm
+                x = mm if mm.shape[0] <= mm.shape[1] else mm.T
+                g = blas.syrk(x.astype(jnp.float32),
+                              fill="packed") / x.shape[-1]
+                ema = d * gm.vec.astype(jnp.float32) + (1.0 - d) * g
+                return PackedTriangle(ema.astype(gm.dtype), gm.n)
+
+            gram = jax.tree.map(
+                upd_gram, gram, mom,
+                is_leaf=lambda x: isinstance(x, PackedTriangle))
+        return new_params, MuonState(step=step, momentum=mom, gram=gram)
+
+
+def state_dict(state: MuonState) -> dict:
+    """MuonState as a stable-keyed dict pytree for
+    :func:`~repro.distributed.save_checkpoint` — the ``gram`` entry is
+    a tree of typed :class:`PackedTriangle` leaves, which the
+    persistence layer stores packed (bf16 words on disk)."""
+    return {"step": state.step, "momentum": state.momentum,
+            "gram": state.gram}
+
+
+def load_state_dict(d: dict) -> MuonState:
+    """Inverse of :func:`state_dict` (``gram`` optional for states
+    saved before gram tracking existed)."""
+    return MuonState(step=d["step"], momentum=d["momentum"],
+                     gram=d.get("gram"))

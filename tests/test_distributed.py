@@ -9,12 +9,13 @@ import numpy as np
 import pytest
 
 from repro.distributed import (ErrorFeedbackInt8, StragglerMonitor,
-                               compressed_allreduce, dequantize_int8,
-                               latest_step, plan_mesh, quantize_int8,
-                               reshard_tree, restore_checkpoint,
-                               save_checkpoint, wait_for_saves)
+                               checkpoint_bytes, compressed_allreduce,
+                               dequantize_int8, latest_step, plan_mesh,
+                               quantize_int8, reshard_tree,
+                               restore_checkpoint, save_checkpoint,
+                               wait_for_saves)
 from repro.distributed.compression import wire_bytes_per_device
-from repro.distributed.elastic import validate_divisibility
+from repro.distributed.elastic import spec_tree_like, validate_divisibility
 
 
 # ------------------------------------------------------------------ #
@@ -84,6 +85,82 @@ def test_checkpoint_extra_metadata(tmp_path):
     assert m["extra"]["mesh"] == [2, 4]
 
 
+def test_checkpoint_bf16_void_view_roundtrip(tmp_path):
+    """ml_dtypes leaves hit np.save as raw void; restore must view them
+    back bit-exactly."""
+    import ml_dtypes
+    x = (jnp.arange(37, dtype=jnp.float32) * 0.37).astype(jnp.bfloat16)
+    save_checkpoint(str(tmp_path), 2, {"x": x})
+    # the on-disk array really is void (the round-trip is non-trivial)
+    d = os.path.join(tmp_path, "step_00000002")
+    raw = np.load(os.path.join(d, next(f for f in os.listdir(d)
+                                       if f.endswith(".npy"))))
+    assert raw.dtype.kind == "V"
+    _, back = restore_checkpoint(str(tmp_path), jax.eval_shape(
+        lambda: {"x": x}))
+    assert np.asarray(back["x"]).dtype == np.dtype(ml_dtypes.bfloat16)
+    np.testing.assert_array_equal(
+        np.asarray(back["x"]).view(np.uint16),
+        np.asarray(x).view(np.uint16))
+
+
+def _sym(n, seed=0):
+    a = np.random.default_rng(seed).standard_normal((n, n))
+    return jnp.asarray((a + a.T) / 2, jnp.float32)
+
+
+def test_checkpoint_packed_leaf_roundtrip(tmp_path):
+    """Typed packed leaves store as ONE packed-vector file each (bf16 by
+    default: < 0.30x the dense f32 bytes) and rebuild their layout."""
+    from repro.core.packing import (PackedTriangle, ShardedTriTiles,
+                                    TriTiles, pack_tril)
+    n = 24
+    s = _sym(n)
+    tree = {"pt": PackedTriangle.from_dense(s),
+            "tt": TriTiles.from_tril(jnp.tril(s), 8),
+            "st": ShardedTriTiles.from_tril(jnp.tril(s), 2)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    b = checkpoint_bytes(str(tmp_path))
+    for k in ("pt", "tt", "st"):
+        assert b["leaves"][k] <= 0.30 * n * n * 4, (k, b["leaves"][k])
+    _, back = restore_checkpoint(str(tmp_path), tree)
+    want = np.asarray(pack_tril(jnp.tril(s)), np.float32)
+    for k in ("pt", "tt", "st"):
+        got = back[k].vec if k == "pt" else back[k].to_packed()
+        np.testing.assert_allclose(np.asarray(got, np.float32), want,
+                                   rtol=1e-2, atol=1e-2)  # bf16 narrow
+    # bit-exact when the narrow pass is disabled
+    save_checkpoint(str(tmp_path), 2, tree, packed_dtype=None)
+    _, back = restore_checkpoint(str(tmp_path), tree)
+    np.testing.assert_array_equal(np.asarray(back["st"].to_packed()), want)
+
+
+def test_checkpoint_packed_to_dense_like(tmp_path):
+    """A packed-stored leaf restores into a dense like as the mirrored
+    symmetric matrix (legacy consumer path)."""
+    from repro.core.packing import PackedTriangle
+    n = 16
+    s = _sym(n, 3)
+    save_checkpoint(str(tmp_path), 1, {"g": PackedTriangle.from_dense(s)},
+                    packed_dtype=None)
+    _, back = restore_checkpoint(
+        str(tmp_path), {"g": jax.ShapeDtypeStruct((n, n), jnp.float32)})
+    np.testing.assert_array_equal(np.asarray(back["g"]), np.asarray(s))
+
+
+def test_retire_sweeps_orphaned_tmp_dirs(tmp_path):
+    """Crash debris (tmp dirs from a dead pid) is swept by the next
+    save's retention pass; a live writer's tmp dir is left alone."""
+    save_checkpoint(str(tmp_path), 1, _tree())
+    dead = os.path.join(tmp_path, "step_00000099.tmp-999999999-1")
+    live = os.path.join(tmp_path, "step_00000098.tmp-1-1")  # pid 1: alive
+    os.makedirs(dead)
+    os.makedirs(live)
+    save_checkpoint(str(tmp_path), 2, _tree())
+    assert not os.path.exists(dead), "orphaned tmp dir must be swept"
+    assert os.path.exists(live), "a live writer's tmp dir must survive"
+
+
 # ------------------------------------------------------------------ #
 # elastic
 # ------------------------------------------------------------------ #
@@ -113,6 +190,49 @@ def test_reshard_roundtrip_smaller_world(tmp_path):
     placed = reshard_tree(back, {"x": P("model", None)}, mesh_b)
     np.testing.assert_array_equal(np.asarray(placed["x"]), np.asarray(x))
     assert placed["x"].sharding.mesh.shape["model"] == half
+
+
+def test_reshard_tritiles_bit_exact():
+    """c=2 wire -> c=3 wire via the element bijection, bit-for-bit."""
+    from repro.core.packing import ShardedTriTiles, pack_tril
+    from repro.distributed import reshard_tritiles, wire_c
+    assert (wire_c(8), wire_c(6), wire_c(12)) == (2, 2, 3)
+    for n in (24, 22):                       # ragged n included
+        s = _sym(n, n)
+        packed = pack_tril(jnp.tril(s))
+        st = ShardedTriTiles.from_packed(packed, n, 2)
+        assert reshard_tritiles(st, 2) is st
+        st3 = reshard_tritiles(st, 3)
+        assert st3.c == 3
+        np.testing.assert_array_equal(np.asarray(st3.to_packed()),
+                                      np.asarray(packed))
+
+
+def test_spec_tree_like_packed_aware():
+    from jax.sharding import PartitionSpec as P
+    from repro.core.packing import PackedTriangle, ShardedTriTiles
+    st = ShardedTriTiles.from_tril(jnp.tril(_sym(12, 1)), 2)
+    tree = {"s": st, "p": PackedTriangle.from_dense(_sym(8, 2)),
+            "w": jnp.ones((3,))}
+    specs = spec_tree_like(tree, shard_axis="x")
+    assert isinstance(specs["s"], ShardedTriTiles)
+    assert specs["s"].off == P("x") and specs["s"].diag == P("x")
+    assert isinstance(specs["p"], PackedTriangle)
+    assert specs["p"].vec == P() and specs["w"] == P()
+
+
+def test_rebuild_replacement_shard_matches_layout():
+    from repro.core.packing import ShardedTriTiles, pack_tril
+    from repro.distributed import rebuild_replacement_shard
+    n, c = 20, 2
+    packed = pack_tril(jnp.tril(_sym(n, 5)))
+    st = ShardedTriTiles.from_packed(packed, n, c)
+    for k in range(c * (c + 1)):
+        off, diag = rebuild_replacement_shard(packed, n, c, k)
+        np.testing.assert_array_equal(np.asarray(off),
+                                      np.asarray(st.off[k]))
+        np.testing.assert_array_equal(np.asarray(diag),
+                                      np.asarray(st.diag[k]))
 
 
 def test_validate_divisibility():
@@ -196,11 +316,70 @@ def test_compressed_allreduce_matches_mean():
                                atol=float(jnp.max(jnp.abs(x))) / 50)
 
 
+def test_error_feedback_sym_mask_packed_residual():
+    """A sym-masked leaf quantizes in packed layout (residual is the
+    n(n+1)/2 triangle) and still converges; output stays symmetric."""
+    from repro.core.packing import tril_size
+    n = 12
+    s = _sym(n, 9)
+    comp = ErrorFeedbackInt8(block=16, sym_mask={"g": True, "w": False})
+    params = {"g": s, "w": jnp.zeros((8,))}
+    state = comp.init(params)
+    assert state.error["g"].shape == (tril_size(n),)
+    g = {"g": s * 1e-3, "w": jnp.full((8,), 1e-3)}
+    acc = jnp.zeros((n, n))
+    for _ in range(50):
+        dq, state = comp.compress(g, state)
+        np.testing.assert_array_equal(np.asarray(dq["g"]),
+                                      np.asarray(dq["g"]).T)
+        acc = acc + dq["g"]
+    np.testing.assert_allclose(np.asarray(acc), np.asarray(s) * 50e-3,
+                               rtol=0.05, atol=1e-6)
+
+
+def test_error_feedback_typed_packed_leaf():
+    """PackedTriangle leaves flatten to their packed vec — EF compresses
+    them packed with no mask at all."""
+    from repro.core.packing import PackedTriangle, tril_size
+    pt = PackedTriangle.from_dense(_sym(10, 4))
+    comp = ErrorFeedbackInt8(block=16)
+    state = comp.init({"p": pt})
+    assert jax.tree.leaves(state.error)[0].shape == (tril_size(10),)
+    dq, _ = comp.compress({"p": pt}, state)
+    assert isinstance(dq["p"], PackedTriangle)
+    np.testing.assert_allclose(np.asarray(dq["p"].vec),
+                               np.asarray(pt.vec), rtol=0.05, atol=0.05)
+
+
+@pytest.mark.skipif(jax.device_count() < 2, reason="needs >1 device")
+def test_compressed_allreduce_sym_matches_mean():
+    from repro.core.packing import PackedTriangle
+    from repro.distributed import compressed_allreduce_sym
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    s = _sym(24, 6)
+    out = compressed_allreduce_sym(s, mesh, axis="data", block=64)
+    got = np.asarray(out)
+    np.testing.assert_allclose(got, np.asarray(s),
+                               atol=float(jnp.max(jnp.abs(s))) / 30)
+    np.testing.assert_array_equal(got, got.T)
+    pt = PackedTriangle.from_dense(s)
+    o2 = compressed_allreduce_sym(pt, mesh, axis="data", block=64)
+    assert isinstance(o2, PackedTriangle)
+    np.testing.assert_allclose(np.asarray(o2.vec), np.asarray(pt.vec),
+                               atol=float(jnp.max(jnp.abs(s))) / 30)
+
+
 def test_wire_bytes_model():
     n, p = 1_000_000, 16
     c = wire_bytes_per_device(n, p, compressed=True)
     u = wire_bytes_per_device(n, p, compressed=False)
     assert u / c > 3.8        # ~3.94x saving
+    # a symmetric leaf on the packed wire moves ~half the words
+    from repro.core.packing import tril_size
+    d = 1000
+    s = wire_bytes_per_device(d * d, p, compressed=True, sym_n=d)
+    full = wire_bytes_per_device(d * d, p, compressed=True)
+    assert abs(s / full - tril_size(d) / (d * d)) < 1e-9
 
 
 # ------------------------------------------------------------------ #
