@@ -62,6 +62,8 @@ _BLAS_MESH_GRID = (
     ("syrk", 96, 12, "packed", "2d", 6),
     ("symm", 96, 12, None, "2d", 6),
     ("syrk", 24, 8, "packed", "3d", 12),
+    ("syrk", 256, 256, "packed", "ring", 4),
+    ("syr2k", 256, 256, "packed", "ring", 4),
 )
 
 
@@ -209,6 +211,13 @@ def _mesh_movement_estimate(op, n1, n2, fill, path, P):
         T = c * (c - 1) // 2
         wire = int(m * (n1 * n2 / c) * (1 - 1 / P)) + L
         per_dev = (T + 1) * nb * nb + m * c * nb * (-(-n2 // (c + 1)))
+    elif path == "ring":
+        from repro.core.dispatch import ring_nb, ring_working_set
+        nb = ring_nb(n1, P)
+        # floor(P/2) shifts of the m operand row block(s) + the packed
+        # result gather — the 1d-route collective scale
+        wire = m * (P // 2) * nb * n2 + L
+        per_dev = int(ring_working_set(n1, n2, P, m))
     else:                                              # 3d
         wire = int(m * n1 * n2 / (P ** 0.5)) + L
         per_dev = _tril_words(n1) // P + m * n1 * n2 // P
@@ -273,11 +282,26 @@ def bench_blas_mesh(repeats: int = 7, grid: str = "full"):
             args = (tt.tiles, b)
         planned = blas.plan_route(op, n1, n2, mesh=mesh)
 
+        from repro.analysis.hlo_cost import analyze_hlo
+        hc = analyze_hlo(fwd.lower(*args).compile().as_text())
+        ch = planned.choice
         row = {
             "op": op, "n1": n1, "n2": n2, "fill": fill or "tritiles",
             "devices": need, "route": planned.path,
             "route_expected": path,
+            # the planner's grid choice, recorded so a re-plan drift
+            # (different case / c / p2 / chunk at the same shape) shows
+            # up in the trajectory diff, not just in wall-clock
+            "case": ch.case if ch is not None else None,
+            "c": ch.c if ch is not None else None,
+            "p2": ch.p2 if ch is not None else None,
+            "chunk": ch.b if ch is not None else None,
             "backend": jax.default_backend(),
+            # per-device HLO cost of the compiled forward (SPMD: every
+            # device runs this module once)
+            "flops": hc.flops,
+            "collective_permutes":
+                hc.collective_counts.get("collective-permute", 0),
             "fwd_s": _median_timer(fwd, args, repeats),
             "fwd_bwd_s": _median_timer(loss, args, repeats),
             "reps": repeats, "timer": "median",
@@ -338,12 +362,61 @@ def check_packed_gate(rows, threshold: float = 2.0) -> bool:
     return ok
 
 
+def check_ring_flops_gate(n1: int = 2048, n2: int = 512) -> bool:
+    """Computation-optimality gate for the ring route (compile-only, no
+    timed reps): per-device HLO flops of ring SYRK at P=8 must stay
+    ≤ 0.6× the 2d route's (c=2) at the same shape, and ring SYR2K
+    ≤ 0.6× the 2d family's 2-pass rank-2k model (2× its SYRK flops;
+    the shipped 2d syr2k one-dots its block-diagonal g + gᵀ — a saving
+    the ring's slot 0 applies identically — so the measured-vs-measured
+    syr2k ratio sits near the structural 16/24 floor and is tripwired
+    at 0.7 instead).  Needs ≥ 8 devices; skips gracefully below."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.analysis.hlo_cost import analyze_hlo
+    from repro.blas import meshpath
+
+    if jax.device_count() < 8:
+        print("[ring gate] needs 8 devices — skipping")
+        return True
+    rng = np.random.default_rng(5)
+    A = jnp.asarray(rng.standard_normal((n1, n2)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((n1, n2)), jnp.float32)
+    mesh8 = jax.make_mesh((8,), ("x",))
+    mesh6 = jax.make_mesh((6,), ("x",))
+
+    def flops(fn, *xs):
+        return analyze_hlo(jax.jit(fn).lower(*xs).compile().as_text()).flops
+
+    rf = flops(lambda x: meshpath.syrk_ring_packed(x, mesh8, "x"), A)
+    tf = flops(lambda x: meshpath.syrk_2d_sharded(
+        x, 2, mesh6, "x").to_packed(), A)
+    rf2 = flops(lambda x, y: meshpath.syr2k_ring_packed(
+        x, y, mesh8, "x"), A, B)
+    tf2 = flops(lambda x, y: meshpath.syr2k_2d_sharded(
+        x, y, 2, mesh6, "x").to_packed(), A, B)
+    checks = [("syrk ring/2d", rf / tf, 0.6),
+              ("syr2k ring/2-pass-2d", rf2 / (2 * tf), 0.6),
+              ("syr2k ring/2d", rf2 / tf2, 0.7)]
+    ok = True
+    for name, ratio, thr in checks:
+        verdict = "OK" if ratio <= thr else "FAIL"
+        ok = ok and ratio <= thr
+        print(f"[ring gate] {name} per-device flops ratio "
+              f"{ratio:.4f} (threshold {thr}) {verdict}")
+    return ok
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: "
-                         + ",".join(SUITES) + ",blas ('blas' = only the "
-                         "BENCH_blas.json fwd+bwd grid)")
+                         + ",".join(SUITES) + ",blas,blas_mesh ('blas' = "
+                         "the BENCH_blas.json fwd+bwd grid + mesh rows; "
+                         "'blas_mesh' = only the mesh rows and the ring "
+                         "flop gate)")
     ap.add_argument("--grid", default="full", choices=("full", "small"),
                     help="blas grid size: 'small' drops the >=1024 rows "
                          "(CI smoke)")
@@ -372,14 +445,19 @@ def main() -> None:
         with open(args.check_gate) as f:
             ok = check_packed_gate(json.load(f), args.gate_threshold)
         sys.exit(0 if ok else 1)
-    chosen = args.only.split(",") if args.only else list(SUITES)
-    chosen = [c for c in chosen if c != "blas"]
+    tokens = args.only.split(",") if args.only else None
+    chosen = list(tokens) if tokens else list(SUITES)
+    chosen = [c for c in chosen if c not in ("blas", "blas_mesh")]
     if args.mesh == "only":
         chosen = []
+    # 'blas_mesh' selects only the mesh rows (+ the ring flop gate);
+    # without --only both blas grids run as before
+    run_blas = tokens is None or "blas" in tokens
+    run_mesh = tokens is None or "blas" in tokens or "blas_mesh" in tokens
 
     os.makedirs(os.path.join(ROOT, "artifacts"), exist_ok=True)
     failures = 0
-    if args.mesh != "only":
+    if args.mesh != "only" and run_blas:
         try:
             rows = bench_blas_fwd_bwd(grid=args.grid)  # the trajectory
             if args.gate and not check_packed_gate(rows,
@@ -391,9 +469,12 @@ def main() -> None:
             traceback.print_exc()
             print(f"[blas fwd+bwd] FAILED: {e}")
             failures += 1
-    if args.mesh != "off":
+    if args.mesh != "off" and run_mesh:
         try:
             bench_blas_mesh(grid=args.grid)     # packed mesh wire rows
+            if not check_ring_flops_gate():
+                print("[blas mesh] ring flop gate FAILED")
+                failures += 1
         except Exception as e:  # noqa: BLE001
             import traceback
             traceback.print_exc()

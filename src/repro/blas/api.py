@@ -310,7 +310,24 @@ def _execute_syrk(a32: jax.Array, c32: Optional[jax.Array], *, fill: str,
             packed = meshpath.syrk_1d_packed(a32, mesh, route.axis)
         base = _packed_to_fill(packed, n1, fill)
         return _combine_fill(base, c32, alpha, beta, fill)
+    if route.path == "ring":
+        # batch-native: leading dims ride the shifted payload
+        packed = meshpath.syrk_ring_packed(a32, mesh, route.axis)
+        base = _packed_to_fill(packed, n1, fill)
+        return _combine_fill(base, c32, alpha, beta, fill)
     if route.path in grid_paths:
+        if a32.ndim > 2:
+            # stacked grid wire (the planner only emits 2d/3d batched)
+            af, lead = _flatten_lead(a32, 2)
+            if route.path == "2d":
+                st = meshpath.syrk_2d_sharded_stacked(
+                    af, route.choice.c, mesh, route.axis)
+            else:
+                st = meshpath.syrk_3d_sharded_stacked(
+                    af, route.choice.c, route.choice.p2, mesh)
+            packed = st.to_packed().reshape(lead + (-1,))
+            base = _packed_to_fill(packed, n1, fill)
+            return _combine_fill(base, c32, alpha, beta, fill)
         if route.path == "2d":
             st = meshpath.syrk_2d_sharded(a32, route.choice.c, mesh,
                                           route.axis)
@@ -365,7 +382,23 @@ def _execute_syr2k(a32: jax.Array, b32: jax.Array,
             packed = meshpath.syr2k_1d_packed(a32, b32, mesh, route.axis)
         base = _packed_to_fill(packed, n1, fill)
         return post(_combine_fill(base, c32, alpha, beta, fill))
+    if route.path == "ring":
+        packed = meshpath.syr2k_ring_packed(a32, b32, mesh, route.axis)
+        base = _packed_to_fill(packed, n1, fill)
+        return post(_combine_fill(base, c32, alpha, beta, fill))
     if route.path in grid_paths:
+        if a32.ndim > 2:
+            af, lead = _flatten_lead(a32, 2)
+            bf, _ = _flatten_lead(b32, 2)
+            if route.path == "2d":
+                st = meshpath.syr2k_2d_sharded_stacked(
+                    af, bf, route.choice.c, mesh, route.axis)
+            else:
+                st = meshpath.syr2k_3d_sharded_stacked(
+                    af, bf, route.choice.c, route.choice.p2, mesh)
+            packed = st.to_packed().reshape(lead + (-1,))
+            base = _packed_to_fill(packed, n1, fill)
+            return post(_combine_fill(base, c32, alpha, beta, fill))
         if route.path == "2d":
             st = meshpath.syr2k_2d_sharded(a32, b32, route.choice.c, mesh,
                                            route.axis)
@@ -402,17 +435,21 @@ def _execute_syr2k(a32: jax.Array, b32: jax.Array,
 def _execute_symm(a32: Union[jax.Array, TriTiles, ShardedTriTiles],
                   b32: jax.Array, *,
                   route: Route, mesh, interpret: Optional[bool],
-                  out_dtype=None, diag_scale: float = 1.0) -> jax.Array:
+                  out_dtype=None, diag_scale: float = 1.0,
+                  b_layout: str = "replicated") -> jax.Array:
     if isinstance(a32, ShardedTriTiles):
         return _execute_symm_sharded(a32, b32, route=route, mesh=mesh,
                                      interpret=interpret,
                                      out_dtype=out_dtype,
-                                     diag_scale=diag_scale)
+                                     diag_scale=diag_scale,
+                                     b_layout=b_layout)
     if isinstance(a32, TriTiles):
         return _execute_symm_tiles(a32, b32, route=route, mesh=mesh,
                                    interpret=interpret,
                                    out_dtype=out_dtype,
-                                   diag_scale=diag_scale)
+                                   diag_scale=diag_scale,
+                                   b_layout=b_layout)
+    pin_b = b_layout == "sharded"
     if diag_scale != 1.0:
         # dense operand: sym_s(A) = sym(A with pre-scaled diagonal) —
         # one elementwise pass on an already-dense array
@@ -427,16 +464,31 @@ def _execute_symm(a32: Union[jax.Array, TriTiles, ShardedTriTiles],
                 route.axis)
             return out.reshape(lead + out.shape[-2:])
         return meshpath.symm_1d_dense(a32, b32, mesh, route.axis)
+    if route.path == "ring":
+        return meshpath.symm_ring_dense(a32, b32, mesh, route.axis,
+                                        pin_b=pin_b)
+    if route.path in ("2d", "3d") and b32.ndim > 2:
+        af, lead = _flatten_lead(a32, 2)
+        bf, _ = _flatten_lead(b32, 2)
+        p = pack_tril(jnp.tril(af))
+        if route.path == "2d":
+            out = meshpath.symm_2d_packed_a_stacked(
+                p, bf, route.choice.c, mesh, route.axis)
+        else:
+            out = meshpath.symm_3d_packed_a_stacked(
+                p, bf, route.choice.c, route.choice.p2, mesh)
+        return out.reshape(lead + out.shape[-2:])
     if route.path == "2d":
         return meshpath.symm_2d_dense(a32, b32, route.choice.c, mesh,
-                                      route.axis)
+                                      route.axis, pin_b=pin_b)
     if route.path == "3d":
         return meshpath.symm_3d_dense(a32, b32, route.choice.c,
-                                      route.choice.p2, mesh)
+                                      route.choice.p2, mesh, pin_b=pin_b)
     if route.path == "3d-limited":
         return meshpath.symm_3d_limited_dense(a32, b32, route.choice.c,
                                               route.choice.p2,
-                                              route.choice.b, mesh)
+                                              route.choice.b, mesh,
+                                              pin_b=pin_b)
     if route.path == "pallas":
         fn = functools.partial(_symm_pallas, tiles=route.tiles,
                                interpret=interpret,
@@ -447,8 +499,8 @@ def _execute_symm(a32: Union[jax.Array, TriTiles, ShardedTriTiles],
 
 def _execute_symm_tiles(a: TriTiles, b32: jax.Array, *, route: Route,
                         mesh, interpret: Optional[bool],
-                        out_dtype=None, diag_scale: float = 1.0
-                        ) -> jax.Array:
+                        out_dtype=None, diag_scale: float = 1.0,
+                        b_layout: str = "replicated") -> jax.Array:
     """SYMM with a pre-packed symmetric operand.  The packed layout
     survives every route: straight into the kernel on the Pallas route
     (where ``diag_scale`` — the cotangent prologue — runs in VMEM),
@@ -458,6 +510,7 @@ def _execute_symm_tiles(a: TriTiles, b32: jax.Array, *, route: Route,
     own dtype there).  Only the GSPMD/jnp dense fallback rebuilds a
     dense matrix — and says so once via :func:`_warn_densify`."""
     n1 = a.n
+    pin_b = b_layout == "sharded"
 
     def scaled_packed():
         return grad.scale_matrix_diag(a.to_packed(), "packed", n1,
@@ -472,18 +525,33 @@ def _execute_symm_tiles(a: TriTiles, b32: jax.Array, *, route: Route,
                                                     route.axis)
             return out.reshape(lead + out.shape[-2:])
         return meshpath.symm_1d_packed_a(p, b32, n1, mesh, route.axis)
+    if route.path == "ring":
+        return meshpath.symm_ring_packed_a(scaled_packed(), b32, n1, mesh,
+                                           route.axis, pin_b=pin_b)
+    if route.path in ("2d", "3d") and b32.ndim > 2:
+        pf, lead = _flatten_lead(scaled_packed(), 1)
+        bf, _ = _flatten_lead(b32, 2)
+        if route.path == "2d":
+            out = meshpath.symm_2d_packed_a_stacked(
+                pf, bf, route.choice.c, mesh, route.axis)
+        else:
+            out = meshpath.symm_3d_packed_a_stacked(
+                pf, bf, route.choice.c, route.choice.p2, mesh)
+        return out.reshape(lead + out.shape[-2:])
     if route.path == "2d":
         return meshpath.symm_2d_packed_a(scaled_packed(), b32,
-                                         route.choice.c, mesh, route.axis)
+                                         route.choice.c, mesh, route.axis,
+                                         pin_b=pin_b)
     if route.path == "3d":
         return meshpath.symm_3d_packed_a(scaled_packed(), b32,
                                          route.choice.c, route.choice.p2,
-                                         mesh)
+                                         mesh, pin_b=pin_b)
     if route.path == "3d-limited":
         return meshpath.symm_3d_limited_packed_a(scaled_packed(), b32,
                                                  route.choice.c,
                                                  route.choice.p2,
-                                                 route.choice.b, mesh)
+                                                 route.choice.b, mesh,
+                                                 pin_b=pin_b)
     if route.path == "pallas":
         bm = a.bm                      # the layout fixes the row tile
         bn = route.tiles[1]
@@ -499,8 +567,8 @@ def _execute_symm_tiles(a: TriTiles, b32: jax.Array, *, route: Route,
 
 def _execute_symm_sharded(st: ShardedTriTiles, b32: jax.Array, *,
                           route: Route, mesh, interpret: Optional[bool],
-                          out_dtype=None, diag_scale: float = 1.0
-                          ) -> jax.Array:
+                          out_dtype=None, diag_scale: float = 1.0,
+                          b_layout: str = "replicated") -> jax.Array:
     """SYMM whose symmetric operand is already mesh-resident as
     ShardedTriTiles: the grid routes consume the shards directly (no
     distribute step for A), repacking only when the planned grid's c
@@ -509,6 +577,7 @@ def _execute_symm_sharded(st: ShardedTriTiles, b32: jax.Array, *,
     chunks against the resident shards — exactly the working set Alg 18
     budgets."""
     n1 = st.n
+    pin_b = b_layout == "sharded"
     if diag_scale != 1.0:
         p = grad.scale_matrix_diag(st.to_packed(), "packed", n1,
                                    diag_scale)
@@ -520,14 +589,22 @@ def _execute_symm_sharded(st: ShardedTriTiles, b32: jax.Array, *,
     if route.path == "1d":
         return meshpath.symm_1d_packed_a(st.to_packed(), b32, n1, mesh,
                                          route.axis)
+    if route.path == "ring":
+        # the mesh-resident layout regathers only its packed words, then
+        # scatters into the ring slot stacks
+        return meshpath.symm_ring_packed_a(st.to_packed(), b32, n1, mesh,
+                                           route.axis, pin_b=pin_b)
     if route.path == "2d":
-        return meshpath.symm_2d_sharded_a(st, b32, mesh, route.axis)
+        return meshpath.symm_2d_sharded_a(st, b32, mesh, route.axis,
+                                          pin_b=pin_b)
     if route.path == "3d":
-        return meshpath.symm_3d_sharded_a(st, b32, route.choice.p2, mesh)
+        return meshpath.symm_3d_sharded_a(st, b32, route.choice.p2, mesh,
+                                          pin_b=pin_b)
     if route.path == "3d-limited":
         return meshpath.symm_3d_limited_sharded_a(st, b32,
                                                   route.choice.p2,
-                                                  route.choice.b, mesh)
+                                                  route.choice.b, mesh,
+                                                  pin_b=pin_b)
     if route.path == "pallas":
         bm = route.tiles[0] if route.tiles else 128
         return _execute_symm_tiles(st.to_tritiles(bm), b32, route=route,
@@ -643,6 +720,7 @@ def syr2k(a, b, *, out_dtype=None, fill: str = "tril", mesh=None,
 def symm(a_sym, b, *, out_dtype=None, mesh=None,
          axis: Optional[str] = None, tile=None,
          interpret: Optional[bool] = None, M="auto",
+         b_layout: str = "replicated",
          _diag_scale: float = 1.0) -> jax.Array:
     """C = sym(A)·B for tril-valid A (..., n1, n1) and B (..., n1, n2).
 
@@ -650,8 +728,8 @@ def symm(a_sym, b, *, out_dtype=None, mesh=None,
     (the upper half may hold garbage) — a pre-packed
     :class:`~repro.core.packing.TriTiles`, in which case the packed
     layout feeds the Pallas kernel or the packed mesh wire directly
-    (1d all-gather, 2d/3d extended triangle-block scatter, stacked 1d
-    when batched), or a mesh-resident
+    (1d all-gather, 2d/3d extended triangle-block scatter, the ring
+    slot stacks, stacked wires when batched), or a mesh-resident
     :class:`~repro.core.packing.ShardedTriTiles` (e.g. the
     ``fill="sharded"`` output of :func:`syrk`), which the grid routes
     consume without any distribute step for A — the symmetric matrix
@@ -663,11 +741,21 @@ def symm(a_sym, b, *, out_dtype=None, mesh=None,
     :mod:`repro.blas.grad`); the dA cotangent is zero on the unread
     upper triangle (and arrives as TriTiles/ShardedTriTiles when A did).
 
+    ``b_layout="sharded"`` declares that B already lives row-sharded
+    ``P(axis)`` on the mesh: the ring/2d/3d wires then pin their staged
+    B row blocks to that sharding instead of letting GSPMD replicate
+    the operand before the shard_map (the 1d wire column-shards B and
+    ignores the hint).  The backward pass is unaffected — cotangent
+    layouts are planned on their own terms.
+
     ``_diag_scale`` (internal, the fused cotangent prologue) computes
     C = sym_s(A)·B with the matrix diagonal of sym(A) scaled by s —
     in the kernel's VMEM symmetrize on the Pallas route, so a packed
     backward cotangent needs no standalone doubling pass.
     """
+    if b_layout not in ("replicated", "sharded"):
+        raise ValueError(f"b_layout must be 'replicated' or 'sharded', "
+                         f"got {b_layout!r}")
     b = jnp.asarray(b)
     n1, n2 = b.shape[-2:]
     if isinstance(a_sym, ShardedTriTiles):
@@ -697,7 +785,8 @@ def symm(a_sym, b, *, out_dtype=None, mesh=None,
     b32 = b.astype(jnp.float32)
     return _out(grad.symm_call(a32, b32, route=route, mesh=mesh,
                                interpret=interpret, out_dtype=out_dtype,
-                               diag_scale=_diag_scale), out_dtype)
+                               diag_scale=_diag_scale,
+                               b_layout=b_layout), out_dtype)
 
 
 def explain(op: str, n1: int, n2: int, *, dtype=jnp.float32, mesh=None,
@@ -705,6 +794,12 @@ def explain(op: str, n1: int, n2: int, *, dtype=jnp.float32, mesh=None,
             M="auto") -> str:
     """Human-readable routing decision for an (op, shape, mesh) triple.
 
+    Mesh wires appear as ``1d`` (block-row all-gather), ``2d``/``3d``
+    (extended triangle-block grids), ``3d-limited`` (§IX streamed
+    chunks), or ``ring`` — the computation-optimal cyclic-shift
+    schedule whose ``ring P=… nb=… shifts=…`` line shows the
+    ``⌊P/2⌋``-shift plan that holds per-device flops near half the 2d
+    route's on SYRK/SYR2K wires.
     ``M`` is the per-device memory budget in f32 words (contract as
     :func:`syrk`) — pass a small value to see where the §IX
     memory-dependent "3d-limited" route takes over, with its chunk and

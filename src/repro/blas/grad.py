@@ -156,10 +156,11 @@ def _packed_mesh_symm(g_packed: jax.Array, other: jax.Array, n1: int,
     """Packed-fill cotangent × operand on a mesh route: double the
     packed diagonal and feed the packed triangle straight onto
     whichever packed wire the backward SYMM plans — the 1D all-gather
-    wire (stacked when batched), or a pure scatter into the 2D/3D
-    extended triangle-block shards.  The cotangent stays in a packed
-    layout end to end (no dense round-trip).  Returns None when the
-    backward SYMM routes dense (GSPMD fallback)."""
+    wire (stacked when batched), the ring slot stacks, or a pure
+    scatter into the 2D/3D extended triangle-block shards.  The
+    cotangent stays in a packed layout end to end (no dense
+    round-trip).  Returns None when the backward SYMM routes dense
+    (GSPMD fallback)."""
     br = routing.plan_route("symm", n1, other.shape[-1],
                             dtype=jnp.float32, batch=other.ndim > 2,
                             mesh=mesh, axis=route.axis)
@@ -175,10 +176,27 @@ def _packed_mesh_symm(g_packed: jax.Array, other: jax.Array, n1: int,
                                                     br.axis)
             return out.reshape(lead + out.shape[-2:])
         return meshpath.symm_1d_packed_a(lp, other, n1, mesh, br.axis)
-    if br.path == "2d" and other.ndim == 2:
+    if br.path == "ring":
+        # batch-native: the slot stage vmaps over leading dims
+        return meshpath.symm_ring_packed_a(lp, other, n1, mesh, br.axis)
+    if br.path == "2d":
+        if other.ndim > 2:
+            lead = other.shape[:-2]
+            pf = lp.reshape((-1, lp.shape[-1]))
+            bf = other.reshape((-1,) + other.shape[-2:])
+            out = meshpath.symm_2d_packed_a_stacked(pf, bf, br.choice.c,
+                                                    mesh, br.axis)
+            return out.reshape(lead + out.shape[-2:])
         return meshpath.symm_2d_packed_a(lp, other, br.choice.c, mesh,
                                          br.axis)
-    if br.path == "3d" and other.ndim == 2:
+    if br.path == "3d":
+        if other.ndim > 2:
+            lead = other.shape[:-2]
+            pf = lp.reshape((-1, lp.shape[-1]))
+            bf = other.reshape((-1,) + other.shape[-2:])
+            out = meshpath.symm_3d_packed_a_stacked(pf, bf, br.choice.c,
+                                                    br.choice.p2, mesh)
+            return out.reshape(lead + out.shape[-2:])
         return meshpath.symm_3d_packed_a(lp, other, br.choice.c,
                                          br.choice.p2, mesh)
     if br.path == "3d-limited" and other.ndim == 2:
@@ -346,19 +364,22 @@ def syr2k_call(a32: jax.Array, b32: jax.Array, c32, *, fill: str,
 
 def symm_call(a32, b32: jax.Array, *, route: routing.Route,
               mesh, interpret, out_dtype=None,
-              diag_scale: float = 1.0) -> jax.Array:
+              diag_scale: float = 1.0,
+              b_layout: str = "replicated") -> jax.Array:
     """``a32`` is a dense tril-valid array or a TriTiles — both are
     pytrees, so one custom_vjp covers them; a TriTiles primal gets its
     dA back as TriTiles (packed end to end).  ``diag_scale`` is the
     fused cotangent prologue: the kernel consumes the operand as
     sym(A) with the matrix diagonal scaled (2.0 turns a tril-exposed
-    packed cotangent L into L + Lᵀ in VMEM)."""
+    packed cotangent L into L + Lᵀ in VMEM).  ``b_layout`` only shapes
+    the primal's staging (sharded-B pin); cotangent layouts are planned
+    on their own terms, so it is not propagated to the backward rule."""
     from . import api
 
     def prim(a, b):
         return api._execute_symm(a, b, route=route, mesh=mesh,
                                  interpret=interpret, out_dtype=out_dtype,
-                                 diag_scale=diag_scale)
+                                 diag_scale=diag_scale, b_layout=b_layout)
 
     @jax.custom_vjp
     def f(a, b):

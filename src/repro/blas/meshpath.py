@@ -39,14 +39,18 @@ from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from ..compat import shard_map
+from ..core import ringpath
+from ..core.dispatch import ring_nb
 from ..core.onedim import (_padded_tril_len, symm_1d_local, syr2k_1d_local,
                            syrk_1d_local)
 from ..core.packing import (ShardedTriTiles, pack_tril, tril_size,
                             unpack_tril)
-from ..core.twodim import (TwoDPlan, make_2d_plan, symm_2d, syr2k_2d,
-                           syrk_2d, tb_flat_words)
-from ..core.threedim import (symm_3d, symm_3d_limited, syr2k_3d,
-                             syr2k_3d_limited, syrk_3d, syrk_3d_limited)
+from ..core.twodim import (TwoDPlan, make_2d_plan, symm_2d,
+                           symm_2d_stacked, syr2k_2d, syr2k_2d_stacked,
+                           syrk_2d, syrk_2d_stacked, tb_flat_words)
+from ..core.threedim import (symm_3d, symm_3d_limited, symm_3d_stacked,
+                             syr2k_3d, syr2k_3d_limited, syr2k_3d_stacked,
+                             syrk_3d, syrk_3d_limited, syrk_3d_stacked)
 
 TB_AXIS, REP_AXIS = "blas_p1", "blas_p2"
 
@@ -79,6 +83,19 @@ def collect_rows_jnp(dist: jax.Array, plan: TwoDPlan) -> jax.Array:
                  jnp.arange(nb)[None, :, None],
                  jnp.asarray(col_idx)[:, None, :]].set(data)
     return out.reshape(plan.n1_pad, plan.n2_pad)[:plan.n1, :plan.n2]
+
+
+def distribute_rows_stacked_jnp(x: jax.Array, plan: TwoDPlan) -> jax.Array:
+    """(k, n1, n2) -> (P, k, c, nb, w): the batch stacked behind the
+    device axis so the whole stack rides one exchange payload."""
+    return jnp.moveaxis(
+        jax.vmap(lambda s: distribute_rows_jnp(s, plan))(x), 1, 0)
+
+
+def collect_rows_stacked_jnp(dist: jax.Array, plan: TwoDPlan) -> jax.Array:
+    """Inverse of :func:`distribute_rows_stacked_jnp` (unpadded)."""
+    return jax.vmap(lambda d: collect_rows_jnp(d, plan))(
+        jnp.moveaxis(dist, 0, 1))
 
 
 def distribute_rows_3d_jnp(x: jax.Array, plan: TwoDPlan, p2: int
@@ -125,6 +142,36 @@ def _flat_from_sharded(st: ShardedTriTiles, p2: int) -> jax.Array:
     pad = -flat.shape[1] % p2
     flat = jnp.pad(flat, ((0, 0), (0, pad)))
     return flat.reshape(p1, p2, -1)
+
+
+def distribute_rows_3d_stacked_jnp(x: jax.Array, plan: TwoDPlan, p2: int
+                                   ) -> jax.Array:
+    """(k, n1, n2) -> (p1, p2, k, c, nb, w2)."""
+    d = jax.vmap(lambda s: distribute_rows_3d_jnp(s, plan, p2))(x)
+    return d.transpose(1, 2, 0, 3, 4, 5)
+
+
+def _sharded_from_flat_stacked(flat_shards: jax.Array, plan: TwoDPlan,
+                               n1: int, c: int) -> ShardedTriTiles:
+    """(p1, p2, k, shard) stacked 3D output -> batched ShardedTriTiles
+    (leading stack dim)."""
+    p1, p2, k, s = flat_shards.shape
+    flat = flat_shards.transpose(2, 0, 1, 3).reshape(k, p1, p2 * s)
+    flat = flat[:, :, :flat_tb_size(plan)]
+    t = plan.T * plan.nb * plan.nb
+    off = flat[:, :, :t].reshape(k, p1, plan.T, plan.nb, plan.nb)
+    diag = flat[:, :, t:].reshape(k, p1, plan.nb, plan.nb)
+    return ShardedTriTiles(off, diag, n1, c)
+
+
+def _flat_from_sharded_stacked(st: ShardedTriTiles, p2: int) -> jax.Array:
+    """Batched ShardedTriTiles (leading stack dim) -> (p1, p2, k, shard)."""
+    k = st.off.shape[0]
+    p1 = st.num_devices
+    flat = jnp.concatenate([st.off.reshape(k, p1, -1),
+                            st.diag.reshape(k, p1, -1)], 2)
+    flat = jnp.pad(flat, ((0, 0), (0, 0), (0, -flat.shape[2] % p2)))
+    return flat.reshape(k, p1, p2, -1).transpose(1, 2, 0, 3)
 
 
 # --------------------------------------------------------------------------
@@ -278,18 +325,22 @@ def syr2k_2d_sharded(a: jax.Array, b: jax.Array, c: int, mesh: Mesh,
 
 
 def symm_2d_sharded_a(st: ShardedTriTiles, b: jax.Array, mesh: Mesh,
-                      axis: str) -> jax.Array:
+                      axis: str, pin_b: bool = False) -> jax.Array:
     """SYMM whose symmetric operand is already on the mesh as
-    ShardedTriTiles — no distribute step for A at all."""
+    ShardedTriTiles — no distribute step for A at all.  ``pin_b=True``
+    keeps the staged B row shares ``P(axis)``-sharded (the sharded-B
+    entry point) instead of letting GSPMD replicate them."""
     n1, n2 = st.n, b.shape[1]
     plan = make_2d_plan(st.c, n1, n2)
-    c_dist = symm_2d(st.off, st.diag, distribute_rows_jnp(b, plan), plan,
-                     mesh, axis)
+    b_dist = distribute_rows_jnp(b, plan)
+    if pin_b:
+        b_dist = _pin_row_shards(b_dist, mesh, axis)
+    c_dist = symm_2d(st.off, st.diag, b_dist, plan, mesh, axis)
     return collect_rows_jnp(c_dist, plan)
 
 
 def symm_2d_packed_a(a_packed: jax.Array, b: jax.Array, c: int, mesh: Mesh,
-                     axis: str) -> jax.Array:
+                     axis: str, pin_b: bool = False) -> jax.Array:
     """f32 packed tril (tril_size(n1),) × (n1, n2) -> (n1, n2).
 
     The symmetric operand arrives element-packed and is scattered
@@ -298,7 +349,45 @@ def symm_2d_packed_a(a_packed: jax.Array, b: jax.Array, c: int, mesh: Mesh,
     (n1_pad, n1_pad) staging buffer)."""
     n1 = b.shape[0]
     st = ShardedTriTiles.from_packed(a_packed, n1, c)
-    return symm_2d_sharded_a(st, b, mesh, axis)
+    return symm_2d_sharded_a(st, b, mesh, axis, pin_b=pin_b)
+
+
+# ---- batched stacks on the 2D wire ----------------------------------------
+def syrk_2d_sharded_stacked(a: jax.Array, c: int, mesh: Mesh, axis: str
+                            ) -> ShardedTriTiles:
+    """f32 (k, n1, n2) -> batched ShardedTriTiles (leading stack dim):
+    the whole stack rides ONE all-to-all payload."""
+    _, n1, n2 = a.shape
+    plan = make_2d_plan(c, n1, n2)
+    off, diag = syrk_2d_stacked(distribute_rows_stacked_jnp(a, plan), plan,
+                                mesh, axis)
+    return ShardedTriTiles(jnp.moveaxis(off, 0, 1),
+                           jnp.moveaxis(diag, 0, 1), n1, c)
+
+
+def syr2k_2d_sharded_stacked(a: jax.Array, b: jax.Array, c: int,
+                             mesh: Mesh, axis: str) -> ShardedTriTiles:
+    _, n1, n2 = a.shape
+    plan = make_2d_plan(c, n1, n2)
+    off, diag = syr2k_2d_stacked(distribute_rows_stacked_jnp(a, plan),
+                                 distribute_rows_stacked_jnp(b, plan),
+                                 plan, mesh, axis)
+    return ShardedTriTiles(jnp.moveaxis(off, 0, 1),
+                           jnp.moveaxis(diag, 0, 1), n1, c)
+
+
+def symm_2d_packed_a_stacked(a_packed: jax.Array, b: jax.Array, c: int,
+                             mesh: Mesh, axis: str) -> jax.Array:
+    """f32 (k, tril_size(n1)) × (k, n1, n2) -> (k, n1, n2): the packed
+    stack scatters into batched shards, B rides the stacked exchange."""
+    _, n1, n2 = b.shape
+    st = ShardedTriTiles.from_packed(a_packed, n1, c)
+    plan = make_2d_plan(c, n1, n2)
+    c_dist = symm_2d_stacked(jnp.moveaxis(st.off, 0, 1),
+                             jnp.moveaxis(st.diag, 0, 1),
+                             distribute_rows_stacked_jnp(b, plan),
+                             plan, mesh, axis)
+    return collect_rows_stacked_jnp(c_dist, plan)
 
 
 def syrk_2d_dense(a: jax.Array, c: int, mesh: Mesh, axis: str) -> jax.Array:
@@ -312,10 +401,93 @@ def syr2k_2d_dense(a: jax.Array, b: jax.Array, c: int, mesh: Mesh,
 
 
 def symm_2d_dense(a_sym: jax.Array, b: jax.Array, c: int, mesh: Mesh,
-                  axis: str) -> jax.Array:
+                  axis: str, pin_b: bool = False) -> jax.Array:
     """tril-valid dense A: pack the triangle (reads tril only), then the
     packed entrance above."""
-    return symm_2d_packed_a(pack_tril(jnp.tril(a_sym)), b, c, mesh, axis)
+    return symm_2d_packed_a(pack_tril(jnp.tril(a_sym)), b, c, mesh, axis,
+                            pin_b=pin_b)
+
+
+# --------------------------------------------------------------------------
+# ring path: computation-optimal cyclic shift (flop-halving SYRK/SYR2K)
+# --------------------------------------------------------------------------
+def _pin_row_shards(x: jax.Array, mesh: Mesh, *axes: str) -> jax.Array:
+    """Constrain the leading device axes of a staged (P, …) — or
+    (p1, p2, …) — buffer to the mesh axes, so a ``P(axis)``-row-sharded
+    operand enters the shard_map without a replicating gather first."""
+    from jax.sharding import NamedSharding
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*axes)))
+
+
+def _ring_stage(x: jax.Array, nsh: int) -> jax.Array:
+    """(…, n1, n2) -> (nsh, …, nb, n2): zero-pad the rows to nsh·nb
+    blocks and move the device-block axis to the front; leading batch
+    dims ride the shifted payload (the stacked-1d pattern)."""
+    nb = ring_nb(x.shape[-2], nsh)
+    pad = nsh * nb - x.shape[-2]
+    if pad:
+        z = jnp.zeros(x.shape[:-2] + (pad, x.shape[-1]), x.dtype)
+        x = jnp.concatenate([x, z], axis=-2)
+    x = x.reshape(x.shape[:-2] + (nsh, nb, x.shape[-1]))
+    return jnp.moveaxis(x, -3, 0)
+
+
+def _ring_unstage(y: jax.Array, n1: int) -> jax.Array:
+    """(nsh, …, nb, n2) -> (…, n1, n2): undo :func:`_ring_stage`."""
+    y = jnp.moveaxis(y, 0, -3)
+    y = y.reshape(y.shape[:-3] + (y.shape[-3] * y.shape[-2], y.shape[-1]))
+    return y[..., :n1, :]
+
+
+def syrk_ring_packed(a: jax.Array, mesh: Mesh, axis: str) -> jax.Array:
+    """f32 (…, n1, n2) -> replicated packed tril of A·Aᵀ (…, L).
+
+    Cyclic-shift schedule: ⌊P/2⌋ ppermutes of the nb×n2 row block, each
+    device computing only the unique blocks it owns — ~(P+1)/(2P) of
+    the 2d route's per-device flops at 1d-level collective volume."""
+    n1 = a.shape[-2]
+    nsh = mesh.shape[axis]
+    stack = ringpath.syrk_ring(_ring_stage(a, nsh), mesh, axis)
+    return ringpath.ring_stack_to_packed(stack, n1)
+
+
+def syr2k_ring_packed(a: jax.Array, b: jax.Array, mesh: Mesh, axis: str
+                      ) -> jax.Array:
+    """f32 (…, n1, n2) × 2 -> replicated packed tril of A·Bᵀ + B·Aᵀ.
+    A and B row blocks stack into ONE circulating buffer, so the wire
+    still moves exactly ⌊P/2⌋ collective-permutes."""
+    n1 = a.shape[-2]
+    nsh = mesh.shape[axis]
+    ab = jnp.stack([_ring_stage(a, nsh), _ring_stage(b, nsh)], axis=1)
+    stack = ringpath.syr2k_ring(ab, mesh, axis)
+    return ringpath.ring_stack_to_packed(stack, n1)
+
+
+def symm_ring_packed_a(a_packed: jax.Array, b: jax.Array, n1: int,
+                       mesh: Mesh, axis: str, pin_b: bool = False
+                       ) -> jax.Array:
+    """f32 packed tril (…, tril_size(n1)) × (…, n1, n2) -> (…, n1, n2).
+
+    The packed triangle scatters straight into the per-device ring slot
+    stacks (a static-table gather, no dense rebuild); B circulates the
+    ring.  ``pin_b=True`` keeps the staged B row blocks ``P(axis)``-
+    sharded — the sharded-B entry point — instead of letting GSPMD
+    replicate them."""
+    nsh = mesh.shape[axis]
+    slots = ringpath.packed_to_ring(a_packed, n1, nsh)
+    b_stage = _ring_stage(b, nsh)
+    if pin_b:
+        b_stage = _pin_row_shards(b_stage, mesh, axis)
+    out = ringpath.symm_ring(slots, b_stage, mesh, axis)
+    return _ring_unstage(out, n1)
+
+
+def symm_ring_dense(a_sym: jax.Array, b: jax.Array, mesh: Mesh, axis: str,
+                    pin_b: bool = False) -> jax.Array:
+    """tril-valid dense A: pack the triangle, then the packed entrance."""
+    n1 = a_sym.shape[-1]
+    return symm_ring_packed_a(pack_tril(jnp.tril(a_sym)), b, n1, mesh,
+                              axis, pin_b=pin_b)
 
 
 # --------------------------------------------------------------------------
@@ -348,24 +520,65 @@ def syr2k_3d_sharded(a: jax.Array, b: jax.Array, c: int, p2: int,
 
 
 def symm_3d_sharded_a(st: ShardedTriTiles, b: jax.Array, p2: int,
-                      mesh: Mesh) -> jax.Array:
-    """3D SYMM with the symmetric operand already in ShardedTriTiles."""
+                      mesh: Mesh, pin_b: bool = False) -> jax.Array:
+    """3D SYMM with the symmetric operand already in ShardedTriTiles.
+    ``pin_b=True`` keeps the staged B shares ``P(p1, p2)``-sharded."""
     n1, n2 = st.n, b.shape[1]
     c = st.c
     plan = make_2d_plan(c, n1, n2 // p2)
     mesh3 = _mesh_3d(mesh, c * (c + 1), p2)
-    c_dist = symm_3d(_flat_from_sharded(st, p2),
-                     distribute_rows_3d_jnp(b, plan, p2), plan, mesh3,
+    b_dist = distribute_rows_3d_jnp(b, plan, p2)
+    if pin_b:
+        b_dist = _pin_row_shards(b_dist, mesh3, TB_AXIS, REP_AXIS)
+    c_dist = symm_3d(_flat_from_sharded(st, p2), b_dist, plan, mesh3,
                      TB_AXIS, REP_AXIS)
     return collect_rows_3d_jnp(c_dist, plan, p2)
 
 
 def symm_3d_packed_a(a_packed: jax.Array, b: jax.Array, c: int, p2: int,
-                     mesh: Mesh) -> jax.Array:
+                     mesh: Mesh, pin_b: bool = False) -> jax.Array:
     """f32 packed tril × (n1, n2) -> (n1, n2): packed scatter into the
     extended triangle blocks, shard-split over the replication axis."""
     st = ShardedTriTiles.from_packed(a_packed, b.shape[0], c)
-    return symm_3d_sharded_a(st, b, p2, mesh)
+    return symm_3d_sharded_a(st, b, p2, mesh, pin_b=pin_b)
+
+
+# ---- batched stacks on the 3D wire ----------------------------------------
+def syrk_3d_sharded_stacked(a: jax.Array, c: int, p2: int, mesh: Mesh
+                            ) -> ShardedTriTiles:
+    """f32 (k, n1, n2) -> batched ShardedTriTiles: the stack rides the
+    in-slice all-to-all and the cross-slice reduce-scatter payloads."""
+    _, n1, n2 = a.shape
+    plan = make_2d_plan(c, n1, n2 // p2)
+    mesh3 = _mesh_3d(mesh, c * (c + 1), p2)
+    flat = syrk_3d_stacked(distribute_rows_3d_stacked_jnp(a, plan, p2),
+                           plan, mesh3, TB_AXIS, REP_AXIS)
+    return _sharded_from_flat_stacked(flat, plan, n1, c)
+
+
+def syr2k_3d_sharded_stacked(a: jax.Array, b: jax.Array, c: int, p2: int,
+                             mesh: Mesh) -> ShardedTriTiles:
+    _, n1, n2 = a.shape
+    plan = make_2d_plan(c, n1, n2 // p2)
+    mesh3 = _mesh_3d(mesh, c * (c + 1), p2)
+    flat = syr2k_3d_stacked(distribute_rows_3d_stacked_jnp(a, plan, p2),
+                            distribute_rows_3d_stacked_jnp(b, plan, p2),
+                            plan, mesh3, TB_AXIS, REP_AXIS)
+    return _sharded_from_flat_stacked(flat, plan, n1, c)
+
+
+def symm_3d_packed_a_stacked(a_packed: jax.Array, b: jax.Array, c: int,
+                             p2: int, mesh: Mesh) -> jax.Array:
+    """f32 (k, tril_size(n1)) × (k, n1, n2) -> (k, n1, n2)."""
+    _, n1, n2 = b.shape
+    st = ShardedTriTiles.from_packed(a_packed, n1, c)
+    plan = make_2d_plan(c, n1, n2 // p2)
+    mesh3 = _mesh_3d(mesh, c * (c + 1), p2)
+    c_dist = symm_3d_stacked(_flat_from_sharded_stacked(st, p2),
+                             distribute_rows_3d_stacked_jnp(b, plan, p2),
+                             plan, mesh3, TB_AXIS, REP_AXIS)
+    return jax.vmap(lambda d: collect_rows_3d_jnp(d, plan, p2))(
+        c_dist.transpose(2, 0, 1, 3, 4, 5))
 
 
 def syrk_3d_dense(a: jax.Array, c: int, p2: int, mesh: Mesh) -> jax.Array:
@@ -378,8 +591,9 @@ def syr2k_3d_dense(a: jax.Array, b: jax.Array, c: int, p2: int, mesh: Mesh
 
 
 def symm_3d_dense(a_sym: jax.Array, b: jax.Array, c: int, p2: int,
-                  mesh: Mesh) -> jax.Array:
-    return symm_3d_packed_a(pack_tril(jnp.tril(a_sym)), b, c, p2, mesh)
+                  mesh: Mesh, pin_b: bool = False) -> jax.Array:
+    return symm_3d_packed_a(pack_tril(jnp.tril(a_sym)), b, c, p2, mesh,
+                            pin_b=pin_b)
 
 
 # --------------------------------------------------------------------------
@@ -453,23 +667,27 @@ def syr2k_3d_limited_sharded(a: jax.Array, b_mat: jax.Array, c: int,
 
 
 def symm_3d_limited_sharded_a(st: ShardedTriTiles, b: jax.Array, p2: int,
-                              chunk: int, mesh: Mesh) -> jax.Array:
+                              chunk: int, mesh: Mesh, pin_b: bool = False
+                              ) -> jax.Array:
     """Alg 18: gather A's triangle blocks once, stream B/C chunks."""
     n1, n2 = st.n, b.shape[1]
     c = st.c
     bw, nsteps = _limited_steps(n2, p2, chunk)
     plan_b = make_2d_plan(c, n1, bw)
     mesh3 = _mesh_3d(mesh, c * (c + 1), p2)
-    c_dist = symm_3d_limited(_flat_from_sharded(st, p2),
-                             _chunk_cols_3d_jnp(b, plan_b, p2, nsteps),
+    b_dist = _chunk_cols_3d_jnp(b, plan_b, p2, nsteps)
+    if pin_b:
+        b_dist = _pin_row_shards(b_dist, mesh3, TB_AXIS, REP_AXIS)
+    c_dist = symm_3d_limited(_flat_from_sharded(st, p2), b_dist,
                              plan_b, mesh3, TB_AXIS, REP_AXIS)
     return _collect_cols_3d_jnp(c_dist, plan_b, p2, n2)
 
 
 def symm_3d_limited_packed_a(a_packed: jax.Array, b: jax.Array, c: int,
-                             p2: int, chunk: int, mesh: Mesh) -> jax.Array:
+                             p2: int, chunk: int, mesh: Mesh,
+                             pin_b: bool = False) -> jax.Array:
     st = ShardedTriTiles.from_packed(a_packed, b.shape[0], c)
-    return symm_3d_limited_sharded_a(st, b, p2, chunk, mesh)
+    return symm_3d_limited_sharded_a(st, b, p2, chunk, mesh, pin_b=pin_b)
 
 
 def syrk_3d_limited_dense(a: jax.Array, c: int, p2: int, chunk: int,
@@ -483,6 +701,7 @@ def syr2k_3d_limited_dense(a: jax.Array, b: jax.Array, c: int, p2: int,
 
 
 def symm_3d_limited_dense(a_sym: jax.Array, b: jax.Array, c: int, p2: int,
-                          chunk: int, mesh: Mesh) -> jax.Array:
+                          chunk: int, mesh: Mesh, pin_b: bool = False
+                          ) -> jax.Array:
     return symm_3d_limited_packed_a(pack_tril(jnp.tril(a_sym)), b, c, p2,
-                                    chunk, mesh)
+                                    chunk, mesh, pin_b=pin_b)

@@ -42,7 +42,7 @@ from typing import List, Optional, Tuple
 
 import jax
 
-from ..core.dispatch import (AlgoChoice, choose_algorithm,
+from ..core.dispatch import (AlgoChoice, choose_algorithm, ring_nb,
                              resolve_memory_budget)
 from ..core.gf import prime_power
 from .autotune import heuristic_tiles, pick_tiles
@@ -59,6 +59,7 @@ class Route:
     """An executable routing decision."""
     op: str
     path: str     # "dense" | "pallas" | "1d" | "2d" | "3d" | "3d-limited"
+                  # | "ring"
     reason: str
     n1: int
     n2: int
@@ -80,6 +81,10 @@ class Route:
                 # chunk and its predicted word count W(x)
                 grid += (f" b={self.choice.b} M={self.M}"
                          f" W_IX={self.choice.predicted_words:.4g}w")
+        elif self.choice is not None and self.path == "ring":
+            grid = (f" ring P={self.choice.P}"
+                    f" nb={ring_nb(self.n1, self.choice.P)}"
+                    f" shifts={self.choice.P // 2}")
         tiles = f" tiles={self.tiles}" if self.tiles else ""
         return (f"{self.op}[{self.n1}x{self.n2}] -> {self.path}"
                 f"{grid}{tiles} ({self.reason})")
@@ -173,6 +178,10 @@ def _grid_fits(choice: AlgoChoice, P: int, n2: int, single_axis: bool
                ) -> Optional[str]:
     """Which mesh path (if any) can execute ``choice`` exactly."""
     c = choice.c
+    if choice.kind == "ring":
+        # a pure ppermute ring over ONE named axis: no c(c+1) embed, no
+        # idle devices, no n2 divisibility (only rows are padded)
+        return "ring" if choice.P >= 2 else None
     if choice.kind == "2d":
         if choice.idle == 0 and c >= 2 and _is_prime_power(c):
             return "2d"
@@ -247,23 +256,45 @@ def plan_route(op: str, n1: int, n2: int, *, dtype=None, batch: bool = False,
                           "a mesh routes the call", stacklevel=3)
         P = mesh.shape[ax]
         if batch:
-            # collectives don't vmap under shard_map; instead of the old
-            # GSPMD dense fallback, stacks of packed triangles ride the
-            # 1D wire natively (one RS/AG covers the whole stack)
+            # collectives don't vmap under shard_map; instead the stack
+            # rides a collective's payload axes: packed triangles on the
+            # 1D wire, extended triangle blocks on the 2d/3d all-to-all,
+            # row blocks on the ring shifts — ONE collective (pair)
+            # covers the whole stack.  The streamed 3d-limited schedule
+            # has no stacked form; it falls through to 1d/dense.
+            choice = choose_algorithm(n1, n2, P, m, M_res)
+            grid_path = _grid_fits(choice, P, n2, len(mesh.shape) == 1)
+            if grid_path == "ring":
+                return _emit(Route(op, "ring", "batched: stacked row "
+                                   "blocks ride the cyclic-shift wire",
+                                   n1, n2, m, P=P, axis=ax, choice=choice,
+                                   M=M_res))
+            if grid_path in ("2d", "3d"):
+                return _emit(Route(op, grid_path, "batched: extended "
+                                   "triangle blocks stacked on the "
+                                   f"{grid_path} exchange payload", n1, n2,
+                                   m, P=P, axis=ax, choice=choice,
+                                   M=M_res))
             if n2 % P == 0:
                 return _emit(Route(op, "1d", "batched: stacked packed "
                                    "triangles on the 1D wire", n1, n2, m,
-                                   P=P, axis=ax, M=M_res,
-                                   choice=choose_algorithm(n1, n2, P, m)))
+                                   P=P, axis=ax, M=M_res, choice=choice))
             return _emit(Route(op, "dense", f"batched with n2 % P = "
-                               f"{n2 % P} != 0; GSPMD dense", n1, n2, m,
-                               P=P, axis=ax, M=M_res))
+                               f"{n2 % P} != 0 and no stacked grid; "
+                               "GSPMD dense", n1, n2, m, P=P, axis=ax,
+                               M=M_res))
         choice = choose_algorithm(n1, n2, P, m, M_res)
         fits_1d = n2 % P == 0
         grid_path = _grid_fits(choice, P, n2, len(mesh.shape) == 1)
         if choice.kind == "1d" and fits_1d:
             return _emit(Route(op, "1d", f"Thm 9 case {choice.case}: packed-"
                                "triangle 1D is optimal", n1, n2, m, P=P,
+                               axis=ax, choice=choice, M=M_res))
+        if grid_path == "ring":
+            return _emit(Route(op, "ring", "computation-bound (large "
+                               "n2/P): cyclic-shift ring computes only "
+                               "the unique half of the symmetric flops "
+                               "at 1d-level words", n1, n2, m, P=P,
                                axis=ax, choice=choice, M=M_res))
         if grid_path == "3d-limited":
             return _emit(Route(op, "3d-limited", f"§IX memory-dependent: "

@@ -88,7 +88,7 @@ def resolve_memory_budget(M: Union[str, int, None] = "auto"
 
 @dataclass
 class AlgoChoice:
-    kind: str            # "1d" | "2d" | "3d" | "3d-limited"
+    kind: str            # "1d" | "2d" | "3d" | "3d-limited" | "ring"
     case: int            # Thm 9 case
     P: int
     c: int = 0           # 2D/3D triangle-block grid parameter (p1 = c(c+1))
@@ -127,6 +127,35 @@ def fit_c_grid(P: int) -> int:
     return largest_c_grid(P)
 
 
+#: ring-route planning gate: the per-device row block must be at least
+#: this tall before the rank-update dots amortize the slot bookkeeping
+#: (tiny blocks are wire-bound and the word-minimal families win)
+_RING_MIN_BLOCK = 32
+
+#: flops/words balance: the job counts as computation-bound — and the
+#: flop-halving ring route is planned — when the per-device dot flops
+#: (~2·n1²·n2/P) exceed _RING_BALANCE × the 1d wire words (~n1²/2),
+#: i.e. n2 >= (_RING_BALANCE/4)·P
+_RING_BALANCE = 128.0
+
+
+def ring_nb(n1: int, P: int) -> int:
+    """Ring row-block height: ceil(n1/P), rounded up to even when P is
+    even so the final antipodal shift splits into exact halves."""
+    nb = -(-n1 // P)
+    if P % 2 == 0 and nb % 2:
+        nb += 1
+    return nb
+
+
+def ring_working_set(n1: int, n2: int, P: int, m: int) -> float:
+    """Per-device resident words of the ring route: the owned operand
+    row block(s) plus one circulating buffer copy, plus the S+1
+    extended-triangle output slots."""
+    nb = ring_nb(n1, P)
+    return m * 2 * nb * n2 + (P // 2 + 1) * nb * nb
+
+
 def predicted_words_1d(n1: int, P: int) -> float:
     return (1 - 1 / P) * n1 * (n1 + 1) / 2
 
@@ -151,6 +180,24 @@ def choose_algorithm(n1: int, n2: int, P: int, m: int,
     """
     case = mem_independent_case(n1, n2, P, m)
     lb = memory_independent_lower_bound(n1, n2, P, m).bound
+
+    # computation-bound regime: the cyclic-shift ring route computes
+    # only the unique half of the symmetric interactions —
+    # ~⌈(P+1)/2⌉/P of the 2d route's per-device flops — at 1d-level
+    # collective volume (⌊P/2⌋ shifts of the nb×n2 slice).  It wins
+    # when the dot work, not the wire, is the bottleneck; word-minimal
+    # families keep the wire-bound regimes.  Case 1 is excluded: there
+    # the column-split 1d algorithm already touches each symmetric
+    # interaction exactly once (flop-optimal) while moving only C.
+    # M budgets are respected: if the circulating working set does not
+    # fit, fall through to the streamed §IX planning below.
+    nb_ring = ring_nb(n1, P)
+    if (P >= 2 and case != 1 and nb_ring >= _RING_MIN_BLOCK
+            and n2 >= (_RING_BALANCE / 4) * P
+            and (M is None or ring_working_set(n1, n2, P, m) <= M)):
+        return AlgoChoice(
+            kind="ring", case=case, P=P, c=0, p1=P, p2=1, idle=0,
+            predicted_words=m * (P // 2) * nb_ring * n2, lower_bound=lb)
 
     # memory feasibility of the unconstrained 3D/2D algorithm (§IX trigger)
     def mem_3d(c: int, p2: int) -> float:

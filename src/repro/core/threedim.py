@@ -22,8 +22,9 @@ from jax.sharding import PartitionSpec as P
 
 from ..compat import pvary, shard_map
 from .twodim import (TwoDPlan, _exchange_rows, _syrk_blocks, make_2d_plan,
-                     symm_2d_local, syr2k_2d_local, syrk_2d_local,
-                     tb_flat_words)
+                     symm_2d_local, symm_2d_local_stacked, syr2k_2d_local,
+                     syr2k_2d_local_stacked, syrk_2d_local,
+                     syrk_2d_local_stacked, tb_flat_words)
 
 
 # --------------------------------------------------------------------------
@@ -77,6 +78,41 @@ def symm_3d_local(a_flat_shard: jax.Array, b_own: jax.Array, plan: TwoDPlan,
     flat = jax.lax.all_gather(a_flat_shard, rep_axis, axis=0, tiled=True)
     a_off, a_diag = _unflatten_tb(flat, plan)
     return symm_2d_local(a_off, a_diag, b_own, plan, tb_axis)
+
+
+# ---- batched stacks on the 3D wire ----------------------------------------
+# Same payload-stacking as the 2D wire: the K-stack rides the in-slice
+# all-to-all and the cross-slice reduce-scatter / all-gather as extra
+# payload dims (scatter/gather dimension shifts from 0 to 1).
+def syrk_3d_local_stacked(a_own: jax.Array, plan: TwoDPlan, tb_axis: str,
+                          rep_axis: str, p2: int) -> jax.Array:
+    """a_own (K, c, nb, w₂) -> (K, shard) flat C_Tk shards."""
+    off, diag = syrk_2d_local_stacked(a_own, plan, tb_axis)
+    K = off.shape[0]
+    flat = jnp.concatenate([off.reshape(K, -1), diag.reshape(K, -1)], 1)
+    flat = jnp.pad(flat, ((0, 0), (0, -flat.shape[1] % p2)))
+    return jax.lax.psum_scatter(flat, rep_axis, scatter_dimension=1,
+                                tiled=True)
+
+
+def syr2k_3d_local_stacked(a_own: jax.Array, b_own: jax.Array,
+                           plan: TwoDPlan, tb_axis: str, rep_axis: str,
+                           p2: int) -> jax.Array:
+    off, diag = syr2k_2d_local_stacked(a_own, b_own, plan, tb_axis)
+    K = off.shape[0]
+    flat = jnp.concatenate([off.reshape(K, -1), diag.reshape(K, -1)], 1)
+    flat = jnp.pad(flat, ((0, 0), (0, -flat.shape[1] % p2)))
+    return jax.lax.psum_scatter(flat, rep_axis, scatter_dimension=1,
+                                tiled=True)
+
+
+def symm_3d_local_stacked(a_flat_shard: jax.Array, b_own: jax.Array,
+                          plan: TwoDPlan, tb_axis: str, rep_axis: str
+                          ) -> jax.Array:
+    """a_flat_shard (K, shard), b_own (K, c, nb, w₂) -> (K, c, nb, w₂)."""
+    flat = jax.lax.all_gather(a_flat_shard, rep_axis, axis=1, tiled=True)
+    a_off, a_diag = jax.vmap(lambda f: _unflatten_tb(f, plan))(flat)
+    return symm_2d_local_stacked(a_off, a_diag, b_own, plan, tb_axis)
 
 
 # ---- limited-memory variants (Algs 16–18) ---------------------------------
@@ -171,6 +207,52 @@ def symm_3d(a_flat, b_dist, plan: TwoDPlan, mesh, tb_axis="tb",
     b_dist global (p1, p2, c, nb, w2)."""
     f = functools.partial(symm_3d_local, plan=plan, tb_axis=tb_axis,
                           rep_axis=rep_axis)
+
+    def body(a, b):
+        return f(a[0, 0], b[0, 0])[None, None]
+
+    return jax.jit(shard_map(
+        body, mesh=mesh, in_specs=(P(tb_axis, rep_axis),) * 2,
+        out_specs=P(tb_axis, rep_axis)))(a_flat, b_dist)
+
+
+def syrk_3d_stacked(a_dist: jax.Array, plan: TwoDPlan, mesh,
+                    tb_axis: str = "tb", rep_axis: str = "rep"
+                    ) -> jax.Array:
+    """a_dist global (p1, p2, K, c, nb, w2) sharded P(tb, rep) ->
+    (p1, p2, K, shard)."""
+    p2 = mesh.shape[rep_axis]
+    f = functools.partial(syrk_3d_local_stacked, plan=plan,
+                          tb_axis=tb_axis, rep_axis=rep_axis, p2=p2)
+
+    def body(a):
+        return f(a[0, 0])[None, None]
+
+    return jax.jit(shard_map(
+        body, mesh=mesh, in_specs=P(tb_axis, rep_axis),
+        out_specs=P(tb_axis, rep_axis)))(a_dist)
+
+
+def syr2k_3d_stacked(a_dist, b_dist, plan: TwoDPlan, mesh, tb_axis="tb",
+                     rep_axis="rep"):
+    p2 = mesh.shape[rep_axis]
+    f = functools.partial(syr2k_3d_local_stacked, plan=plan,
+                          tb_axis=tb_axis, rep_axis=rep_axis, p2=p2)
+
+    def body(a, b):
+        return f(a[0, 0], b[0, 0])[None, None]
+
+    return jax.jit(shard_map(
+        body, mesh=mesh, in_specs=(P(tb_axis, rep_axis),) * 2,
+        out_specs=P(tb_axis, rep_axis)))(a_dist, b_dist)
+
+
+def symm_3d_stacked(a_flat, b_dist, plan: TwoDPlan, mesh, tb_axis="tb",
+                    rep_axis="rep"):
+    """a_flat global (p1, p2, K, shard) sharded P(tb, rep);
+    b_dist global (p1, p2, K, c, nb, w2)."""
+    f = functools.partial(symm_3d_local_stacked, plan=plan,
+                          tb_axis=tb_axis, rep_axis=rep_axis)
 
     def body(a, b):
         return f(a[0, 0], b[0, 0])[None, None]

@@ -298,6 +298,56 @@ def _reverse_exchange(c_partial: jax.Array, plan: TwoDPlan, axis: str
     return own + summed
 
 
+# ---- batched stacks on the 2D wire ----------------------------------------
+# Collectives don't vmap under shard_map; instead the batch rides the
+# all-to-all payload (the `syrk_1d_packed_stacked` pattern): the K-stack
+# moves as extra leading payload dims of the SAME exchange, so one
+# collective (pair) covers the whole stack.  The collective-free local
+# compute then vmaps over K.
+def _exchange_rows_stacked(a_own: jax.Array, plan: TwoDPlan, axis: str
+                           ) -> jax.Array:
+    """Stacked :func:`_exchange_rows`: (K, c, nb, w) own shares ->
+    (K, c, nb, n2_pad) assembled rows, one all-to-all for the stack."""
+    c, nb, w = plan.c, plan.nb, plan.w
+    k = jax.lax.axis_index(axis)
+    own = jnp.moveaxis(a_own, 0, 1)                           # (c, K, nb, w)
+    K = own.shape[1]
+    own_pad = jnp.concatenate(
+        [own, jnp.zeros((1, K, nb, w), own.dtype)], 0)
+    send = own_pad[jnp.asarray(plan.send_slot)[k]]            # (P, K, nb, w)
+    recv = jax.lax.all_to_all(send, axis, 0, 0, tiled=True)
+    gsrc = jnp.asarray(plan.gather_src)[k]                    # (c, c+1)
+    is_self = gsrc == k
+    shares = recv[gsrc]                                   # (c, c+1, K, nb, w)
+    shares = jnp.where(is_self[:, :, None, None, None], own[:, None],
+                       shares)
+    return shares.transpose(2, 0, 3, 1, 4).reshape(K, c, nb, (c + 1) * w)
+
+
+def _reverse_exchange_stacked(c_partial: jax.Array, plan: TwoDPlan,
+                              axis: str) -> jax.Array:
+    """Stacked :func:`_reverse_exchange`: (K, c, nb, n2_pad) partial
+    rows -> summed own column shares (K, c, nb, w)."""
+    c, nb, w = plan.c, plan.nb, plan.w
+    k = jax.lax.axis_index(axis)
+    K = c_partial.shape[0]
+    parts = c_partial.reshape(K, c, nb, c + 1, w)
+    slot = jnp.asarray(plan.send_slot)[k]                      # (P,)
+    pcol = jnp.asarray(plan.peer_col)[k]                       # (P,)
+    valid = jnp.asarray(plan.send_valid)[k]                    # (P,)
+    parts_pad = jnp.concatenate(
+        [parts, jnp.zeros((K, 1, nb, c + 1, w), parts.dtype)], 1)
+    send = parts_pad[:, slot, :, pcol]                         # (P, K, nb, w)
+    send = send * valid[:, None, None, None]
+    recv = jax.lax.all_to_all(send, axis, 0, 0, tiled=True)    # (P, K, nb, w)
+    seg = jnp.where(valid, slot, c)
+    summed = jax.ops.segment_sum(recv, seg, num_segments=c + 1)[:c]
+    own = jnp.take_along_axis(
+        parts, jnp.asarray(plan.self_col)[k][None, :, None, None, None],
+        axis=3)[:, :, :, 0, :]                                 # (K, c, nb, w)
+    return own + jnp.moveaxis(summed, 0, 1)
+
+
 # --------------------------------------------------------------------------
 # local computations
 # --------------------------------------------------------------------------
@@ -334,16 +384,13 @@ def syr2k_2d_local(a_own: jax.Array, b_own: jax.Array, plan: TwoDPlan,
     return _syrk_blocks(rows_a, rows_b, plan, axis)
 
 
-def symm_2d_local(a_off: jax.Array, a_diag: jax.Array, b_own: jax.Array,
+def _symm_partial(a_off: jax.Array, a_diag: jax.Array, rows_b: jax.Array,
                   plan: TwoDPlan, axis: str) -> jax.Array:
-    """Alg 12.  a_off: (T, nb, nb) off-diag blocks A_{ij}, i>j ∈ R_k;
-    a_diag: (nb, nb) lower-tri diagonal block (zeros if none);
-    b_own: (c, nb, w) B row shares.  Returns C row shares (c, nb, w)."""
-    c, nb = plan.c, plan.nb
+    """Collective-free core of Alg 12: extended triangle block ×
+    assembled B rows (c, nb, n2p) -> partial C rows (c, nb, n2p)."""
+    c = plan.c
     k = jax.lax.axis_index(axis)
-    rows_b = _exchange_rows(b_own, plan, axis)                # (c, nb, n2p)
     pa, pb = plan.pairs[:, 0], plan.pairs[:, 1]
-    n2p = rows_b.shape[-1]
     # C_i += A_ij B_j  and  C_j += A_ij^T B_i  for each pair (i>j)
     contrib_i = jnp.einsum("tnm,tmk->tnk", a_off, rows_b[pb])  # (T, nb, n2p)
     contrib_j = jnp.einsum("tmn,tmk->tnk", a_off, rows_b[pa])
@@ -353,9 +400,45 @@ def symm_2d_local(a_off: jax.Array, a_diag: jax.Array, b_own: jax.Array,
     ds = jnp.asarray(plan.diag_slot)[k]
     a_dd = a_diag + jnp.tril(a_diag, -1).T
     dcontrib = (a_dd @ rows_b[jnp.maximum(ds, 0)]) * (ds >= 0)
-    c_partial = c_partial.at[jnp.maximum(ds, 0)].add(
+    return c_partial.at[jnp.maximum(ds, 0)].add(
         jnp.where(ds >= 0, dcontrib, jnp.zeros_like(dcontrib)))
+
+
+def symm_2d_local(a_off: jax.Array, a_diag: jax.Array, b_own: jax.Array,
+                  plan: TwoDPlan, axis: str) -> jax.Array:
+    """Alg 12.  a_off: (T, nb, nb) off-diag blocks A_{ij}, i>j ∈ R_k;
+    a_diag: (nb, nb) lower-tri diagonal block (zeros if none);
+    b_own: (c, nb, w) B row shares.  Returns C row shares (c, nb, w)."""
+    rows_b = _exchange_rows(b_own, plan, axis)                # (c, nb, n2p)
+    c_partial = _symm_partial(a_off, a_diag, rows_b, plan, axis)
     return _reverse_exchange(c_partial, plan, axis)
+
+
+def syrk_2d_local_stacked(a_own: jax.Array, plan: TwoDPlan, axis: str):
+    """(K, c, nb, w) -> (off (K, T, nb, nb), diag (K, nb, nb)): stacked
+    exchange + vmapped (collective-free) block compute."""
+    rows = _exchange_rows_stacked(a_own, plan, axis)
+    return jax.vmap(lambda r: _syrk_blocks(r, None, plan, axis))(rows)
+
+
+def syr2k_2d_local_stacked(a_own: jax.Array, b_own: jax.Array,
+                           plan: TwoDPlan, axis: str):
+    rows_a = _exchange_rows_stacked(a_own, plan, axis)
+    rows_b = _exchange_rows_stacked(b_own, plan, axis)
+    return jax.vmap(
+        lambda ra, rb: _syrk_blocks(ra, rb, plan, axis))(rows_a, rows_b)
+
+
+def symm_2d_local_stacked(a_off: jax.Array, a_diag: jax.Array,
+                          b_own: jax.Array, plan: TwoDPlan, axis: str
+                          ) -> jax.Array:
+    """Stacked Alg 12: (K, T, nb, nb) + (K, nb, nb) + (K, c, nb, w) ->
+    C row shares (K, c, nb, w); both exchanges cover the whole stack."""
+    rows_b = _exchange_rows_stacked(b_own, plan, axis)
+    c_partial = jax.vmap(
+        lambda o, d, r: _symm_partial(o, d, r, plan, axis))(
+        a_off, a_diag, rows_b)
+    return _reverse_exchange_stacked(c_partial, plan, axis)
 
 
 # --------------------------------------------------------------------------
@@ -388,6 +471,43 @@ def symm_2d(a_off: jax.Array, a_diag: jax.Array, b_dist: jax.Array,
             plan: TwoDPlan, mesh, axis: str = "x"):
     def body(ao, ad, b):
         return symm_2d_local(ao[0], ad[0], b[0], plan, axis)[None]
+
+    return jax.jit(shard_map(
+        body, mesh=mesh, in_specs=(P(axis), P(axis), P(axis)),
+        out_specs=P(axis)))(a_off, a_diag, b_dist)
+
+
+def syrk_2d_stacked(a_dist: jax.Array, plan: TwoDPlan, mesh,
+                    axis: str = "x"):
+    """a_dist: (P, K, c, nb, w) sharded P(axis).  Returns
+    (off (P, K, T, nb, nb), diag (P, K, nb, nb)) sharded over axis."""
+    def body(a):
+        off, diag = syrk_2d_local_stacked(a[0], plan, axis)
+        return off[None], diag[None]
+
+    return jax.jit(shard_map(
+        body, mesh=mesh, in_specs=P(axis),
+        out_specs=(P(axis), P(axis))))(a_dist)
+
+
+def syr2k_2d_stacked(a_dist: jax.Array, b_dist: jax.Array, plan: TwoDPlan,
+                     mesh, axis: str = "x"):
+    def body(a, b):
+        off, diag = syr2k_2d_local_stacked(a[0], b[0], plan, axis)
+        return off[None], diag[None]
+
+    return jax.jit(shard_map(
+        body, mesh=mesh, in_specs=(P(axis), P(axis)),
+        out_specs=(P(axis), P(axis))))(a_dist, b_dist)
+
+
+def symm_2d_stacked(a_off: jax.Array, a_diag: jax.Array,
+                    b_dist: jax.Array, plan: TwoDPlan, mesh,
+                    axis: str = "x"):
+    """a_off (P, K, T, nb, nb), a_diag (P, K, nb, nb),
+    b_dist (P, K, c, nb, w) -> C shares (P, K, c, nb, w)."""
+    def body(ao, ad, b):
+        return symm_2d_local_stacked(ao[0], ad[0], b[0], plan, axis)[None]
 
     return jax.jit(shard_map(
         body, mesh=mesh, in_specs=(P(axis), P(axis), P(axis)),

@@ -970,12 +970,149 @@ def check_persist() -> None:
     print("OK persist")
 
 
+def check_ring() -> None:
+    """The cyclic-shift ring route (run with 6 or 8 fake devices):
+    dense == ring parity for syrk/syr2k/symm at odd and even P incl.
+    ragged n1 and batched stacks, jaxpr proof that the packed ring wire
+    moves no n×n dense intermediate forward or backward, compiled-HLO
+    proof the wire is exactly ⌊P/2⌋ collective-permutes, backward-symm
+    Route capture, and (8+ devices) the computation-optimality gate:
+    ring per-device HLO flops ≤ 0.6× the 2d route's at n1=2048."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro import blas
+    from repro.analysis.hlo_cost import analyze_hlo
+    from repro.blas import meshpath
+    from repro.core.packing import pack_tril
+
+    ndev = len(jax.devices())
+    rng = np.random.default_rng(11)
+    TOL = dict(rtol=3e-4, atol=3e-4)
+
+    def pk(x):
+        return np.asarray(pack_tril(jnp.tril(
+            jnp.asarray(x) @ jnp.swapaxes(jnp.asarray(x), -1, -2))))
+
+    # ---- parity: odd and even P, ragged n1, batched stacks -------------
+    cases = [(2, 64, 64, None), (2, 65, 64, None), (3, 96, 96, None),
+             (3, 100, 96, None), (4, 128, 128, 3),
+             (ndev, 32 * ndev, 32 * ndev, None)]
+    for P, n1, n2, k in cases:
+        mesh = _mesh((P,), ("x",))
+        assert blas.plan_route("syrk", n1, n2, batch=k is not None,
+                               mesh=mesh).path == "ring", (P, n1, n2, k)
+        shape = (k, n1, n2) if k else (n1, n2)
+        A = rng.standard_normal(shape).astype(np.float32)
+        B = rng.standard_normal(shape).astype(np.float32)
+        got = np.asarray(blas.syrk(A, fill="packed", mesh=mesh))
+        np.testing.assert_allclose(got, pk(A), **TOL)
+        got = np.asarray(blas.syr2k(A, B, fill="packed", mesh=mesh))
+        prod = A @ np.swapaxes(B, -1, -2)
+        want = np.asarray(pack_tril(jnp.asarray(
+            np.tril(prod + np.swapaxes(prod, -1, -2)))))
+        np.testing.assert_allclose(got, want, **TOL)
+        S = rng.standard_normal(shape[:-2] + (n1, n1)).astype(np.float32)
+        got = np.asarray(blas.symm(S, B, mesh=mesh))
+        sym = np.tril(S) + np.swapaxes(np.tril(S, -1), -1, -2)
+        np.testing.assert_allclose(got, sym @ B, **TOL)
+    print(f"  dense == ring parity at P in {sorted({c[0] for c in cases})} "
+          "(ragged + batched)")
+
+    # ---- the wire is exactly floor(P/2) collective-permutes ------------
+    for P, n1, n2 in [(2, 96, 64), (3, 129, 96), (ndev, 32 * ndev,
+                                                  32 * ndev)]:
+        mesh = _mesh((P,), ("x",))
+        A = jnp.asarray(rng.standard_normal((n1, n2)), jnp.float32)
+        B = jnp.asarray(rng.standard_normal((n1, n2)), jnp.float32)
+        assert blas.plan_route("syrk", n1, n2, mesh=mesh).path == "ring"
+        for fn, ops in [(lambda x: blas.syrk(x, fill="packed", mesh=mesh),
+                         (A,)),
+                        (lambda x, y: blas.syr2k(x, y, fill="packed",
+                                                 mesh=mesh), (A, B))]:
+            hlo = jax.jit(fn).lower(*ops).compile().as_text()
+            counts = analyze_hlo(hlo).collective_counts
+            got = counts.get("collective-permute", 0)
+            assert got == P // 2, (P, counts)
+    print("  syrk/syr2k ring wire is exactly floor(P/2) ppermutes "
+          f"(P=2, 3, {ndev})")
+
+    # ---- dense-free wire, forward and backward -------------------------
+    for P, n1, n2 in [(2, 96, 64), (3, 129, 96)]:
+        mesh = _mesh((P,), ("x",))
+        A = jnp.asarray(rng.standard_normal((n1, n2)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((n1 * (n1 + 1) // 2,)),
+                        jnp.float32)
+        jx = jax.make_jaxpr(
+            lambda x: blas.syrk(x, fill="packed", mesh=mesh))(A)
+        assert not _square_vars_on_wire(jx, n1), \
+            f"ring fwd densified at P={P}"
+        jx = jax.make_jaxpr(jax.grad(lambda x: jnp.vdot(
+            w, blas.syrk(x, fill="packed", mesh=mesh))))(A)
+        assert not _square_vars_on_wire(jx, n1), \
+            f"ring bwd densified at P={P}"
+    print("  fill='packed' ring wire is dense-free forward and backward")
+
+    # ---- grad parity; the backward SYMM stays on the ring --------------
+    mesh = _mesh((ndev,), ("x",))
+    n1 = n2 = 32 * ndev
+    A = jnp.asarray(rng.standard_normal((n1, n2)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((n1 * (n1 + 1) // 2,)), jnp.float32)
+
+    def loss(x):
+        return jnp.vdot(w, blas.syrk(x, fill="packed", mesh=mesh))
+
+    g = jax.grad(loss)(A)
+    gd = jax.grad(lambda x: jnp.vdot(w, pack_tril(jnp.tril(x @ x.T))))(A)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gd), **TOL)
+    with blas.capture_routes() as log:
+        jax.grad(loss)(A)
+    planned = [(r.op, r.path) for r in log]
+    assert ("syrk", "ring") in planned and ("symm", "ring") in planned, \
+        planned
+    print("  grad parity vs dense; backward symm routed ring")
+
+    # ---- computation optimality: ring flops <= 0.6x the 2d route's ----
+    if ndev >= 8:
+        n1, n2 = 2048, 512
+        A = jnp.asarray(rng.standard_normal((n1, n2)), jnp.float32)
+        mesh8 = _mesh((8,), ("x",))
+        ring_hlo = jax.jit(
+            lambda x: meshpath.syrk_ring_packed(x, mesh8, "x")
+        ).lower(A).compile().as_text()
+        mesh6 = _mesh((6,), ("x",))
+        two_hlo = jax.jit(
+            lambda x: meshpath.syrk_2d_sharded(x, 2, mesh6, "x").to_packed()
+        ).lower(A).compile().as_text()
+        rf, tf = analyze_hlo(ring_hlo).flops, analyze_hlo(two_hlo).flops
+        assert rf <= 0.6 * tf, (rf, tf, rf / tf)
+        B2 = jnp.asarray(rng.standard_normal((n1, n2)), jnp.float32)
+        ring2 = jax.jit(lambda x, y: meshpath.syr2k_ring_packed(
+            x, y, mesh8, "x")).lower(A, B2).compile().as_text()
+        two2 = jax.jit(lambda x, y: meshpath.syr2k_2d_sharded(
+            x, y, 2, mesh6, "x").to_packed()).lower(A, B2).compile().as_text()
+        rf2, tf2 = analyze_hlo(ring2).flops, analyze_hlo(two2).flops
+        # the 2d rank-2k schedule runs 2 GEMM passes over the exchanged
+        # row blocks — 2× its SYRK flops on the off-diagonal blocks,
+        # the redundancy the ring halves.  (The shipped 2d syr2k
+        # additionally one-dots its block-diagonal g + gᵀ, an
+        # orthogonal saving the ring's slot 0 applies identically, so
+        # the measured 2d syr2k lands below 2× and the measured ratio
+        # sits near the 16/24 structural floor — tripwired at 0.7.)
+        assert rf2 <= 0.6 * (2 * tf), (rf2, tf, rf2 / (2 * tf))
+        assert rf2 <= 0.7 * tf2, (rf2, tf2, rf2 / tf2)
+        print(f"  per-device HLO flops: ring/2d = {rf / tf:.4f} (syrk) "
+              f"<= 0.6, syr2k {rf2 / (2 * tf):.4f} <= 0.6 of the "
+              f"2-pass model ({rf2 / tf2:.4f} of measured 2d syr2k)")
+    print("OK ring")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite", required=True,
                     choices=["1d", "2d", "3d", "3d-limited", "blas",
                              "blas_grad", "mesh_packed", "memdep",
-                             "persist"])
+                             "persist", "ring"])
     ap.add_argument("--P", type=int, default=4)
     ap.add_argument("--c", type=int, default=2)
     ap.add_argument("--p2", type=int, default=2)
@@ -997,6 +1134,8 @@ def main():
         check_memdep()
     elif args.suite == "persist":
         check_persist()
+    elif args.suite == "ring":
+        check_ring()
     else:
         check_3d(args.c, args.p2, args.nsteps)
 

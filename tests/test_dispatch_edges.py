@@ -30,9 +30,13 @@ def _grid_ok(ch, P):
     p1, p2 = max(ch.p1, 1), max(ch.p2, 1)
     assert p1 * p2 <= P, (ch, P)
     assert ch.idle >= 0, (ch, P)
-    assert ch.kind in ("1d", "2d", "3d", "3d-limited")
+    assert ch.kind in ("1d", "2d", "3d", "3d-limited", "ring")
     if ch.kind in ("2d", "3d", "3d-limited"):
         assert ch.p1 == ch.c * (ch.c + 1)
+    if ch.kind == "ring":
+        # the cyclic-shift schedule uses every device, no grid embed
+        assert (ch.p1, ch.p2, ch.idle) == (P, 1, 0)
+        assert ch.case != 1           # case 1 keeps the 1d wire
 
 
 @pytest.mark.parametrize("P", PS)
@@ -54,9 +58,17 @@ def test_p1_no_grid_fits_falls_back_to_1d():
 
 
 def test_p2_smallest_grid():
-    # P = 2 fits exactly c = 1 (p1 = 2) with zero idle
-    ch = choose_algorithm(65536, 128, 2, 1)
+    # P = 2 fits exactly c = 1 (p1 = 2) with zero idle; n2 below the
+    # ring balance point so the wire-bound 2d family keeps the shape
+    ch = choose_algorithm(65536, 32, 2, 1)
     assert ch.kind == "2d" and ch.c == 1 and ch.idle == 0
+
+
+def test_p2_computation_bound_plans_ring():
+    # same P = 2 with a flop-heavy n2: the cyclic-shift ring route
+    # takes over with a single antipodal shift
+    ch = choose_algorithm(65536, 128, 2, 1)
+    assert ch.kind == "ring" and ch.P == 2 and ch.idle == 0
 
 
 def test_prime_p_idles_remainder():
