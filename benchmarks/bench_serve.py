@@ -1,0 +1,107 @@
+"""§Serve — multi-tenant serving load test: Gram/whitening cache on/off.
+
+Drives ``launch/serve.py`` end to end — thousands of queued synthetic
+requests, mixed prompt lengths, multiple tenants, continuous batching —
+and compares the two ways of producing per-request whitened prompt
+embeddings:
+
+  cache_on   the serving cache (launch/serving_cache.py): per-(tenant,
+             arch, layer) packed bf16 Gram EMA updated by one routed
+             SYRK per admit, whitening factors refreshed by the coupled
+             Newton–Schulz iteration on a background executor — decode
+             only ever reads the latest ready factor;
+  cache_off  the pre-cache baseline: a from-scratch Gram + dense eigh
+             whitening per admitted request, on the hot loop.
+
+Both modes run identical token work (prefill ladder AOT-precompiled,
+same decode schedule, embeddings are side outputs), so tokens/s and
+p99 latency isolate the statistics path.  Per-mode numbers are medians
+over ``repeats`` full serve runs.  ``check_serve_gate`` in
+benchmarks/run.py asserts cache_on tokens/s >= cache_off and cache_on
+p99 <= cache_off.
+
+Rows land in repo-root BENCH_serve.json (full grid: >=1000 requests,
+3 tenants — the cross-PR trajectory) or
+artifacts/BENCH_serve_small.json (CI smoke).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+from typing import List
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_GRIDS = {
+    "full": dict(requests=1000, tenants=3, slots=16, s_max=128,
+                 max_new=6, prompt_lo=4, prompt_hi=96, repeats=3),
+    "small": dict(requests=48, tenants=2, slots=4, s_max=64,
+                  max_new=4, prompt_lo=4, prompt_hi=32, repeats=3),
+}
+
+#: (row mode name, serve.py --whiten value)
+_MODES = (("cache_on", "cache"), ("cache_off", "sync"))
+
+
+def _serve_args(g: dict, whiten: str) -> argparse.Namespace:
+    return argparse.Namespace(
+        arch="stablelm-1.6b", smoke=True, requests=g["requests"],
+        slots=g["slots"], s_max=g["s_max"], max_new=g["max_new"],
+        prompt_lo=g["prompt_lo"], prompt_hi=g["prompt_hi"],
+        tenants=g["tenants"], whiten=whiten, refresh_stride=8,
+        warm_start=None, save_cache=None, no_eos=True, seed=0)
+
+
+def main(grid: str = "full", repeats: int = None) -> List[dict]:
+    import jax
+
+    from repro.launch.serve import serve
+
+    g = _GRIDS[grid]
+    repeats = repeats or g["repeats"]
+    rows = []
+    for mode, whiten in _MODES:
+        reps = [serve(_serve_args(g, whiten)) for _ in range(repeats)]
+        med = lambda key: float(statistics.median(
+            r[key] for r in reps))
+        last = reps[-1]
+        row = {
+            "mode": mode, "whiten": whiten,
+            "requests": g["requests"], "tenants": g["tenants"],
+            "slots": g["slots"], "s_max": g["s_max"],
+            "max_new": g["max_new"],
+            "prompt_lo": g["prompt_lo"], "prompt_hi": g["prompt_hi"],
+            "completed": last["completed"],
+            "tokens_per_s": med("tokens_per_s"),
+            "p50_latency_s": med("p50_latency_s"),
+            "p99_latency_s": med("p99_latency_s"),
+            "mean_ttft_s": med("mean_ttft_s"),
+            "p99_ttft_s": med("p99_ttft_s"),
+            "startup_s": med("startup_s"),
+            "prefill_compiles": last["prefill_compiles"],
+            "bucket_ladder": last["bucket_ladder"],
+            "backend": jax.default_backend(),
+            "reps": repeats, "timer": "median",
+        }
+        if "cache" in last:
+            row["cache"] = last["cache"]
+        rows.append(row)
+        print(f"[serve bench] {mode}: {row['tokens_per_s']:.1f} tok/s, "
+              f"p99 {row['p99_latency_s']:.2f}s "
+              f"({repeats} reps, median)")
+    if grid == "full":
+        out = os.path.join(ROOT, "BENCH_serve.json")
+    else:
+        os.makedirs(os.path.join(ROOT, "artifacts"), exist_ok=True)
+        out = os.path.join(ROOT, "artifacts", "BENCH_serve_small.json")
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"[serve bench] {len(rows)} rows ({grid} grid) -> {out}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(grid=sys.argv[1] if len(sys.argv) > 1 else "full")

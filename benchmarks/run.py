@@ -9,6 +9,8 @@ Suites:
   kernels   Pallas kernels: correctness + triangular-tiling traffic
   roofline  40-cell dry-run roofline table (reads artifacts/*.jsonl)
   persist   packed-native checkpoints: bytes + save/restore wall-clock
+  serve     serving load test: Gram/whitening cache on vs off
+            (tokens/s + p99, gated by check_serve_gate)
 
 Each suite prints its table and the JSON rows land in
 artifacts/bench_<suite>.json for EXPERIMENTS.md.
@@ -23,7 +25,8 @@ import time
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
-SUITES = ("seq", "parallel", "memdep", "kernels", "roofline", "persist")
+SUITES = ("seq", "parallel", "memdep", "kernels", "roofline", "persist",
+          "serve")
 
 #: fixed fwd+bwd shape grid for the BENCH_blas.json trajectory — the
 #: original four rows stay byte-identical in (op, n1, n2, fill) so
@@ -362,6 +365,43 @@ def check_packed_gate(rows, threshold: float = 2.0) -> bool:
     return ok
 
 
+def check_serve_gate(rows) -> bool:
+    """Serving-cache regression gate: the cache_on row (async packed
+    Gram/whitening cache) must not serve worse than the cache_off row
+    (from-scratch Gram + eigh per request on the hot loop) — tokens/s
+    not lower AND p99 latency not higher (2% slack for timer noise on
+    tokens/s; p99 is the headline and gets none).  Also trips if the
+    prefill bucket ladder compiled mid-serve (compiles beyond the
+    precompiled ladder).  Skips gracefully when either row is missing."""
+    by_mode = {r.get("mode"): r for r in rows}
+    on, off = by_mode.get("cache_on"), by_mode.get("cache_off")
+    if on is None or off is None:
+        print("[serve gate] need cache_on and cache_off rows — skipping")
+        return True
+    ok = True
+    tps_ratio = on["tokens_per_s"] / off["tokens_per_s"]
+    verdict = "OK" if tps_ratio >= 0.98 else "FAIL"
+    ok = ok and tps_ratio >= 0.98
+    print(f"[serve gate] tokens/s cache_on {on['tokens_per_s']:.1f} vs "
+          f"cache_off {off['tokens_per_s']:.1f}: ratio {tps_ratio:.3f} "
+          f"(threshold >= 0.98) {verdict}")
+    p99_ratio = on["p99_latency_s"] / off["p99_latency_s"]
+    verdict = "OK" if p99_ratio <= 1.0 else "FAIL"
+    ok = ok and p99_ratio <= 1.0
+    print(f"[serve gate] p99 cache_on {on['p99_latency_s']:.2f}s vs "
+          f"cache_off {off['p99_latency_s']:.2f}s: ratio {p99_ratio:.3f} "
+          f"(threshold <= 1.0) {verdict}")
+    for r in (on, off):
+        ladder = len(r.get("bucket_ladder", []))
+        extra = r["prefill_compiles"] - ladder
+        verdict = "OK" if extra <= 0 else "FAIL"
+        ok = ok and extra <= 0
+        print(f"[serve gate] {r['mode']} prefill compiles "
+              f"{r['prefill_compiles']} vs ladder {ladder}: "
+              f"mid-serve compiles {max(extra, 0)} {verdict}")
+    return ok
+
+
 def check_ring_flops_gate(n1: int = 2048, n2: int = 512) -> bool:
     """Computation-optimality gate for the ring route (compile-only, no
     timed reps): per-device HLO flops of ring SYRK at P=8 must stay
@@ -488,16 +528,19 @@ def main() -> None:
         print("=" * 72)
         t0 = time.time()
         try:
-            # memdep's M-sweep and persist's n-sweep have their own
-            # small/full grids (CI smoke writes artifacts/, full runs
-            # the repo-root trajectory)
+            # memdep's M-sweep, persist's n-sweep, and serve's request
+            # grid have their own small/full grids (CI smoke writes
+            # artifacts/, full runs the repo-root trajectory)
             rows = mod.main(grid=args.grid) \
-                if name in ("memdep", "persist") else mod.main()
+                if name in ("memdep", "persist", "serve") else mod.main()
             out = os.path.join(ROOT, "artifacts", f"bench_{name}.json")
             with open(out, "w") as f:
                 json.dump(rows, f, indent=1, default=str)
             print(f"[{name}] {len(rows) if rows is not None else 0} rows "
                   f"in {time.time()-t0:.1f}s -> {out}")
+            if name == "serve" and not check_serve_gate(rows):
+                print("[serve] serve gate FAILED")
+                failures += 1
         except Exception as e:  # noqa: BLE001
             import traceback
             traceback.print_exc()

@@ -51,9 +51,9 @@ from typing import Optional, Tuple, Union
 import jax
 import jax.numpy as jnp
 
-from ..core.packing import (ShardedTriTiles, TriTiles, pack_tril,
-                            pack_tril_tiles, packed_to_tiles, pad2d,
-                            tiles_to_packed, tril_size, unpack_tril,
+from ..core.packing import (PackedTriangle, ShardedTriTiles, TriTiles,
+                            pack_tril, pack_tril_tiles, packed_to_tiles,
+                            pad2d, tiles_to_packed, tril_size, unpack_tril,
                             unpack_tril_tiles)
 from ..kernels.symm import symm_tiles
 from ..kernels.syr2k import syr2k_tiles
@@ -729,7 +729,12 @@ def symm(a_sym, b, *, out_dtype=None, mesh=None,
     :class:`~repro.core.packing.TriTiles`, in which case the packed
     layout feeds the Pallas kernel or the packed mesh wire directly
     (1d all-gather, 2d/3d extended triangle-block scatter, the ring
-    slot stacks, stacked wires when batched), or a mesh-resident
+    slot stacks, stacked wires when batched), a row-major
+    :class:`~repro.core.packing.PackedTriangle` (e.g. a
+    ``fill="packed"`` SYRK output or a
+    :class:`~repro.optim.gram.GramMonitor` state leaf), which is
+    re-tiled by one pure scatter and then follows the TriTiles
+    contract, or a mesh-resident
     :class:`~repro.core.packing.ShardedTriTiles` (e.g. the
     ``fill="sharded"`` output of :func:`syrk`), which the grid routes
     consume without any distribute step for A — the symmetric matrix
@@ -758,6 +763,11 @@ def symm(a_sym, b, *, out_dtype=None, mesh=None,
                          f"got {b_layout!r}")
     b = jnp.asarray(b)
     n1, n2 = b.shape[-2:]
+    if isinstance(a_sym, PackedTriangle):
+        # row-major packed vec -> packed tiles: one pure scatter, no
+        # dense intermediate; from here the TriTiles contract applies
+        bm = tile[0] if tile else min(128, max(8, -(-a_sym.n // 8) * 8))
+        a_sym = TriTiles.from_packed(a_sym.vec, a_sym.n, bm)
     if isinstance(a_sym, ShardedTriTiles):
         if a_sym.n != n1 or b.ndim > 2:
             raise ValueError(f"symm shapes: ShardedTriTiles(n={a_sym.n}) "

@@ -230,6 +230,13 @@ def plan_route(op: str, n1: int, n2: int, *, dtype=None, batch: bool = False,
     (output layout and beta-accumulate) so measured tiles are tuned —
     and cached — per epilogue: a packed-gather exit and an extra
     streamed C0 input change the VMEM footprint of a (bm, bk) choice.
+    For SYRK/SYR2K ``fill`` is the output layout ("tril" / "full" /
+    "packed" / "sharded"); for SYMM it is an *operand-layout hint* —
+    "tritiles" (pre-packed TriTiles A, incl. a PackedTriangle re-tiled
+    at the API boundary), "sharded" (mesh-resident ShardedTriTiles A),
+    or "packed" (caller plans against a packed source it will tile
+    itself, e.g. the serving whitening refresh) — routing is layout-
+    agnostic but the hint keys the tile cache to the operand's path.
 
     ``M``: per-device memory budget in f32 words for the §IX
     memory-dependent regime.  "auto" (default) probes the device HBM

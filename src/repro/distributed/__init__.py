@@ -1,7 +1,8 @@
 """Distributed runtime: fault tolerance, elasticity, stragglers,
 gradient compression — packed-native for symmetric state."""
-from .checkpoint import (checkpoint_bytes, latest_step, restore_checkpoint,
-                         save_checkpoint, wait_for_saves)
+from .checkpoint import (checkpoint_bytes, latest_step, read_manifest,
+                         restore_checkpoint, save_checkpoint,
+                         wait_for_saves)
 from .compression import (ErrorFeedbackInt8, compressed_allreduce,
                           compressed_allreduce_sym, dequantize_int8,
                           quantize_int8)
@@ -10,7 +11,8 @@ from .elastic import (plan_mesh, plan_shape, reshard_packed_state,
 from .straggler import StepTimer, StragglerMonitor, rebuild_replacement_shard
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
-           "wait_for_saves", "checkpoint_bytes", "quantize_int8",
+           "read_manifest", "wait_for_saves", "checkpoint_bytes",
+           "quantize_int8",
            "dequantize_int8", "ErrorFeedbackInt8", "compressed_allreduce",
            "compressed_allreduce_sym", "plan_mesh", "plan_shape",
            "reshard_tree", "reshard_tritiles", "reshard_packed_state",

@@ -329,6 +329,23 @@ def checkpoint_bytes(ckpt_dir: str, step: Optional[int] = None
     return {"step": step, "total": sum(leaves.values()), "leaves": leaves}
 
 
+def read_manifest(ckpt_dir: str, step: Optional[int] = None
+                  ) -> Dict[str, Any]:
+    """The raw manifest of the newest (or ``step``) checkpoint — leaf
+    shapes/dtypes/crcs, per-leaf ``packed`` layout metadata, and the
+    saver's ``extra`` dict.  This is how a consumer with no prior
+    knowledge of the saved tree (e.g. a serving cache warm-starting
+    from a monitor snapshot) discovers what is in the checkpoint and
+    builds a matching ``like`` for :func:`restore_checkpoint`."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    with open(os.path.join(ckpt_dir, f"step_{step:08d}",
+                           "manifest.json")) as f:
+        return json.load(f)
+
+
 def _load_leaf(d: str, key: str, meta: Dict[str, Any]) -> np.ndarray:
     fn = os.path.join(d, key + ".npy")
     with open(fn, "rb") as f:

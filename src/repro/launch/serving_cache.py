@@ -1,0 +1,289 @@
+"""Multi-tenant packed Gram/whitening serving cache.
+
+Serving-side state layer for the continuous-batching driver
+(launch/serve.py): per-(tenant, arch, layer) EMA'd packed Gram
+statistics and the whitening factors derived from them, with the
+factor refresh running *asynchronously off the decode loop*.
+
+Data flow per admitted request::
+
+    admit ──> update(tenant, arch, layer, feats)    # jitted packed
+          │                                         # SYRK EMA, stored
+          │                                         # in the monitor
+          ──> factor(tenant, arch, layer)           # latest READY W
+          ──> every `refresh_stride` updates: submit a refresh
+                    │
+                    ▼  background executor (never blocks decode)
+              whitening_from_packed(packed_snapshot)   # coupled NS,
+                    │                                  # routed blas
+                    ▼
+              factors[key] = W      # harvested on the next factor()
+
+Keying and isolation: the Gram EMA lives in one
+:class:`~repro.optim.gram.GramMonitor` per (tenant, arch) with the
+layer name as the monitor's state key, so tenant A's activations can
+never flow into tenant B's factor — the state dictionaries are
+disjoint by construction (asserted in tests/test_serve.py).
+
+Hot-path discipline: the monitor state is packed bf16 triangle words
+(``GramMonitor(out_dtype=bf16)``), the update is the routed packed
+SYRK, and the refresh consumes the packed words directly
+(:func:`~repro.optim.gram.whitening_from_packed` — coupled
+Newton–Schulz through ``repro.blas``, no ``eigh`` and no per-iteration
+``unpack_tril``).  Decode never waits on a refresh: ``factor()``
+returns the latest *ready* factor (or None while cold) and merely
+polls future completion.
+
+Determinism: a refresh closes over an immutable snapshot of the packed
+state taken at submit time, so the factor value depends only on the
+update stream, never on scheduler timing; and generated tokens never
+consume factors at all (whitened embeddings are per-request side
+outputs), so decode results are bit-independent of refresh timing.
+
+Cold starts warm from the packed checkpoints of
+:mod:`repro.distributed.checkpoint`: :meth:`ServingGramCache.save`
+writes the EMA state as ``PackedTriangle`` leaves (bf16 triangle words
+on disk) with the (tenant, arch, layer) keying in the manifest's
+``extra`` dict, and :meth:`ServingGramCache.warm_start` rebuilds the
+monitors from the manifest alone — no prior knowledge of the saved
+tree — then schedules refreshes so factors are ready before the first
+request lands.
+"""
+from __future__ import annotations
+
+import functools
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.packing import PackedTriangle, tril_size
+from ..optim.gram import GramMonitor, packed_gram, whitening_from_packed
+
+Key = Tuple[str, str, str]          # (tenant, arch, layer)
+
+
+class ServingGramCache:
+    """Per-(tenant, arch, layer) packed Gram EMA + async whitening.
+
+    ``refresh_stride``: schedule a factor refresh every that many
+    ``update()`` calls per key (1 = after every update).  In-flight
+    refreshes coalesce: while one is pending for a key no second one
+    is queued — the next stride hit after it lands picks up the newer
+    state.
+
+    ``synchronous=True`` (tests / strict mode) runs each refresh
+    inline at schedule time instead of on the executor — same
+    numerics, deterministic completion order.
+    """
+
+    def __init__(self, *, decay: float = 0.99, eps: float = 1e-5,
+                 ns_iters: int = 30, refresh_stride: int = 8,
+                 out_dtype: Any = jnp.bfloat16, mesh=None,
+                 axis: str = "model", interpret: Optional[bool] = None,
+                 synchronous: bool = False):
+        self.decay = decay
+        self.eps = eps
+        self.ns_iters = ns_iters
+        self.refresh_stride = max(1, int(refresh_stride))
+        self.out_dtype = out_dtype
+        self.mesh = mesh
+        self.axis = axis
+        self.interpret = interpret
+        self.synchronous = synchronous
+        self._monitors: Dict[Tuple[str, str], GramMonitor] = {}
+        self._refresh_fns: Dict[int, Any] = {}
+        self._factors: Dict[Key, jax.Array] = {}
+        self._pending: Dict[Key, Future] = {}
+        self._since_refresh: Dict[Key, int] = {}
+        self._lock = threading.Lock()
+        self._pool = None if synchronous else \
+            ThreadPoolExecutor(max_workers=1,
+                               thread_name_prefix="gram-refresh")
+        self.stats = {"updates": 0, "refreshes": 0, "factor_hits": 0,
+                      "factor_cold": 0, "warm_loaded": 0}
+        # Jitted admit-path update (jax caches one executable per input
+        # shape): the eager GramMonitor.update costs ~10 dispatches per
+        # call, which at thousands of admits/s dominates the very
+        # statistics work the cache exists to amortize.  Numerics match
+        # GramMonitor.update exactly: fresh Gram in f32, EMA in f32,
+        # only the stored triangle narrowed.
+        store = self.out_dtype or jnp.float32
+        self._update_init = jax.jit(
+            lambda x: packed_gram(x, self.mesh, self.axis).astype(store))
+        self._update_ema = jax.jit(
+            lambda s, x: (self.decay * s.astype(jnp.float32)
+                          + (1.0 - self.decay)
+                          * packed_gram(x, self.mesh, self.axis)
+                          ).astype(store))
+
+    # -- accumulation ----------------------------------------------------
+    def monitor(self, tenant: str, arch: str) -> GramMonitor:
+        mk = (str(tenant), str(arch))
+        if mk not in self._monitors:
+            self._monitors[mk] = GramMonitor(
+                decay=self.decay, mesh=self.mesh, axis=self.axis,
+                out_dtype=self.out_dtype)
+        return self._monitors[mk]
+
+    def update(self, tenant: str, arch: str, layer: str,
+               x: jax.Array) -> None:
+        """Fold features x (d, n_tokens) into the (tenant, arch, layer)
+        EMA — one routed packed SYRK — and schedule an async factor
+        refresh every ``refresh_stride`` updates."""
+        key = (str(tenant), str(arch), str(layer))
+        mon = self.monitor(tenant, arch)
+        if layer not in mon._state:
+            mon._state[layer] = self._update_init(x)
+            mon._dims[layer] = x.shape[0]
+        else:
+            mon._state[layer] = self._update_ema(mon._state[layer], x)
+        self.stats["updates"] += 1
+        n = self._since_refresh.get(key, 0) + 1
+        if n >= self.refresh_stride:
+            scheduled = self._schedule_refresh(key)
+            self._since_refresh[key] = 0 if scheduled else n
+        else:
+            self._since_refresh[key] = n
+
+    def warm_compile(self, d: int, n_tokens_shapes) -> None:
+        """Pre-compile the jitted update/refresh executables for feature
+        dim ``d`` at each (d, n) feats shape — pure calls on zeros, no
+        state is touched.  A serving driver calls this at startup so no
+        statistics compile ever lands mid-serve (the jit cache is
+        shape-keyed; admits then always hit it)."""
+        store = self.out_dtype or jnp.float32
+        s0 = jnp.zeros(tril_size(d), store)
+        for n in n_tokens_shapes:
+            x0 = jnp.zeros((d, int(n)), jnp.float32)
+            self._update_init(x0)
+            self._update_ema(s0, x0)
+        jax.block_until_ready(self._refresh_fn(d)(s0))
+
+    # -- refresh ---------------------------------------------------------
+    def _refresh_fn(self, d: int):
+        """Jitted NS refresh, cached per feature dimension — every
+        refresh after the first per d reuses the compiled executable
+        (route planning happens once, at trace time)."""
+        fn = self._refresh_fns.get(d)
+        if fn is None:
+            fn = jax.jit(functools.partial(
+                whitening_from_packed, d=d, eps=self.eps, method="ns",
+                iters=self.ns_iters, mesh=self.mesh, axis=self.axis,
+                interpret=self.interpret))
+            self._refresh_fns[d] = fn
+        return fn
+
+    def _compute_factor(self, packed: jax.Array, d: int) -> jax.Array:
+        return jax.block_until_ready(self._refresh_fn(d)(packed))
+
+    def _schedule_refresh(self, key: Key) -> bool:
+        """Submit a refresh for ``key`` unless one is already pending
+        (coalescing).  Returns True when a refresh was started."""
+        tenant, arch, layer = key
+        mon = self._monitors.get((tenant, arch))
+        if mon is None or layer not in mon._state:
+            return False
+        packed, d = mon._state[layer], mon._dims[layer]   # immutable snap
+        if self.synchronous:
+            self._factors[key] = self._compute_factor(packed, d)
+            self.stats["refreshes"] += 1
+            return True
+        with self._lock:
+            if key in self._pending:
+                return False                   # coalesce: one in flight
+            fut = self._pool.submit(self._compute_factor, packed, d)
+            self._pending[key] = fut
+        self.stats["refreshes"] += 1
+        return True
+
+    def _harvest(self) -> None:
+        """Move completed refreshes into the served-factor map (non-
+        blocking; called from the hot path, so only ``done()`` polls)."""
+        with self._lock:
+            done = [(k, f) for k, f in self._pending.items() if f.done()]
+            for k, _ in done:
+                del self._pending[k]
+        for k, f in done:
+            self._factors[k] = f.result()
+
+    def factor(self, tenant: str, arch: str, layer: str
+               ) -> Optional[jax.Array]:
+        """Latest *ready* whitening factor for the key, or None while
+        cold (no refresh has completed yet).  Never blocks."""
+        self._harvest()
+        w = self._factors.get((str(tenant), str(arch), str(layer)))
+        self.stats["factor_hits" if w is not None else
+                   "factor_cold"] += 1
+        return w
+
+    def drain(self) -> None:
+        """Block until every pending refresh has landed (shutdown /
+        test barrier; never called from the decode loop)."""
+        with self._lock:
+            pending = list(self._pending.items())
+            self._pending.clear()
+        for k, f in pending:
+            self._factors[k] = f.result()
+
+    # -- persistence -----------------------------------------------------
+    def save(self, ckpt_dir: str, step: int = 0, **kw) -> None:
+        """Write the EMA state as packed-native checkpoint leaves: one
+        ``PackedTriangle`` per (tenant, arch, layer) — bf16 triangle
+        words on disk — with the keying recorded in the manifest's
+        ``extra`` so :meth:`warm_start` needs no out-of-band schema."""
+        from ..distributed.checkpoint import save_checkpoint
+        tree: Dict[str, PackedTriangle] = {}
+        entries = []
+        i = 0
+        for (tenant, arch), mon in sorted(self._monitors.items()):
+            for layer in sorted(mon._state):
+                leaf = f"g{i:04d}"
+                tree[leaf] = PackedTriangle(mon._state[layer],
+                                            mon._dims[layer])
+                entries.append({"leaf": leaf, "tenant": tenant,
+                                "arch": arch, "layer": layer,
+                                "d": mon._dims[layer]})
+                i += 1
+        save_checkpoint(ckpt_dir, step, tree,
+                        extra={"serving_cache": {
+                            "entries": entries, "decay": self.decay}},
+                        **kw)
+
+    def warm_start(self, ckpt_dir: str, step: Optional[int] = None,
+                   refresh: bool = True) -> int:
+        """Restore EMA state from a :meth:`save` checkpoint discovered
+        through the manifest alone, then (by default) schedule a
+        refresh per restored key so factors are warm before the first
+        request.  Returns the number of restored (tenant, arch, layer)
+        entries."""
+        from ..distributed.checkpoint import (read_manifest,
+                                              restore_checkpoint)
+        manifest = read_manifest(ckpt_dir, step)
+        entries = manifest["extra"]["serving_cache"]["entries"]
+        store = self.out_dtype or jnp.float32
+        like = {e["leaf"]: PackedTriangle(
+            jnp.zeros(tril_size(e["d"]), store), e["d"])
+            for e in entries}
+        _, tree = restore_checkpoint(ckpt_dir, like, step=step)
+        for e in entries:
+            mon = self.monitor(e["tenant"], e["arch"])
+            leaf = tree[e["leaf"]]
+            mon._state[e["layer"]] = leaf.vec.astype(store)
+            mon._dims[e["layer"]] = leaf.n
+            key = (e["tenant"], e["arch"], e["layer"])
+            self._since_refresh[key] = 0
+            if refresh:
+                self._schedule_refresh(key)
+        self.stats["warm_loaded"] += len(entries)
+        return len(entries)
+
+    def snapshot_stats(self) -> Dict[str, int]:
+        with self._lock:
+            pending = len(self._pending)
+        return dict(self.stats, pending=pending,
+                    factors_ready=len(self._factors),
+                    keys=sum(len(m._state)
+                             for m in self._monitors.values()))

@@ -126,9 +126,15 @@ def make_train_step(cfg: ArchConfig, optimizer, *, microbatches: int = 1,
     return train_step
 
 
-def make_prefill_step(cfg: ArchConfig, s_max: int) -> Callable:
+def make_prefill_step(cfg: ArchConfig, s_max: int,
+                      return_hidden: bool = False) -> Callable:
+    """``return_hidden=True`` makes the step return (logits, cache,
+    hidden) with hidden the final-norm activations (B, S, d) — the
+    features the serving Gram cache EMAs; padded positions carry
+    garbage, mask by prompt length."""
     def prefill_step(params, batch):
-        return _prefill(cfg, params, batch, s_max=s_max)
+        return _prefill(cfg, params, batch, s_max=s_max,
+                        return_hidden=return_hidden)
     return prefill_step
 
 

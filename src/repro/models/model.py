@@ -273,9 +273,15 @@ def lm_loss(cfg: ArchConfig, params: Params, batch: Dict[str, Any],
 # serving
 # ---------------------------------------------------------------------------
 def prefill(cfg: ArchConfig, params: Params, batch: Dict[str, Any],
-            s_max: int) -> Tuple[jax.Array, Params]:
+            s_max: int, return_hidden: bool = False):
     """Full-sequence forward building the KV/state cache; returns logits of
-    the last position only."""
+    the last position only.
+
+    ``return_hidden=True`` additionally returns the final-norm hidden
+    states (B, S, d) — the per-token features the serving Gram cache
+    accumulates (positions past each prompt's true length hold padding
+    activations; callers mask by length).  The extra output is free:
+    ``x`` is already computed for the logits head."""
     if cfg.frontend == "embeddings":
         b, s = batch["embeds"].shape[:2]
     else:
@@ -287,6 +293,8 @@ def prefill(cfg: ArchConfig, params: Params, batch: Dict[str, Any],
     w = _unembed(cfg, params)
     logits = softcap(x[:, -1:].astype(jnp.float32) @ w.astype(jnp.float32),
                      cfg.final_softcap)
+    if return_hidden:
+        return logits, cache, x
     return logits, cache
 
 

@@ -1,0 +1,220 @@
+"""Serving driver + multi-tenant packed Gram/whitening cache.
+
+Covers the continuous-batching mechanics (bucket selection, slot
+refill on EOS/max-new, the AOT-precompiled prefill ladder) and the
+serving-cache contract (tenant isolation, async-refresh determinism,
+warm-start-from-packed-checkpoint parity).
+"""
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.configs import get_smoke_config
+from repro.launch.serve import Request, Server, serve, synthetic_requests
+from repro.launch.serving_cache import ServingGramCache
+from repro.models.model import init_params
+
+
+@pytest.fixture(scope="module")
+def smoke():
+    cfg = get_smoke_config("stablelm-1.6b")
+    params = init_params(cfg, jax.random.key(0))
+    return cfg, params
+
+
+def _server(smoke, **kw):
+    cfg, params = smoke
+    kw.setdefault("slots", 2)
+    kw.setdefault("s_max", 32)
+    kw.setdefault("max_new", 4)
+    kw.setdefault("eos_id", -1)
+    return Server(cfg, params, **kw)
+
+
+def _req(rid, length, tenant="default", vocab=512, seed=0):
+    rng = np.random.default_rng(seed + rid)
+    return Request(rid=rid, tenant=tenant, prompt=rng.integers(
+        1, vocab, size=length).astype(np.int32))
+
+
+# -------------------------------------------------------------------------
+# batching mechanics
+# -------------------------------------------------------------------------
+def test_bucket_selection(smoke):
+    srv = _server(smoke, precompile=False)
+    assert srv._bucket(1) == 16
+    assert srv._bucket(16) == 16
+    assert srv._bucket(17) == 32
+    assert srv._bucket(100) == 32          # clamped to s_max
+    assert srv.bucket_ladder() == [16, 32]
+
+
+def test_prefill_ladder_precompiled_no_midserve_compiles(smoke):
+    srv = _server(smoke)
+    assert srv.prefill_compiles == len(srv.bucket_ladder())
+    before = srv.prefill_compiles
+    for rid, L in enumerate((5, 20, 31, 8)):   # both buckets, repeats
+        slot = srv.free_slot()
+        while slot is None:
+            srv.step()
+            slot = srv.free_slot()
+        srv.admit(_req(rid, L), slot)
+    assert srv.prefill_compiles == before      # ladder covered them all
+    assert set(srv._prefill) <= set(srv.bucket_ladder())
+
+
+def test_slot_refill_on_max_new(smoke):
+    args = argparse.Namespace(
+        arch="stablelm-1.6b", smoke=True, requests=5, slots=2, s_max=32,
+        max_new=3, prompt_lo=4, prompt_hi=20, tenants=1, whiten="off",
+        refresh_stride=1, warm_start=None, save_cache=None, no_eos=True,
+        seed=0)
+    out = serve(args)
+    # 5 requests through 2 slots: every one finishes at max_new tokens
+    assert out["completed"] == 5
+    assert out["total_new_tokens"] == 5 * 3
+    assert out["prefill_compiles"] == len(out["bucket_ladder"])
+
+
+def test_slot_refill_on_eos(smoke):
+    srv = _server(smoke, max_new=64)
+    r1 = _req(0, 6)
+    srv.admit(r1, 0)
+    srv.step()                      # deterministic argmax decode
+    eos = r1.generated[-1]
+    srv2 = _server(smoke, max_new=64, eos_id=eos)
+    r2 = _req(0, 6)                 # same prompt -> same first tokens
+    srv2.admit(r2, 0)
+    srv2.step()
+    assert r2.generated[-1] == eos
+    assert r2.done_t is not None and srv2.live[0] is None  # slot freed
+
+
+# -------------------------------------------------------------------------
+# multi-tenant cache keying / isolation
+# -------------------------------------------------------------------------
+def test_tenant_isolation():
+    cache = ServingGramCache(refresh_stride=1, synchronous=True)
+    x = jax.random.normal(jax.random.key(0), (16, 24))
+    cache.update("tA", "arch", "final", x)
+    cache.update("tB", "arch", "final", 2.0 * x)
+    wa = cache.factor("tA", "arch", "final")
+    wb = cache.factor("tB", "arch", "final")
+    # disjoint EMA state by construction, and the factors differ
+    assert set(cache._monitors) == {("tA", "arch"), ("tB", "arch")}
+    assert not np.allclose(np.asarray(wa), np.asarray(wb))
+    # tenant A's Gram state is untouched by tenant B's updates
+    ga = cache._monitors[("tA", "arch")]._state["final"]
+    cache.update("tB", "arch", "final", 3.0 * x)
+    np.testing.assert_array_equal(
+        np.asarray(ga),
+        np.asarray(cache._monitors[("tA", "arch")]._state["final"]))
+
+
+def test_refresh_stride_and_coalescing():
+    cache = ServingGramCache(refresh_stride=3, synchronous=True)
+    x = jax.random.normal(jax.random.key(1), (8, 16))
+    for _ in range(2):
+        cache.update("t", "a", "l", x)
+    assert cache.factor("t", "a", "l") is None     # below stride: cold
+    cache.update("t", "a", "l", x)                 # 3rd update refreshes
+    assert cache.factor("t", "a", "l") is not None
+    assert cache.stats["refreshes"] == 1
+
+
+# -------------------------------------------------------------------------
+# async-refresh determinism
+# -------------------------------------------------------------------------
+def _generate(smoke, whiten, gram_cache=None):
+    srv = _server(smoke, whiten=whiten, gram_cache=gram_cache,
+                  max_new=4, slots=2)
+    queue = [_req(i, 5 + 3 * i, tenant=f"t{i % 2}") for i in range(4)]
+    reqs = list(queue)
+    while queue or any(r is not None for r in srv.live):
+        while queue:
+            s = srv.free_slot()
+            if s is None:
+                break
+            srv.admit(queue.pop(0), s)
+        srv.step()
+    if srv.gram_cache is not None:
+        srv.gram_cache.drain()
+    return [tuple(r.generated) for r in reqs]
+
+
+def test_decode_independent_of_refresh_timing(smoke):
+    """Generated tokens are identical with the cache off, with a
+    synchronous (deterministic-completion) cache, and with the async
+    executor racing the decode loop — factors are per-request side
+    outputs, never decode inputs."""
+    base = _generate(smoke, "off")
+    sync_cache = _generate(smoke, "cache", ServingGramCache(
+        refresh_stride=1, synchronous=True))
+    async_cache = _generate(smoke, "cache", ServingGramCache(
+        refresh_stride=1))
+    assert base == sync_cache == async_cache
+
+
+def test_cache_embeddings_whiten(smoke):
+    """After enough updates the cached factor actually whitens: the
+    served embedding is W·pooled with W ≈ (G+εI)^{-1/2}."""
+    cfg, _ = smoke
+    cache = ServingGramCache(refresh_stride=1, synchronous=True)
+    srv = _server(smoke, whiten="cache", gram_cache=cache, slots=1)
+    for i in range(3):
+        srv.admit(_req(i, 12, tenant="t0"), 0)
+        srv.live[0] = None                    # recycle the slot
+    w = cache.factor("t0", cfg.name, "final")
+    assert w is not None and w.shape == (cfg.d_model, cfg.d_model)
+    assert np.all(np.isfinite(np.asarray(w)))
+    assert srv.live[0] is None
+
+
+# -------------------------------------------------------------------------
+# warm start from packed checkpoint
+# -------------------------------------------------------------------------
+def test_warm_start_parity(tmp_path):
+    """save -> warm_start round-trips the bf16 packed EMA bit-exactly,
+    so the warm factor equals the live one; warm_start discovers the
+    keying from the manifest alone."""
+    cache = ServingGramCache(refresh_stride=1, synchronous=True)
+    k = jax.random.key(2)
+    for i, (tenant, layer) in enumerate(
+            [("tA", "final"), ("tB", "final"), ("tA", "mid")]):
+        cache.update(tenant, "arch", layer,
+                     jax.random.normal(jax.random.fold_in(k, i), (16, 24)))
+    cache.save(str(tmp_path), step=7)
+
+    warm = ServingGramCache(refresh_stride=1, synchronous=True)
+    assert warm.warm_start(str(tmp_path)) == 3
+    assert warm.stats["warm_loaded"] == 3
+    for tenant, layer in [("tA", "final"), ("tB", "final"), ("tA", "mid")]:
+        w_live = cache.factor(tenant, "arch", layer)
+        w_warm = warm.factor(tenant, "arch", layer)
+        assert w_warm is not None
+        np.testing.assert_array_equal(np.asarray(w_live),
+                                      np.asarray(w_warm))
+
+
+def test_serve_end_to_end_cache_report(smoke, tmp_path):
+    args = argparse.Namespace(
+        arch="stablelm-1.6b", smoke=True, requests=6, slots=2, s_max=32,
+        max_new=3, prompt_lo=4, prompt_hi=20, tenants=2, whiten="cache",
+        refresh_stride=2, warm_start=None,
+        save_cache=str(tmp_path / "ck"), no_eos=True, seed=0)
+    out = serve(args)
+    assert out["completed"] == 6
+    assert out["cache"]["updates"] == 6
+    assert out["cache"]["keys"] == 2          # one per tenant
+    assert out["p99_latency_s"] >= out["p50_latency_s"]
+    # the saved cache warm-starts a fresh one
+    warm = ServingGramCache(synchronous=True)
+    assert warm.warm_start(str(tmp_path / "ck")) == 2
