@@ -11,6 +11,9 @@ Suites:
   persist   packed-native checkpoints: bytes + save/restore wall-clock
   serve     serving load test: Gram/whitening cache on vs off
             (tokens/s + p99, gated by check_serve_gate)
+  faults    ABFT checksum overhead per packed mesh route (needs 8 fake
+            devices; <=5% on the largest 1d SYRK row, gated by
+            check_faults_gate)
 
 Each suite prints its table and the JSON rows land in
 artifacts/bench_<suite>.json for EXPERIMENTS.md.
@@ -26,7 +29,7 @@ import time
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 SUITES = ("seq", "parallel", "memdep", "kernels", "roofline", "persist",
-          "serve")
+          "serve", "faults")
 
 #: fixed fwd+bwd shape grid for the BENCH_blas.json trajectory — the
 #: original four rows stay byte-identical in (op, n1, n2, fill) so
@@ -402,6 +405,25 @@ def check_serve_gate(rows) -> bool:
     return ok
 
 
+def check_faults_gate(rows, threshold: float = 0.05) -> bool:
+    """ABFT overhead gate: on the largest-n1 plain-vs-checked 1d SYRK
+    row, the checksum must cost ≤ ``threshold`` of the plain collective
+    (the O(n) word riding the O(n²/2P) payload — the ISSUE's 5% line).
+    Repair rows (deliberate recomputes) are informational only.  Skips
+    gracefully when no comparable row exists (too few devices)."""
+    cand = [r for r in rows if r.get("route") == "1d"
+            and "overhead" in r]
+    if not cand:
+        print("[faults gate] no 1d plain/checked row — skipping")
+        return True
+    row = max(cand, key=lambda r: r["n1"])
+    ok = row["overhead"] <= threshold
+    print(f"[faults gate] syrk 1d n={row['n1']} P={row['devices']} "
+          f"checksum overhead {row['overhead']*100:+.2f}% "
+          f"(threshold {threshold*100:.0f}%) {'OK' if ok else 'FAIL'}")
+    return ok
+
+
 def check_ring_flops_gate(n1: int = 2048, n2: int = 512) -> bool:
     """Computation-optimality gate for the ring route (compile-only, no
     timed reps): per-device HLO flops of ring SYRK at P=8 must stay
@@ -483,7 +505,15 @@ def main() -> None:
                  "rows file instead)")
     if args.check_gate:
         with open(args.check_gate) as f:
-            ok = check_packed_gate(json.load(f), args.gate_threshold)
+            rows = json.load(f)
+        # dispatch on the rows file: each suite gates a different thing
+        base = os.path.basename(args.check_gate)
+        if "faults" in base:
+            ok = check_faults_gate(rows)
+        elif "serve" in base:
+            ok = check_serve_gate(rows)
+        else:
+            ok = check_packed_gate(rows, args.gate_threshold)
         sys.exit(0 if ok else 1)
     tokens = args.only.split(",") if args.only else None
     chosen = list(tokens) if tokens else list(SUITES)
@@ -532,7 +562,8 @@ def main() -> None:
             # grid have their own small/full grids (CI smoke writes
             # artifacts/, full runs the repo-root trajectory)
             rows = mod.main(grid=args.grid) \
-                if name in ("memdep", "persist", "serve") else mod.main()
+                if name in ("memdep", "persist", "serve", "faults") \
+                else mod.main()
             out = os.path.join(ROOT, "artifacts", f"bench_{name}.json")
             with open(out, "w") as f:
                 json.dump(rows, f, indent=1, default=str)
@@ -540,6 +571,9 @@ def main() -> None:
                   f"in {time.time()-t0:.1f}s -> {out}")
             if name == "serve" and not check_serve_gate(rows):
                 print("[serve] serve gate FAILED")
+                failures += 1
+            if name == "faults" and not check_faults_gate(rows):
+                print("[faults] ABFT overhead gate FAILED")
                 failures += 1
         except Exception as e:  # noqa: BLE001
             import traceback

@@ -1,20 +1,28 @@
 """Distributed runtime: fault tolerance, elasticity, stragglers,
 gradient compression — packed-native for symmetric state."""
+from . import faults
 from .checkpoint import (checkpoint_bytes, latest_step, read_manifest,
-                         restore_checkpoint, save_checkpoint,
+                         recover_stale, restore_checkpoint,
+                         save_checkpoint, verify_restored,
                          wait_for_saves)
 from .compression import (ErrorFeedbackInt8, compressed_allreduce,
                           compressed_allreduce_sym, dequantize_int8,
                           quantize_int8)
 from .elastic import (plan_mesh, plan_shape, reshard_packed_state,
                       reshard_tree, reshard_tritiles, spec_tree_like, wire_c)
+from .resilience import (AbftError, AbftReport, checked_symm, checked_syr2k,
+                         checked_syrk, repair_with_reference, with_retries)
 from .straggler import StepTimer, StragglerMonitor, rebuild_replacement_shard
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
            "read_manifest", "wait_for_saves", "checkpoint_bytes",
+           "recover_stale", "verify_restored",
            "quantize_int8",
            "dequantize_int8", "ErrorFeedbackInt8", "compressed_allreduce",
            "compressed_allreduce_sym", "plan_mesh", "plan_shape",
            "reshard_tree", "reshard_tritiles", "reshard_packed_state",
            "spec_tree_like", "wire_c", "StragglerMonitor", "StepTimer",
-           "rebuild_replacement_shard"]
+           "rebuild_replacement_shard",
+           "faults", "with_retries", "checked_syrk", "checked_syr2k",
+           "checked_symm", "repair_with_reference", "AbftError",
+           "AbftReport"]

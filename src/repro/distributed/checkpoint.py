@@ -54,6 +54,8 @@ import numpy as np
 
 from ..core.packing import (PackedTriangle, ShardedTriTiles, TriTiles,
                             unpack_tril)
+from . import faults
+from .resilience import with_retries
 
 _STEP_RE = re.compile(r"^step_(\d{8})$")
 _TMP_RE = re.compile(r"^step_\d{8}\.tmp-(\d+)-\d+$")
@@ -168,6 +170,23 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+#: transient-I/O retry policy for the commit protocol (fsync/rename):
+#: NFS/overlay filesystems surface retryable EIO/ESTALE here, and the
+#: chaos harness injects :class:`~repro.distributed.faults.FaultError`
+#: (an OSError) at the same sites
+_IO_RETRIES = dict(retries=3, backoff=0.01, retry_on=(OSError,))
+
+
+def _fsync_fd(fd: int) -> None:
+    faults.maybe_fail("ckpt:fsync")
+    os.fsync(fd)
+
+
+def _rename(src: str, dst: str) -> None:
+    faults.maybe_fail("ckpt:rename")
+    os.rename(src, dst)
+
+
 def _write(ckpt_dir: str, step: int, host_leaves: List[Tuple[str,
                                                              np.ndarray]],
            keep: int, extra: Dict[str, Any],
@@ -184,7 +203,7 @@ def _write(ckpt_dir: str, step: int, host_leaves: List[Tuple[str,
             with open(fn, "wb") as f:
                 np.save(f, arr)
                 f.flush()
-                os.fsync(f.fileno())
+                with_retries(_fsync_fd, f.fileno(), **_IO_RETRIES)
             with open(fn, "rb") as f:
                 crc = zlib.crc32(f.read())
             entry = {"shape": list(arr.shape), "dtype": str(arr.dtype),
@@ -196,19 +215,43 @@ def _write(ckpt_dir: str, step: int, host_leaves: List[Tuple[str,
         with open(mf, "w") as f:
             json.dump(manifest, f)
             f.flush()
-            os.fsync(f.fileno())
+            with_retries(_fsync_fd, f.fileno(), **_IO_RETRIES)
         if os.path.exists(final):  # same step re-saved: replace atomically
-            os.rename(final, final + ".old")
-            os.rename(tmp, final)
+            with_retries(_rename, final, final + ".old", **_IO_RETRIES)
+            with_retries(_rename, tmp, final, **_IO_RETRIES)
             import shutil
             shutil.rmtree(final + ".old", ignore_errors=True)
         else:
-            os.rename(tmp, final)
+            with_retries(_rename, tmp, final, **_IO_RETRIES)
     finally:
         with _PENDING_LOCK:
             _ACTIVE_TMP.discard(tmp)
     _retire(ckpt_dir, keep)
     return final
+
+
+def recover_stale(ckpt_dir: str) -> int:
+    """Crash-window recovery on the *read* path: a save that died
+    between the two renames of the replace protocol leaves the only
+    complete copy at ``step_N.old`` with ``step_N`` missing — restore
+    it so the next :func:`restore_checkpoint`/:func:`read_manifest`
+    sees a committed checkpoint without waiting for a writer's
+    retention pass.  Returns the number of recovered checkpoints; never
+    deletes anything."""
+    if not os.path.isdir(ckpt_dir):
+        return 0
+    recovered = 0
+    for name in os.listdir(ckpt_dir):
+        m = _OLD_RE.match(name)
+        if not m:
+            continue
+        path = os.path.join(ckpt_dir, name)
+        final = os.path.join(ckpt_dir, f"step_{m.group(1)}")
+        if not os.path.exists(final) and os.path.exists(
+                os.path.join(path, "manifest.json")):
+            with_retries(_rename, path, final, **_IO_RETRIES)
+            recovered += 1
+    return recovered
 
 
 def _pid_alive(pid: int) -> bool:
@@ -337,6 +380,7 @@ def read_manifest(ckpt_dir: str, step: Optional[int] = None
     knowledge of the saved tree (e.g. a serving cache warm-starting
     from a monitor snapshot) discovers what is in the checkpoint and
     builds a matching ``like`` for :func:`restore_checkpoint`."""
+    recover_stale(ckpt_dir)
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
@@ -381,6 +425,7 @@ def restore_checkpoint(ckpt_dir: str, like: Any, *,
     leaf is placed with it (a single sharding per packed leaf is
     broadcast over its component arrays).
     """
+    recover_stale(ckpt_dir)
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
@@ -424,3 +469,44 @@ def restore_checkpoint(ckpt_dir: str, like: Any, *,
 
     treedef = jax.tree_util.tree_structure(like, is_leaf=_is_packed_leaf)
     return step, jax.tree_util.tree_unflatten(treedef, loaded)
+
+
+def verify_restored(ckpt_dir: str, tree: Any, *,
+                    step: Optional[int] = None) -> Dict[str, Any]:
+    """Prove a restore round-tripped bit-exactly: re-serialize every
+    leaf of ``tree`` exactly as :func:`save_checkpoint` did (packed
+    leaves re-narrowed to their *stored* dtype from the manifest) and
+    compare crc32 against the manifest's.
+
+    For bf16-stored packed state (the Gram-EMA default) a clean
+    elastic restore — even onto a different wire ``c`` — reproduces
+    the stored words exactly, so any crc mismatch means real
+    corruption, not rounding.  Returns ``{"checked", "packed",
+    "mismatches"}``; the chaos-recovery driver asserts
+    ``mismatches == []`` after a device-loss resume."""
+    import io
+    manifest = read_manifest(ckpt_dir, step)
+    checked = packed = 0
+    mismatches: List[str] = []
+    for k, v in _flatten(tree):
+        meta = manifest["leaves"].get(k)
+        if meta is None:
+            mismatches.append(k)
+            continue
+        if _is_packed_leaf(v):
+            stored = meta["dtype"]
+            arr, _ = _host_packed(
+                v, stored if stored in ("bfloat16", "float8_e4m3",
+                                        "float8_e5m2") else None)
+            if str(arr.dtype) != stored:
+                arr = arr.astype(np.dtype(stored))
+            packed += 1
+        else:
+            arr = np.asarray(v)
+        buf = io.BytesIO()
+        np.save(buf, arr)
+        checked += 1
+        if zlib.crc32(buf.getvalue()) != meta["crc"]:
+            mismatches.append(k)
+    return {"checked": checked, "packed": packed,
+            "mismatches": mismatches}

@@ -1,0 +1,266 @@
+"""Deterministic, seeded fault injection for chaos tests.
+
+The harness answers one question for the resilience stack: *what
+happens when this exact thing breaks?* — reproducibly.  A fault is a
+:class:`FaultSpec` keyed by ``(site, step, device)``:
+
+  * ``site`` — a named injection point woven into the production code
+    paths: ``"collective:syrk"`` / ``"collective:syr2k"`` /
+    ``"collective:symm"`` (packed mesh payloads, consumed by
+    resilience.py), ``"ckpt:fsync"`` / ``"ckpt:rename"`` (checkpoint
+    commit protocol), ``"serve:refresh"`` (whitening refresh
+    executor), ``"train:step"`` / ``"train:straggler"`` (the training
+    loop).
+  * ``kind`` — ``error`` (raise :class:`FaultError`), ``kill`` (raise
+    :class:`DeviceLossError`: a host dropped out of the mesh),
+    ``delay`` (sleep ``delay_s``: a straggler), ``bitflip`` / ``nan``
+    (corrupt packed payload words — applied by the caller through
+    :func:`corrupt_slots`, which is where the (seed, site, step,
+    device)-keyed rng makes the corruption byte-reproducible).
+
+Specs fire a bounded number of times (``times``, default 1 — faults
+are *transient* by default, so a retry after the injected failure
+succeeds, which is exactly the contract ``with_retries`` and the ABFT
+recompute path are tested against; ``times=0`` means always) and can
+skip their first ``skip`` matches (to hit e.g. only the *second*
+rename of the checkpoint replace window).
+
+Activation is either the :class:`inject` context manager (in-process
+tests) or the ``REPRO_FAULTS`` environment variable (a JSON list of
+spec dicts; ``REPRO_FAULTS_SEED`` seeds the corruption rng) so a
+subprocess chaos run — the elastic-recovery driver, CI's fake-device
+mesh — is reproducible from the command line alone.  All matching is
+thread-safe; every firing is recorded on the injector's ``events``
+list for assertions.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+import zlib
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+ENV_SPECS = "REPRO_FAULTS"
+ENV_SEED = "REPRO_FAULTS_SEED"
+
+KINDS = ("error", "kill", "delay", "bitflip", "nan")
+#: kinds that corrupt data in place instead of raising/sleeping
+PAYLOAD_KINDS = ("bitflip", "nan")
+
+
+class FaultError(OSError):
+    """An injected fault (subclasses OSError: the sites that raise it
+    simulate transient I/O / executor errors, so production ``retry on
+    OSError`` policies see the injected kind)."""
+
+
+class DeviceLossError(FaultError):
+    """An injected device/host loss — the elastic-restart trigger."""
+
+
+@dataclass
+class FaultSpec:
+    site: str
+    kind: str = "error"
+    step: Optional[int] = None      # None = any step
+    device: Optional[int] = None    # payload faults: whose contribution
+    times: int = 1                  # max firings (0 = unlimited)
+    skip: int = 0                   # ignore the first `skip` matches
+    delay_s: float = 0.05           # kind="delay" sleep
+    message: str = ""
+    matched: int = field(default=0, compare=False)
+    fired: int = field(default=0, compare=False)
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r} "
+                             f"(one of {KINDS})")
+
+
+@dataclass
+class FaultEvent:
+    site: str
+    kind: str
+    step: Optional[int]
+    device: Optional[int]
+    detail: str = ""
+
+
+class FaultInjector:
+    """Holds armed specs + the firing log.  One per :class:`inject`
+    context (or one process-wide instance built from the env)."""
+
+    def __init__(self, specs: Sequence[FaultSpec], seed: int = 0):
+        self.specs = [s if isinstance(s, FaultSpec) else FaultSpec(**s)
+                      for s in specs]
+        self.seed = int(seed)
+        self.events: List[FaultEvent] = []
+        self._lock = threading.Lock()
+
+    def match(self, site: str, step: Optional[int] = None,
+              kinds: Optional[Sequence[str]] = None
+              ) -> Optional[FaultSpec]:
+        """Consume one firing of the first armed spec matching
+        ``(site, step)`` (and ``kinds`` when given)."""
+        with self._lock:
+            for sp in self.specs:
+                if sp.site != site:
+                    continue
+                if kinds is not None and sp.kind not in kinds:
+                    continue
+                if sp.step is not None and step is not None \
+                        and sp.step != step:
+                    continue
+                if sp.matched < sp.skip:
+                    sp.matched += 1
+                    continue
+                if sp.times and sp.fired >= sp.times:
+                    continue
+                sp.matched += 1
+                sp.fired += 1
+                return sp
+        return None
+
+    def record(self, spec: FaultSpec, step: Optional[int],
+               detail: str = "") -> FaultEvent:
+        ev = FaultEvent(site=spec.site, kind=spec.kind, step=step,
+                        device=spec.device, detail=detail)
+        with self._lock:
+            self.events.append(ev)
+        return ev
+
+    def rng(self, site: str, step: Optional[int], device: Optional[int]):
+        """A numpy Generator keyed by (seed, site, step, device) — the
+        corruption pattern is a pure function of the fault coordinates,
+        never of process state (crc32, not ``hash``: stable across
+        interpreter runs and PYTHONHASHSEED)."""
+        import numpy as np
+        key = zlib.crc32(f"{self.seed}|{site}|{step}|{device}".encode())
+        return np.random.default_rng(key)
+
+
+# -- activation -------------------------------------------------------------
+_STACK: List[FaultInjector] = []
+_STACK_LOCK = threading.Lock()
+_ENV_CACHE: Tuple[Optional[str], Optional[FaultInjector]] = (None, None)
+
+
+def _env_injector() -> Optional[FaultInjector]:
+    global _ENV_CACHE
+    raw = os.environ.get(ENV_SPECS)
+    if not raw:
+        return None
+    if _ENV_CACHE[0] != raw:
+        specs = [FaultSpec(**d) for d in json.loads(raw)]
+        seed = int(os.environ.get(ENV_SEED, "0"))
+        _ENV_CACHE = (raw, FaultInjector(specs, seed=seed))
+    return _ENV_CACHE[1]
+
+
+def active() -> Optional[FaultInjector]:
+    """The innermost :class:`inject` context, else the ``REPRO_FAULTS``
+    env injector, else None (the common case: zero overhead beyond one
+    list peek + one getenv)."""
+    with _STACK_LOCK:
+        if _STACK:
+            return _STACK[-1]
+    return _env_injector()
+
+
+class inject:
+    """``with inject(FaultSpec(...), seed=7) as inj: ...`` — arm faults
+    for the enclosed block; ``inj.events`` holds what fired."""
+
+    def __init__(self, *specs: FaultSpec, seed: int = 0):
+        self.injector = FaultInjector(specs, seed=seed)
+
+    def __enter__(self) -> FaultInjector:
+        with _STACK_LOCK:
+            _STACK.append(self.injector)
+        return self.injector
+
+    def __exit__(self, *exc):
+        with _STACK_LOCK:
+            _STACK.remove(self.injector)
+        return False
+
+
+def env_dict(specs: Sequence[FaultSpec], seed: int = 0) -> dict:
+    """Env-var form of ``specs`` for a subprocess chaos run."""
+    return {ENV_SPECS: json.dumps([
+        {"site": s.site, "kind": s.kind, "step": s.step,
+         "device": s.device, "times": s.times, "skip": s.skip,
+         "delay_s": s.delay_s, "message": s.message}
+        for s in (s if isinstance(s, FaultSpec) else FaultSpec(**s)
+                  for s in specs)]),
+        ENV_SEED: str(int(seed))}
+
+
+# -- firing -----------------------------------------------------------------
+def maybe_fail(site: str, step: Optional[int] = None) -> None:
+    """Host fault site: raise (``error``/``kill``) or sleep (``delay``)
+    when a matching spec is armed; no-op otherwise.  Payload kinds are
+    never fired here (they belong to :func:`payload_fault`)."""
+    inj = active()
+    if inj is None:
+        return
+    sp = inj.match(site, step, kinds=("error", "kill", "delay"))
+    if sp is None:
+        return
+    if sp.kind == "delay":
+        inj.record(sp, step, detail=f"slept {sp.delay_s}s")
+        time.sleep(sp.delay_s)
+        return
+    msg = sp.message or (
+        f"injected device loss at {site}"
+        + (f" (device {sp.device})" if sp.device is not None else "")
+        + (f" step {step}" if step is not None else "")
+        if sp.kind == "kill" else
+        f"injected fault at {site}"
+        + (f" step {step}" if step is not None else ""))
+    inj.record(sp, step, detail=msg)
+    raise (DeviceLossError if sp.kind == "kill" else FaultError)(msg)
+
+
+def payload_fault(site: str, step: Optional[int] = None
+                  ) -> Optional[FaultSpec]:
+    """Consume an armed ``bitflip``/``nan`` spec for a collective
+    payload site; the caller maps ``spec.device`` to its slot range and
+    applies :func:`corrupt_slots`."""
+    inj = active()
+    if inj is None:
+        return None
+    return inj.match(site, step, kinds=PAYLOAD_KINDS)
+
+
+def corrupt_slots(vec, lo: int, hi: int, spec: FaultSpec,
+                  site: str, step: Optional[int] = None):
+    """Deterministically corrupt packed payload words ``[lo, hi)``.
+
+    ``bitflip`` flips a high exponent bit of up to 8 seeded slots in
+    the range (a single-event upset surviving an f32 sum untouched);
+    ``nan`` poisons one seeded slot.  Returns the corrupted array
+    (jnp, same dtype) and records the event.
+    """
+    import jax.numpy as jnp
+    import numpy as np
+    inj = active()
+    rng = (inj or FaultInjector([], seed=0)).rng(site, step, spec.device)
+    host = np.array(vec)                      # host copy; never in-place
+    width = max(hi - lo, 1)
+    if spec.kind == "nan":
+        slots = lo + rng.integers(0, width, size=1)
+        host[slots] = np.nan
+    else:
+        slots = lo + rng.choice(width, size=min(8, width), replace=False)
+        as_f32 = host[slots].astype(np.float32)
+        flipped = (as_f32.view(np.uint32) ^ np.uint32(1 << 30)) \
+            .view(np.float32)
+        host[slots] = flipped.astype(host.dtype)
+    if inj is not None:
+        inj.record(spec, step, detail=f"{spec.kind} slots "
+                   f"{np.sort(slots).tolist()} of [{lo},{hi})")
+    return jnp.asarray(host)

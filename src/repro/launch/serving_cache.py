@@ -48,21 +48,46 @@ on disk) with the (tenant, arch, layer) keying in the manifest's
 monitors from the manifest alone — no prior knowledge of the saved
 tree — then schedules refreshes so factors are ready before the first
 request lands.
+
+Graceful degradation (chaos-hardened in PR 10):
+
+  * a failed refresh is *observed*, never lost: the Future's
+    done-callback logs it, counts it (``failed_refreshes``), and the
+    executor job itself retries transient errors with exponential
+    backoff (:func:`~repro.distributed.resilience.with_retries`) —
+    no exception ever escapes the executor unhandled;
+  * after ``breaker_threshold`` *consecutive* failures for a key the
+    circuit breaker opens: refreshes stop being scheduled for
+    ``breaker_cooldown_s`` and decode keeps serving the last-good
+    factor, surfaced as ``stale`` in :meth:`snapshot_stats`; one
+    half-open probe re-closes the breaker on success;
+  * a NaN/Inf Newton–Schulz output (indefinite bf16-quantized Gram,
+    cond ≳ 1e8) falls back to the ``eigh`` oracle for that refresh
+    (``ns_fallbacks``) — the served factor is always finite;
+  * dormant tenants are TTL-evicted (``max_idle_s``): an idle key's
+    EMA, factor, and breaker state are dropped; a re-admitted tenant
+    starts cold (or bit-exact via :meth:`warm_start`).
 """
 from __future__ import annotations
 
 import functools
+import logging
 import threading
+import time
 from concurrent.futures import Future, ThreadPoolExecutor
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..core.packing import PackedTriangle, tril_size
+from ..distributed import faults
+from ..distributed.resilience import with_retries
 from ..optim.gram import GramMonitor, packed_gram, whitening_from_packed
 
 Key = Tuple[str, str, str]          # (tenant, arch, layer)
+
+logger = logging.getLogger(__name__)
 
 
 class ServingGramCache:
@@ -76,14 +101,21 @@ class ServingGramCache:
 
     ``synchronous=True`` (tests / strict mode) runs each refresh
     inline at schedule time instead of on the executor — same
-    numerics, deterministic completion order.
+    numerics, deterministic completion order, same failure accounting
+    (a failed refresh is swallowed into the counters, never raised
+    into the admit path).
     """
 
     def __init__(self, *, decay: float = 0.99, eps: float = 1e-5,
                  ns_iters: int = 30, refresh_stride: int = 8,
                  out_dtype: Any = jnp.bfloat16, mesh=None,
                  axis: str = "model", interpret: Optional[bool] = None,
-                 synchronous: bool = False):
+                 synchronous: bool = False,
+                 refresh_retries: int = 2,
+                 refresh_backoff: float = 0.05,
+                 breaker_threshold: int = 3,
+                 breaker_cooldown_s: float = 30.0,
+                 max_idle_s: Optional[float] = None):
         self.decay = decay
         self.eps = eps
         self.ns_iters = ns_iters
@@ -93,17 +125,28 @@ class ServingGramCache:
         self.axis = axis
         self.interpret = interpret
         self.synchronous = synchronous
+        self.refresh_retries = max(0, int(refresh_retries))
+        self.refresh_backoff = refresh_backoff
+        self.breaker_threshold = max(1, int(breaker_threshold))
+        self.breaker_cooldown_s = breaker_cooldown_s
+        self.max_idle_s = max_idle_s
         self._monitors: Dict[Tuple[str, str], GramMonitor] = {}
         self._refresh_fns: Dict[int, Any] = {}
+        self._oracle_fns: Dict[int, Any] = {}
         self._factors: Dict[Key, jax.Array] = {}
         self._pending: Dict[Key, Future] = {}
         self._since_refresh: Dict[Key, int] = {}
+        #: per-key [consecutive failures, breaker-open-until monotonic]
+        self._breaker: Dict[Key, List[float]] = {}
+        self._last_seen: Dict[Key, float] = {}
         self._lock = threading.Lock()
         self._pool = None if synchronous else \
             ThreadPoolExecutor(max_workers=1,
                                thread_name_prefix="gram-refresh")
         self.stats = {"updates": 0, "refreshes": 0, "factor_hits": 0,
-                      "factor_cold": 0, "warm_loaded": 0}
+                      "factor_cold": 0, "warm_loaded": 0,
+                      "failed_refreshes": 0, "ns_fallbacks": 0,
+                      "evicted": 0}
         # Jitted admit-path update (jax caches one executable per input
         # shape): the eager GramMonitor.update costs ~10 dispatches per
         # call, which at thousands of admits/s dominates the very
@@ -134,6 +177,8 @@ class ServingGramCache:
         EMA — one routed packed SYRK — and schedule an async factor
         refresh every ``refresh_stride`` updates."""
         key = (str(tenant), str(arch), str(layer))
+        self._evict_idle()
+        self._last_seen[key] = time.monotonic()
         mon = self.monitor(tenant, arch)
         if layer not in mon._state:
             mon._state[layer] = self._update_init(x)
@@ -176,57 +221,198 @@ class ServingGramCache:
             self._refresh_fns[d] = fn
         return fn
 
+    def _oracle_fn(self, d: int):
+        """Jitted eigh-oracle refresh, cached per feature dimension —
+        the NaN/Inf degradation target (exact inverse square root,
+        immune to NS divergence on indefinite / ill-conditioned Gram)."""
+        fn = self._oracle_fns.get(d)
+        if fn is None:
+            fn = jax.jit(functools.partial(
+                whitening_from_packed, d=d, eps=self.eps, method="eigh",
+                mesh=self.mesh, axis=self.axis,
+                interpret=self.interpret))
+            self._oracle_fns[d] = fn
+        return fn
+
     def _compute_factor(self, packed: jax.Array, d: int) -> jax.Array:
-        return jax.block_until_ready(self._refresh_fn(d)(packed))
+        faults.maybe_fail("serve:refresh")
+        w = jax.block_until_ready(self._refresh_fn(d)(packed))
+        if not bool(jnp.all(jnp.isfinite(w))):
+            # Newton–Schulz diverged (indefinite bf16 Gram / extreme
+            # conditioning): fall back to the exact oracle this refresh.
+            self.stats["ns_fallbacks"] += 1
+            logger.warning("serving_cache: non-finite NS factor (d=%d); "
+                           "falling back to eigh oracle", d)
+            w = jax.block_until_ready(self._oracle_fn(d)(packed))
+        return w
+
+    def _refresh_job(self, packed: jax.Array, d: int) -> jax.Array:
+        """The executor job: the refresh itself wrapped in transient-
+        error retries, so a flaky refresh heals in place and only a
+        persistent failure reaches the done-callback."""
+        return with_retries(self._compute_factor, packed, d,
+                            retries=self.refresh_retries,
+                            backoff=self.refresh_backoff,
+                            retry_on=(Exception,))
+
+    # -- circuit breaker -------------------------------------------------
+    def _breaker_open(self, key: Key) -> bool:
+        """True while the breaker blocks refreshes for ``key``.  After
+        the cooldown expires, one half-open probe is allowed through
+        (failure counter rewound to threshold-1: a failed probe re-opens
+        immediately, a success resets)."""
+        with self._lock:
+            st = self._breaker.get(key)
+            if st is None or st[0] < self.breaker_threshold:
+                return False
+            if time.monotonic() < st[1]:
+                return True
+            st[0] = self.breaker_threshold - 1     # half-open probe
+            return False
+
+    def _note_refresh_failure(self, key: Key, exc: BaseException) -> None:
+        self.stats["failed_refreshes"] += 1
+        with self._lock:
+            st = self._breaker.setdefault(key, [0, 0.0])
+            st[0] += 1
+            opened = st[0] >= self.breaker_threshold
+            if opened:
+                st[1] = time.monotonic() + self.breaker_cooldown_s
+        logger.warning(
+            "serving_cache: refresh failed for %s (%s: %s)%s",
+            "/".join(key), type(exc).__name__, exc,
+            "; circuit breaker OPEN — serving last-good factor"
+            if opened else "")
+
+    def _note_refresh_success(self, key: Key) -> None:
+        with self._lock:
+            self._breaker.pop(key, None)
+
+    def _on_refresh_done(self, key: Key, fut: Future) -> None:
+        """Failure-only done-callback (runs on the executor thread):
+        a failed refresh Future is *observed* here — logged, counted,
+        fed to the breaker — instead of silently dropped.  Success is
+        accounted at harvest, where the factor is installed."""
+        exc = fut.exception()
+        if exc is not None:
+            self._note_refresh_failure(key, exc)
 
     def _schedule_refresh(self, key: Key) -> bool:
         """Submit a refresh for ``key`` unless one is already pending
-        (coalescing).  Returns True when a refresh was started."""
+        (coalescing) or the circuit breaker is open.  Returns True when
+        a refresh was started."""
         tenant, arch, layer = key
         mon = self._monitors.get((tenant, arch))
         if mon is None or layer not in mon._state:
             return False
+        if self._breaker_open(key):
+            return False                       # hold last-good factor
         packed, d = mon._state[layer], mon._dims[layer]   # immutable snap
         if self.synchronous:
-            self._factors[key] = self._compute_factor(packed, d)
             self.stats["refreshes"] += 1
+            try:
+                w = self._refresh_job(packed, d)
+            except Exception as exc:           # same contract as async
+                self._note_refresh_failure(key, exc)
+                return True
+            self._factors[key] = w
+            self._note_refresh_success(key)
             return True
         with self._lock:
             if key in self._pending:
                 return False                   # coalesce: one in flight
-            fut = self._pool.submit(self._compute_factor, packed, d)
+            fut = self._pool.submit(self._refresh_job, packed, d)
             self._pending[key] = fut
+        fut.add_done_callback(
+            functools.partial(self._on_refresh_done, key))
         self.stats["refreshes"] += 1
         return True
 
     def _harvest(self) -> None:
         """Move completed refreshes into the served-factor map (non-
-        blocking; called from the hot path, so only ``done()`` polls)."""
+        blocking; called from the hot path, so only ``done()`` polls).
+        Failed futures were already accounted by the done-callback —
+        here they are just dropped, leaving the last-good factor."""
         with self._lock:
             done = [(k, f) for k, f in self._pending.items() if f.done()]
             for k, _ in done:
                 del self._pending[k]
         for k, f in done:
+            if f.exception() is not None:
+                continue
             self._factors[k] = f.result()
+            self._note_refresh_success(k)
 
     def factor(self, tenant: str, arch: str, layer: str
                ) -> Optional[jax.Array]:
         """Latest *ready* whitening factor for the key, or None while
         cold (no refresh has completed yet).  Never blocks."""
         self._harvest()
-        w = self._factors.get((str(tenant), str(arch), str(layer)))
+        key = (str(tenant), str(arch), str(layer))
+        self._last_seen[key] = time.monotonic()
+        w = self._factors.get(key)
         self.stats["factor_hits" if w is not None else
                    "factor_cold"] += 1
         return w
 
     def drain(self) -> None:
         """Block until every pending refresh has landed (shutdown /
-        test barrier; never called from the decode loop)."""
+        test barrier; never called from the decode loop).  Failed
+        refreshes are swallowed (already accounted by the callback)."""
         with self._lock:
             pending = list(self._pending.items())
             self._pending.clear()
         for k, f in pending:
-            self._factors[k] = f.result()
+            try:
+                self._factors[k] = f.result()
+            except Exception:
+                continue
+            self._note_refresh_success(k)
+
+    # -- TTL eviction ----------------------------------------------------
+    def evict(self, tenant: str, arch: str,
+              layer: Optional[str] = None) -> int:
+        """Drop the EMA state, factor, and breaker/stride bookkeeping
+        for a tenant's keys (one layer, or all layers of the (tenant,
+        arch) when ``layer`` is None).  Returns the number of keys
+        evicted.  A re-admitted tenant starts cold — or bit-exact via
+        :meth:`warm_start` from a saved packed checkpoint."""
+        mk = (str(tenant), str(arch))
+        mon = self._monitors.get(mk)
+        if mon is None:
+            return 0
+        layers = [str(layer)] if layer is not None else list(mon._state)
+        n = 0
+        for lay in layers:
+            if lay not in mon._state:
+                continue
+            key = (mk[0], mk[1], lay)
+            with self._lock:
+                if key in self._pending:       # let in-flight land first
+                    continue
+                self._breaker.pop(key, None)
+            mon._state.pop(lay, None)
+            mon._dims.pop(lay, None)
+            self._factors.pop(key, None)
+            self._since_refresh.pop(key, None)
+            self._last_seen.pop(key, None)
+            n += 1
+        if not mon._state:
+            self._monitors.pop(mk, None)
+        self.stats["evicted"] += n
+        return n
+
+    def _evict_idle(self) -> None:
+        """TTL sweep: drop keys not touched (update/factor) within
+        ``max_idle_s``.  Called from ``update()`` — dormant tenants are
+        reclaimed as live traffic flows, no background thread needed."""
+        if self.max_idle_s is None:
+            return
+        now = time.monotonic()
+        stale = [k for k, t in list(self._last_seen.items())
+                 if now - t > self.max_idle_s]
+        for tenant, arch, layer in stale:
+            self.evict(tenant, arch, layer)
 
     # -- persistence -----------------------------------------------------
     def save(self, ckpt_dir: str, step: int = 0, **kw) -> None:
@@ -275,15 +461,21 @@ class ServingGramCache:
             mon._dims[e["layer"]] = leaf.n
             key = (e["tenant"], e["arch"], e["layer"])
             self._since_refresh[key] = 0
+            self._last_seen[key] = time.monotonic()
             if refresh:
                 self._schedule_refresh(key)
         self.stats["warm_loaded"] += len(entries)
         return len(entries)
 
-    def snapshot_stats(self) -> Dict[str, int]:
+    def snapshot_stats(self) -> Dict[str, Any]:
+        now = time.monotonic()
         with self._lock:
             pending = len(self._pending)
+            stale = sorted("/".join(k) for k, st in self._breaker.items()
+                           if st[0] >= self.breaker_threshold
+                           and now < st[1])
         return dict(self.stats, pending=pending,
                     factors_ready=len(self._factors),
                     keys=sum(len(m._state)
-                             for m in self._monitors.values()))
+                             for m in self._monitors.values()),
+                    stale=stale)

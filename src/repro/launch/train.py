@@ -36,9 +36,10 @@ from jax.sharding import PartitionSpec as P
 from repro.configs import get_config, get_smoke_config
 from repro.data import DataConfig, make_train_iterator
 from repro.distributed import (ErrorFeedbackInt8, StepTimer,
-                               StragglerMonitor, checkpoint_bytes,
+                               StragglerMonitor, checkpoint_bytes, faults,
                                latest_step, plan_mesh, restore_checkpoint,
-                               save_checkpoint, wait_for_saves)
+                               save_checkpoint, verify_restored,
+                               wait_for_saves)
 from repro.compat import use_mesh
 from repro.launch.steps import (describe_blas_routing, make_optimizer,
                                 make_train_step)
@@ -101,6 +102,9 @@ def train(args) -> Dict[str, Any]:
         if compressor is not None:
             like["ef"] = jax.eval_shape(compressor.init, params_shape)
         start_step, state = restore_checkpoint(args.ckpt_dir, like)
+        vr = verify_restored(args.ckpt_dir, state, step=start_step)
+        print(f"[train] restore verified: {vr['checked']} leaves, "
+              f"{len(vr['mismatches'])} mismatches")
         params = jax.device_put(state["params"], p_sh)
         opt_state = jax.device_put(state["opt"], _rep_tree(
             state["opt"], mesh, p_sh, params_shape))
@@ -141,8 +145,19 @@ def train(args) -> Dict[str, Any]:
                 it.close()
                 wait_for_saves()
                 raise RuntimeError(f"injected failure at step {step}")
+            if not resumed:
+                try:
+                    faults.maybe_fail("train:step", step)
+                except faults.DeviceLossError:
+                    # a host dropped out: flush checkpoint writes so the
+                    # surviving world resumes from the last commit, then
+                    # surface the loss to the elastic-restart driver
+                    it.close()
+                    wait_for_saves()
+                    raise
             batch = next(it)
             with timer:
+                faults.maybe_fail("train:straggler", step)
                 params, opt_state, metrics = jit_step(params, opt_state,
                                                       batch)
                 loss = float(metrics["loss"])

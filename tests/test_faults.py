@@ -1,0 +1,332 @@
+"""Fault injection, ABFT checksums, retry policy, checkpoint chaos.
+
+Single-process (tier-1) coverage of the resilience stack: the seeded
+injector itself, :func:`with_retries`, the packed-prefix checksum
+algebra and the checked *local* route — the mesh routes are exercised
+at 8 fake devices in ``dist_checks --suite faults`` — and the
+checkpoint commit protocol under injected I/O faults (transient
+absorption, crash-window ``.old`` recovery, crc re-verification).
+"""
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.core.packing import pack_tril, tril_size
+from repro.distributed import faults
+from repro.distributed.checkpoint import (restore_checkpoint,
+                                          save_checkpoint,
+                                          verify_restored)
+from repro.distributed.resilience import (AbftError, _check_syrk,
+                                          _prefix_dots, checked_symm,
+                                          checked_syr2k, checked_syrk,
+                                          device_rows, owner_of_rows,
+                                          packed_row_sums,
+                                          packed_sym_matvec,
+                                          with_retries)
+
+
+# -------------------------------------------------------------------------
+# the injector
+# -------------------------------------------------------------------------
+def test_spec_times_and_skip():
+    """A spec skips its first `skip` matches, fires `times` times, and
+    is inert afterwards."""
+    with faults.inject(faults.FaultSpec(site="train:step", kind="error",
+                                        skip=1, times=2)) as inj:
+        faults.maybe_fail("train:step", 0)          # skipped
+        for _ in range(2):
+            with pytest.raises(faults.FaultError):
+                faults.maybe_fail("train:step", 1)
+        faults.maybe_fail("train:step", 2)          # exhausted: no-op
+    assert len(inj.events) == 2
+    assert all(e.kind == "error" for e in inj.events)
+
+
+def test_step_and_site_filtering():
+    with faults.inject(faults.FaultSpec(site="train:step", kind="error",
+                                        step=5)) as inj:
+        faults.maybe_fail("train:step", 4)          # wrong step
+        faults.maybe_fail("ckpt:fsync", 5)          # wrong site
+        with pytest.raises(faults.FaultError):
+            faults.maybe_fail("train:step", 5)
+    assert [e.step for e in inj.events] == [5]
+
+
+def test_kill_and_delay_kinds():
+    with faults.inject(faults.FaultSpec(site="train:step", kind="kill")):
+        with pytest.raises(faults.DeviceLossError):
+            faults.maybe_fail("train:step", 3)
+    with faults.inject(faults.FaultSpec(site="train:straggler",
+                                        kind="delay",
+                                        delay_s=0.02)) as inj:
+        t0 = time.monotonic()
+        faults.maybe_fail("train:straggler", 0)     # sleeps, no raise
+        assert time.monotonic() - t0 >= 0.02
+    assert inj.events[0].kind == "delay"
+
+
+def test_corrupt_slots_deterministic():
+    """The corruption pattern is a pure function of (seed, site, step,
+    device) — two injections with the same coordinates corrupt the
+    same slots to the same values."""
+    vec = jnp.arange(64, dtype=jnp.float32) + 1.0
+    outs = []
+    for _ in range(2):
+        with faults.inject(faults.FaultSpec(
+                site="collective:syrk", kind="bitflip", device=3),
+                seed=11) as inj:
+            sp = faults.payload_fault("collective:syrk", 2)
+            outs.append(np.asarray(faults.corrupt_slots(
+                vec, 8, 40, sp, "collective:syrk", 2)))
+        assert inj.events[0].kind == "bitflip"
+    np.testing.assert_array_equal(outs[0], outs[1])
+    changed = np.nonzero(outs[0] != np.asarray(vec))[0]
+    assert 1 <= changed.size <= 8
+    assert changed.min() >= 8 and changed.max() < 40
+    # a different seed corrupts differently
+    with faults.inject(faults.FaultSpec(
+            site="collective:syrk", kind="bitflip", device=3), seed=12):
+        sp = faults.payload_fault("collective:syrk", 2)
+        other = np.asarray(faults.corrupt_slots(
+            vec, 8, 40, sp, "collective:syrk", 2))
+    assert not np.array_equal(other, outs[0])
+
+
+def test_env_activation(monkeypatch):
+    """REPRO_FAULTS arms the injector from the environment alone — the
+    subprocess chaos contract used by the recovery driver."""
+    env = faults.env_dict([faults.FaultSpec(site="train:step",
+                                            kind="kill", step=7)],
+                          seed=9)
+    for k, v in env.items():
+        monkeypatch.setenv(k, v)
+    faults.maybe_fail("train:step", 6)              # wrong step: no-op
+    with pytest.raises(faults.DeviceLossError):
+        faults.maybe_fail("train:step", 7)
+    monkeypatch.delenv(faults.ENV_SPECS)
+    assert faults.active() is None
+
+
+# -------------------------------------------------------------------------
+# with_retries
+# -------------------------------------------------------------------------
+def test_with_retries_heals_transient():
+    calls, seen = [], []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise OSError("transient")
+        return "ok"
+
+    out = with_retries(flaky, retries=4, backoff=0.001,
+                       on_retry=lambda a, e: seen.append((a, str(e))))
+    assert out == "ok" and len(calls) == 3
+    assert [a for a, _ in seen] == [0, 1]
+
+
+def test_with_retries_exhausts_and_propagates():
+    def always():
+        raise OSError("persistent")
+
+    with pytest.raises(OSError, match="persistent"):
+        with_retries(always, retries=2, backoff=0.001)
+
+    def wrong_kind():
+        raise ValueError("not retryable")
+
+    calls = []
+    with pytest.raises(ValueError):
+        with_retries(lambda: (calls.append(1), wrong_kind()),
+                     retries=5, backoff=0.001)
+    assert len(calls) == 1                          # no retry on mismatch
+
+
+# -------------------------------------------------------------------------
+# packed checksum algebra
+# -------------------------------------------------------------------------
+def test_prefix_dots_matches_scan_reference():
+    rng = np.random.default_rng(0)
+    for n, k in ((1, 3), (63, 8), (64, 8), (200, 16)):
+        x = rng.standard_normal((n, k)).astype(np.float32)
+        y = rng.standard_normal((n, k)).astype(np.float32)
+        ref = np.einsum("ij,ij->i", x,
+                        np.cumsum(y, axis=0, dtype=np.float64)
+                        ).astype(np.float32)
+        np.testing.assert_allclose(_prefix_dots(x, y), ref,
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_packed_row_sums_and_sym_matvec_match_dense():
+    rng = np.random.default_rng(1)
+    n = 33
+    c_dense = rng.standard_normal((n, n)).astype(np.float32)
+    sym = np.tril(c_dense) + np.tril(c_dense, -1).T
+    p = np.asarray(pack_tril(jnp.asarray(np.tril(c_dense))))
+    np.testing.assert_allclose(packed_row_sums(p, n), sym.sum(axis=1),
+                               rtol=1e-5, atol=1e-4)
+    v = rng.standard_normal(n).astype(np.float32)
+    np.testing.assert_allclose(packed_sym_matvec(p, n, v), sym @ v,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_checksum_flags_exactly_the_corrupted_row():
+    """The prefix identity maps packed slot (i, j) to checksum row i —
+    corruption localizes to one row, never its column partner."""
+    rng = np.random.default_rng(2)
+    n1, n2 = 48, 24
+    a = rng.standard_normal((n1, n2)).astype(np.float32)
+    p = np.asarray(pack_tril(jnp.asarray(np.tril(a @ a.T))))
+    chk = _check_syrk(n1, 1e-6, 1e-5)
+    assert not chk(a, p).any()
+    row, col = 31, 7
+    bad = p.copy()
+    bad[row * (row + 1) // 2 + col] += 1e4
+    flagged = np.nonzero(chk(a, bad))[0]
+    assert flagged.tolist() == [row]
+
+
+def test_owner_of_rows_matches_device_bands():
+    n, world = 50, 4
+    for k in range(world):
+        r0, r1 = device_rows(n, world, k)
+        assert owner_of_rows(np.arange(r0, r1), n, world) == [k]
+
+
+# -------------------------------------------------------------------------
+# checked collectives (local route; mesh routes live in dist_checks)
+# -------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def syrk_inputs():
+    rng = np.random.default_rng(7)
+    a = jnp.asarray(rng.standard_normal((32, 16)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((32, 16)), jnp.float32)
+    return a, b
+
+
+def test_checked_syrk_clean(syrk_inputs):
+    a, _ = syrk_inputs
+    out, rep = checked_syrk(a, route="local")
+    assert not rep.detected and rep.attempts == 1
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(pack_tril(a @ a.T)),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("kind", ["bitflip", "nan"])
+def test_checked_syrk_detects_and_recomputes(syrk_inputs, kind):
+    a, _ = syrk_inputs
+    out0, _ = checked_syrk(a, route="local")
+    with faults.inject(faults.FaultSpec(
+            site="collective:syrk", kind=kind, device=0), seed=4) as inj:
+        out, rep = checked_syrk(a, route="local", backoff=0.0)
+    assert inj.events and rep.detected and rep.action == "retry"
+    assert rep.attempts == 2 and rep.primary == 0
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out0))
+
+
+def test_checked_syrk_persistent_corruption_raises(syrk_inputs):
+    a, _ = syrk_inputs
+    with faults.inject(faults.FaultSpec(
+            site="collective:syrk", kind="nan", device=0, times=0)):
+        with pytest.raises(AbftError) as ei:
+            checked_syrk(a, route="local", retries=1, backoff=0.0)
+    rep = ei.value.report
+    assert rep.detected and rep.attempts == 2 and rep.bad_rows
+
+
+def test_checked_syrk_rebuilds_from_reference(syrk_inputs):
+    """With a trusted reference the corrupted shard is patched in
+    place — no recompute attempt is spent."""
+    a, _ = syrk_inputs
+    out0, _ = checked_syrk(a, route="local")
+    with faults.inject(faults.FaultSpec(
+            site="collective:syrk", kind="bitflip", device=0), seed=4):
+        out, rep = checked_syrk(a, route="local", reference=out0, c=2)
+    assert rep.detected and rep.action == "rebuild" and rep.devices
+    assert rep.attempts == 1
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out0))
+
+
+def test_checked_syr2k_and_symm_local(syrk_inputs):
+    a, b = syrk_inputs
+    o0, rep = checked_syr2k(a, b, route="local")
+    assert not rep.detected
+    with faults.inject(faults.FaultSpec(
+            site="collective:syr2k", kind="bitflip", device=0), seed=6):
+        o1, rep = checked_syr2k(a, b, route="local", backoff=0.0)
+    assert rep.detected and rep.action == "retry"
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o0))
+
+    n = a.shape[0]
+    sp = pack_tril(jnp.tril(jnp.asarray(
+        np.random.default_rng(8).standard_normal((n, n)),
+        dtype=jnp.float32)))
+    c0, rep = checked_symm(sp, b, route="local")
+    assert not rep.detected
+    with faults.inject(faults.FaultSpec(
+            site="collective:symm", kind="nan", device=0), seed=6):
+        c1, rep = checked_symm(sp, b, route="local", backoff=0.0)
+    assert rep.detected and rep.action == "retry"
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c0))
+
+
+# -------------------------------------------------------------------------
+# checkpoint chaos
+# -------------------------------------------------------------------------
+@pytest.fixture()
+def tree():
+    rng = np.random.default_rng(3)
+    return {"w": jnp.asarray(rng.standard_normal((6, 6)), jnp.float32),
+            "step_count": jnp.asarray(4, jnp.int32)}
+
+
+def test_checkpoint_transient_io_faults_absorbed(tmp_path, tree):
+    """fsync/rename hiccups inside the retry budget never surface —
+    the save commits and the restored tree crc-verifies."""
+    with faults.inject(
+            faults.FaultSpec(site="ckpt:fsync", kind="error", times=2),
+            faults.FaultSpec(site="ckpt:rename", kind="error",
+                             times=1)) as inj:
+        save_checkpoint(str(tmp_path), 3, tree, blocking=True)
+    assert len(inj.events) == 3
+    step, back = restore_checkpoint(str(tmp_path),
+                                    jax.eval_shape(lambda: tree))
+    assert step == 3
+    vr = verify_restored(str(tmp_path), back, step=step)
+    assert vr["checked"] >= 2 and not vr["mismatches"]
+
+
+def test_checkpoint_crash_window_old_recovery(tmp_path, tree):
+    """Re-saving the same step moves final -> .old before the tmp
+    rename; a persistent failure in that window loses the final dir
+    but the read path recovers the complete .old copy."""
+    save_checkpoint(str(tmp_path), 2, tree, blocking=True)
+    tree2 = {"w": tree["w"] + 1.0, "step_count": tree["step_count"]}
+    with pytest.raises(faults.FaultError):
+        with faults.inject(faults.FaultSpec(
+                site="ckpt:rename", kind="error", skip=1, times=0)):
+            save_checkpoint(str(tmp_path), 2, tree2, blocking=True)
+    assert not (tmp_path / "step_00000002").is_dir()
+    step, back = restore_checkpoint(str(tmp_path),
+                                    jax.eval_shape(lambda: tree))
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(back["w"]),
+                                  np.asarray(tree["w"]))
+    assert not verify_restored(str(tmp_path), back,
+                               step=step)["mismatches"]
+
+
+def test_verify_restored_reports_divergence(tmp_path, tree):
+    save_checkpoint(str(tmp_path), 1, tree, blocking=True)
+    tampered = {"w": tree["w"] + 1.0, "step_count": tree["step_count"]}
+    vr = verify_restored(str(tmp_path), tampered, step=1)
+    assert vr["mismatches"] == ["w"]

@@ -218,3 +218,146 @@ def test_serve_end_to_end_cache_report(smoke, tmp_path):
     # the saved cache warm-starts a fresh one
     warm = ServingGramCache(synchronous=True)
     assert warm.warm_start(str(tmp_path / "ck")) == 2
+
+
+# -------------------------------------------------------------------------
+# graceful degradation under refresh chaos (PR 10)
+# -------------------------------------------------------------------------
+import time  # noqa: E402
+
+from repro.distributed import faults  # noqa: E402
+
+
+@pytest.fixture()
+def feats():
+    return jax.random.normal(jax.random.key(3), (16, 32))
+
+
+def test_refresh_failure_observed_and_retried(feats):
+    """A transient refresh fault heals inside with_retries (zero
+    counted failures); a persistent one is counted by the done-callback
+    and the last-good factor keeps serving — nothing raises into the
+    admit path."""
+    cache = ServingGramCache(refresh_stride=1, refresh_retries=2,
+                             refresh_backoff=0.01, breaker_threshold=3)
+    with faults.inject(faults.FaultSpec(site="serve:refresh",
+                                        kind="error", times=1)):
+        cache.update("t", "a", "l", feats)
+        cache.drain()
+    assert cache.factor("t", "a", "l") is not None
+    assert cache.snapshot_stats()["failed_refreshes"] == 0  # healed
+    w_good = np.asarray(cache.factor("t", "a", "l"))
+    with faults.inject(faults.FaultSpec(site="serve:refresh",
+                                        kind="error", times=0)):
+        cache.update("t", "a", "l", feats)
+        cache.drain()
+    st = cache.snapshot_stats()
+    assert st["failed_refreshes"] == 1 and st["pending"] == 0
+    np.testing.assert_array_equal(
+        np.asarray(cache.factor("t", "a", "l")), w_good)
+
+
+def test_breaker_holds_last_good_then_half_open_recovers(feats):
+    """K consecutive refresh failures open the breaker: the key is
+    marked stale, further refreshes are skipped, the last-good factor
+    is served bitwise; after the cooldown one half-open probe closes
+    it again on success."""
+    cache = ServingGramCache(refresh_stride=1, synchronous=True,
+                             refresh_retries=0, breaker_threshold=2,
+                             breaker_cooldown_s=0.2)
+    cache.update("t", "a", "l", feats)
+    w_good = np.asarray(cache.factor("t", "a", "l"))
+    with faults.inject(faults.FaultSpec(site="serve:refresh",
+                                        kind="error", times=0)):
+        for _ in range(3):                 # 2 failures open it; 3rd is
+            cache.update("t", "a", "l", feats)   # skipped by the breaker
+        st = cache.snapshot_stats()
+        assert st["failed_refreshes"] == 2
+        assert st["stale"] == ["t/a/l"]
+        np.testing.assert_array_equal(
+            np.asarray(cache.factor("t", "a", "l")), w_good)
+    time.sleep(0.25)
+    cache.update("t", "a", "l", feats)     # half-open probe succeeds
+    assert cache.snapshot_stats()["stale"] == []
+
+
+def test_ns_nan_guard_falls_back_to_eigh_oracle(feats):
+    """A Gram snapshot that sends Newton–Schulz to NaN/Inf degrades to
+    the exact eigh oracle: the served factor is finite and equals the
+    oracle's answer for the same packed words."""
+    cache = ServingGramCache(refresh_stride=1, synchronous=True)
+    cache.update("t", "a", "l", feats)
+    mon = cache.monitor("t", "a")
+    bad = np.array(mon._state["l"], dtype=np.float32)
+    bad[0] = -1e30                         # wildly indefinite
+    mon._state["l"] = jnp.asarray(bad).astype(mon._state["l"].dtype)
+    assert cache._schedule_refresh(("t", "a", "l"))
+    w = cache.factor("t", "a", "l")
+    assert w is not None and bool(jnp.all(jnp.isfinite(w)))
+    assert cache.stats["ns_fallbacks"] >= 1
+    oracle = cache._oracle_fn(16)(mon._state["l"])
+    np.testing.assert_array_equal(np.asarray(w), np.asarray(oracle))
+
+
+def test_illconditioned_bf16_gram_stays_finite():
+    """cond >= 1e8 features, bf16-quantized EMA storage: whatever path
+    the refresh takes (NS or the guard's eigh fallback), the served
+    factor is finite."""
+    d = 16
+    u = np.linalg.qr(np.random.default_rng(5)
+                     .standard_normal((d, d)))[0].astype(np.float32)
+    scales = np.logspace(0, -8, d).astype(np.float32)   # cond 1e16 Gram
+    x = (u * scales) @ np.random.default_rng(6) \
+        .standard_normal((d, 64)).astype(np.float32)
+    cache = ServingGramCache(refresh_stride=1, synchronous=True)
+    cache.update("t", "a", "l", jnp.asarray(x))
+    w = cache.factor("t", "a", "l")
+    assert w is not None and bool(jnp.all(jnp.isfinite(w)))
+
+
+def test_decode_unchanged_under_refresh_chaos(smoke):
+    """Factors are per-request side outputs, never decode inputs — so
+    even persistent refresh failures leave generated tokens
+    bit-identical to the fault-free run."""
+    base = _generate(smoke, "cache", ServingGramCache(
+        refresh_stride=1, refresh_retries=0, breaker_threshold=2))
+    with faults.inject(faults.FaultSpec(site="serve:refresh",
+                                        kind="error", times=0)):
+        chaotic = _generate(smoke, "cache", ServingGramCache(
+            refresh_stride=1, refresh_retries=0, breaker_threshold=2))
+    assert chaotic == base
+
+
+# -------------------------------------------------------------------------
+# TTL eviction of dormant tenants (PR 10)
+# -------------------------------------------------------------------------
+def test_ttl_eviction_and_bitexact_warm_readmit(tmp_path, feats):
+    """A dormant tenant is swept after max_idle_s; it re-admits cleanly
+    (cold again, fresh EMA) and a warm start from its checkpoint
+    restores the packed EMA bit-exactly."""
+    cache = ServingGramCache(refresh_stride=1, synchronous=True,
+                             max_idle_s=0.05)
+    cache.update("tA", "a", "l", feats)
+    ref = np.array(cache.monitor("tA", "a")._state["l"])
+    cache.save(str(tmp_path), step=0)
+    time.sleep(0.1)
+    cache.update("tB", "a", "l", feats)    # the sweep runs here
+    assert cache.stats["evicted"] == 1
+    assert ("tA", "a") not in cache._monitors
+    assert cache.factor("tA", "a", "l") is None        # cold again
+    cache.update("tA", "a", "l", feats)                # clean re-admit
+    assert cache.factor("tA", "a", "l") is not None
+
+    warm = ServingGramCache(refresh_stride=1, synchronous=True)
+    assert warm.warm_start(str(tmp_path), refresh=False) == 1
+    got = np.array(warm.monitor("tA", "a")._state["l"])
+    assert got.tobytes() == ref.tobytes()
+
+
+def test_explicit_evict(feats):
+    cache = ServingGramCache(refresh_stride=1, synchronous=True)
+    cache.update("t", "a", "l0", feats)
+    cache.update("t", "a", "l1", feats)
+    assert cache.evict("t", "a") == 2
+    assert ("t", "a") not in cache._monitors
+    assert cache.stats["evicted"] == 2
